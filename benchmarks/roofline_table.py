@@ -1,0 +1,64 @@
+"""§Roofline: render the roofline table from the dry-run reports
+(reports/dryrun/*.json). Run the dry-run sweep first:
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all --mesh both
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+REPORT_DIR = os.path.join(os.path.dirname(__file__), "..", "reports", "dryrun")
+
+
+def load_reports(report_dir: str = REPORT_DIR):
+    rows = []
+    for p in sorted(glob.glob(os.path.join(report_dir, "*.json"))):
+        with open(p) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def render(rows, mesh="16x16", variant="baseline"):
+    print(f"# §Roofline — per (arch x shape), mesh {mesh}, {variant} "
+          f"(terms are per-chip seconds from the partitioned HLO)")
+    hdr = (f"{'arch':18s} {'shape':12s} {'compute':>9s} {'memory':>9s} "
+           f"{'coll':>9s} {'dominant':>10s} {'MFU':>6s} {'useful':>7s}")
+    print(hdr)
+    out = []
+    for r in rows:
+        if r.get("mesh") != mesh or r.get("variant", "baseline") != variant:
+            continue
+        tag = f"{r['arch']:18s} {r['shape']:12s}"
+        if r["status"] == "skip":
+            print(f"{tag} {'skip: ' + r['reason'][:50]}")
+            continue
+        if r["status"] != "ok":
+            print(f"{tag} ERROR {r.get('error', '')[:60]}")
+            continue
+        t = r["roofline"]
+        print(f"{tag} {t['compute_s']*1e3:8.1f}ms {t['memory_s']*1e3:8.1f}ms "
+              f"{t['collective_s']*1e3:8.1f}ms {t['dominant']:>10s} "
+              f"{t['mfu']:6.3f} {t['useful_fraction']:7.2f}")
+        out.append(
+            f"roofline_{r['arch']}_{r['shape']}_{mesh},"
+            f"{t['step_time_s']*1e6:.0f},"
+            f"dom={t['dominant']}_mfu={t['mfu']:.3f}"
+        )
+    return out
+
+
+def run() -> list[str]:
+    rows = load_reports()
+    if not rows:
+        print("no dry-run reports found — run repro.launch.dryrun first")
+        return ["roofline,0,no_reports"]
+    out = render(rows, "16x16")
+    print()
+    out += render(rows, "2x16x16")
+    return out
+
+
+if __name__ == "__main__":
+    run()

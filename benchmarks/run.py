@@ -1,0 +1,52 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark driver: runs every paper-table reproduction + the kernel
+micro-bench + the roofline table, then prints the consolidated CSV.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run table3     # one table
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+from benchmarks import (
+    table1_memory,
+    table2_70b_step,
+    table3_rank_sweep,
+    table4_gradient_integrity,
+    bench_kernels,
+    roofline_table,
+)
+
+SUITES = {
+    "table1": table1_memory.run,
+    "table2": table2_70b_step.run,
+    "table3": table3_rank_sweep.run,
+    "table4": table4_gradient_integrity.run,
+    "kernels": bench_kernels.run,
+    "roofline": roofline_table.run,
+}
+
+
+def main() -> None:
+    selected = sys.argv[1:] or list(SUITES)
+    rows: list[str] = []
+    failed = []
+    for name in selected:
+        print(f"\n===== {name} =====", flush=True)
+        try:
+            rows.extend(SUITES[name]() or [])
+        except Exception:  # noqa: BLE001
+            failed.append(name)
+            traceback.print_exc()
+    print("\n===== CSV (name,us_per_call,derived) =====")
+    for r in rows:
+        print(r)
+    if failed:
+        print(f"FAILED suites: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

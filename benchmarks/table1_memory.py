@@ -1,0 +1,62 @@
+"""Paper Table 1: per-MLP-layer training memory (weights + grads + Adam
+moments) at rank 32 — dense vs SCT, with the compression ratio.
+
+This is exact integer arithmetic over the parameterization (the paper's
+own methodology), verified against the published ratios, plus an
+*instantiated* check at the smallest scale: we actually allocate a
+SpectralLinear + its AdamW state and count bytes.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.spectral import spectral_param_count, dense_param_count, spectral_init
+from repro.optim import adamw_init
+
+ROWS = [
+    ("SmolLM2-135M", 576, 1536, 13),
+    ("SmolLM2-360M", 1024, 4096, 26),
+    ("SmolLM2-1.7B", 2048, 8192, 51),
+    ("LLaMA-7B", 4096, 11008, 93),
+    ("Qwen-27B", 4096, 17408, 104),
+    ("LLaMA-70B", 8192, 28672, 199),
+]
+
+
+def run() -> list[str]:
+    out = []
+    k = 32
+    print("# Paper Table 1 — per-MLP-layer training memory at rank 32")
+    print(f"{'model':14s} {'layer':14s} {'dense+adam':>12s} {'sct(k=32)':>12s} "
+          f"{'ratio':>7s} {'paper':>6s}")
+    for name, m, n, expected in ROWS:
+        dense_mb = 4 * dense_param_count(m, n) * 4 / 1e6        # fp32, x4 adam
+        sct_mb = 4 * spectral_param_count(m, n, k) * 4 / 1e6
+        ratio = dense_mb / sct_mb
+        status = "OK" if round(ratio) == expected else "MISMATCH"
+        print(f"{name:14s} {m}x{n:<8d} {dense_mb:10.1f}MB {sct_mb:10.2f}MB "
+              f"{ratio:6.0f}x {expected:5d}x  {status}")
+        out.append(f"table1_{name},0,{ratio:.1f}x_vs_paper_{expected}x_{status}")
+
+    # instantiated check (smallest row): real arrays + real Adam state
+    t0 = time.time()
+    p = spectral_init(jax.random.PRNGKey(0), 576, 1536, k)
+    opt = adamw_init(p)
+    actual = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(p))
+    actual += sum(x.size * x.dtype.itemsize
+                  for x in jax.tree.leaves((opt["mu"], opt["nu"])))
+    # grads would mirror params:
+    actual += sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(p))
+    us = (time.time() - t0) * 1e6
+    expect = 4 * spectral_param_count(576, 1536, k) * 4
+    print(f"instantiated SCT state @135M-layer: {actual/1e6:.2f}MB "
+          f"(analytic {expect/1e6:.2f}MB)")
+    out.append(f"table1_instantiated,{us:.0f},{actual}B")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,90 @@
+"""Paper Table 4 / S4.4: gradient-integrity test. A trained dense model
+is converted to spectral form at 95% energy retention and fine-tuned
+with the SAME data/seed/LR as a continued-dense baseline. The claims:
+
+  * conversion causes a loss spike (paper: 8.64 from ~0.2),
+  * SCT recovers to within ~1.4x of the dense PPL,
+  * trainable params shrink.
+
+Reduced scale: SmolLM2-135M family config, synthetic data, pre-train
+200 steps dense, then 150 fine-tune steps each arm.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import get_config
+from repro.core.convert import convert_mlp_tree_to_spectral
+from repro.data.synthetic import SyntheticLMDataset
+from repro.launch.steps import make_train_step
+from repro.models.model import init_model, param_count, train_loss
+from repro.optim import make_sct_optimizer
+
+
+def _steps(cfg, state, opt, ds, start, n, batch=8):
+    step_fn = jax.jit(make_train_step(cfg, opt))
+    losses = []
+    for i in range(start, start + n):
+        t, l = ds.batch(i, 8)
+        state, m = step_fn(state, {"tokens": jnp.asarray(t), "labels": jnp.asarray(l)})
+        losses.append(float(m["ce_loss"]))
+    return state, losses
+
+
+def run() -> list[str]:
+    print("# Paper Table 4 — fine-tuning gradient integrity (135M family)")
+    cfg_dense = get_config("smollm2-135m", reduced=True).replace_sct(spectral_mlp=False)
+    ds = SyntheticLMDataset(vocab=cfg_dense.vocab, seq_len=64, seed=0)
+
+    # pre-train a dense model
+    opt_pre = make_sct_optimizer(cfg_dense, lr=2e-3, warmup=10, total_steps=350)
+    state = opt_pre.init(init_model(jax.random.PRNGKey(0), cfg_dense))
+    state, pre_losses = _steps(cfg_dense, state, opt_pre, ds, 0, 200)
+    base_loss = float(np.mean(pre_losses[-10:]))
+    dense_params = param_count(state["params"])
+
+    # arm A: continue dense
+    stateA, lossesA = _steps(cfg_dense, state, opt_pre, ds, 200, 150)
+    dense_final = float(np.mean(lossesA[-10:]))
+
+    # arm B: convert MLPs to spectral @95% energy, fine-tune with SCT
+    spectral_params, ranks = convert_mlp_tree_to_spectral(state["params"], 0.95)
+    cfg_sct = get_config("smollm2-135m", reduced=True)
+    # measure the conversion spike before any training
+    t, l = ds.batch(200, 8)
+    spike = float(train_loss(spectral_params, {"tokens": jnp.asarray(t),
+                                               "labels": jnp.asarray(l)}, cfg_sct)[0])
+    opt_sct = make_sct_optimizer(cfg_sct, lr=2e-3, warmup=10, total_steps=150)
+    stateB = opt_sct.init(spectral_params)
+    stateB["step"] = jnp.int32(0)
+    stateB, lossesB = _steps(cfg_sct, stateB, opt_sct, ds, 200, 150)
+    sct_final = float(np.mean(lossesB[-10:]))
+    sct_params = param_count(stateB["params"])
+
+    ratio = np.exp(min(sct_final, 20)) / np.exp(min(dense_final, 20))
+    print(f"pre-trained dense loss: {base_loss:.3f} ({dense_params/1e3:.0f}K params)")
+    print(f"conversion @95% energy: ranks={ranks}, spike loss={spike:.3f}")
+    print(f"dense-continued final: {dense_final:.3f} | SCT final: {sct_final:.3f} "
+          f"({sct_params/1e3:.0f}K params)")
+    # NOTE: at this reduced scale the 95% threshold picks near-full rank
+    # (54/64) so params do NOT shrink — this reproduces the paper's own
+    # S5 "small model limitation" ("models below ~1.7B produce ranks
+    # close to the full dimension at practical energy thresholds").
+    small_model_limit = max(ranks) > 0.8 * 64
+    print(f"PPL ratio SCT/dense: {ratio:.2f}x (paper: 1.38x) | spike recovered: "
+          f"{'OK' if sct_final < spike - 0.2 else 'FAIL'} | paper-S5 small-model "
+          f"limitation reproduced (rank {max(ranks)}/64 at 95% energy): "
+          f"{'OK' if small_model_limit else 'no'}")
+    return [
+        f"table4_spike,0,{spike:.3f}",
+        f"table4_dense_final,0,{dense_final:.3f}",
+        f"table4_sct_final,0,{sct_final:.3f}",
+        f"table4_ppl_ratio,0,{ratio:.2f}x",
+        f"table4_params,0,{sct_params}v{dense_params}_S5limit",
+    ]
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,56 @@
+"""Paper §4.4 workflow: take a trained dense model, convert its MLP
+weights to spectral form at 95% energy retention (truncated SVD), and
+fine-tune with Stiefel retraction — the 'gradient integrity' path.
+
+  PYTHONPATH=src python examples/convert_pretrained.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import get_config
+from repro.core.convert import dense_to_spectral, rank_for_energy
+from repro.core.tree import max_orthogonality_error
+from repro.data.synthetic import SyntheticLMDataset
+from repro.launch.steps import make_train_step
+from repro.models.model import init_model, param_count
+from repro.optim import make_sct_optimizer
+from repro.core.convert import convert_mlp_tree_to_spectral
+
+
+def main():
+    cfg_dense = get_config("smollm2-135m", reduced=True).replace_sct(spectral_mlp=False)
+    ds = SyntheticLMDataset(vocab=cfg_dense.vocab, seq_len=64, seed=0)
+
+    print("=== step 1: pre-train a DENSE model (100 steps) ===")
+    opt = make_sct_optimizer(cfg_dense, lr=2e-3, warmup=10, total_steps=250)
+    state = opt.init(init_model(jax.random.PRNGKey(0), cfg_dense))
+    step = jax.jit(make_train_step(cfg_dense, opt))
+    for i in range(100):
+        t, l = ds.batch(i, 8)
+        state, m = step(state, {"tokens": jnp.asarray(t), "labels": jnp.asarray(l)})
+    print(f"dense loss after pre-train: {float(m['loss']):.3f} "
+          f"({param_count(state['params'])/1e3:.0f}K params)")
+
+    print("\n=== step 2: convert MLPs to spectral @ 95% energy ===")
+    spectral_params, ranks = convert_mlp_tree_to_spectral(state["params"], 0.95)
+    print(f"selected ranks per MLP stack: {ranks}")
+    print(f"params after conversion: {param_count(spectral_params)/1e3:.0f}K")
+
+    print("\n=== step 3: fine-tune IN SPECTRAL FORM with QR retraction ===")
+    cfg_sct = get_config("smollm2-135m", reduced=True)
+    opt2 = make_sct_optimizer(cfg_sct, lr=2e-3, warmup=10, total_steps=100)
+    state2 = opt2.init(spectral_params)
+    step2 = jax.jit(make_train_step(cfg_sct, opt2))
+    for i in range(100, 200):
+        t, l = ds.batch(i, 8)
+        state2, m2 = step2(state2, {"tokens": jnp.asarray(t), "labels": jnp.asarray(l)})
+        if i % 25 == 0:
+            print(f"step {i}: loss {float(m2['loss']):.3f}  ortho "
+                  f"{float(max_orthogonality_error(state2['params'])):.2e}")
+    print(f"\nfinal SCT loss {float(m2['loss']):.3f} — gradients flow through the "
+          f"factored form; the dense matrices no longer exist anywhere.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Batched serving example: prefill a batch of prompts, decode with the
+static-shape KV cache, report per-token latency. Exercises the same
+prefill/decode_step the decode_32k dry-run cells prove at 512 devices.
+
+  PYTHONPATH=src python examples/serve_batched.py [arch]
+"""
+import sys
+import subprocess
+import os
+
+
+def main():
+    arch = sys.argv[1] if len(sys.argv) > 1 else "llama3.2-1b"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    cmd = [sys.executable, "-m", "repro.launch.serve",
+           "--arch", arch, "--reduced",
+           "--batch", "4", "--prompt-len", "16", "--gen", "24"]
+    out = subprocess.run(cmd, env=env, capture_output=True, text=True)
+    print(out.stdout)
+    if out.returncode != 0:
+        print(out.stderr[-2000:])
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from repro.checkpoint.store import save_pytree, load_pytree, tree_equal
+from repro.checkpoint.manager import CheckpointManager
+
+__all__ = ["save_pytree", "load_pytree", "tree_equal", "CheckpointManager"]

@@ -1,0 +1,80 @@
+"""Checkpoint lifecycle: rotation, latest-discovery, async save.
+
+The fault-tolerant loop (runtime/train_loop.py) calls ``save(step,
+state)`` every N steps; on restart ``restore_latest`` resumes from the
+newest complete checkpoint. Writes happen on a background thread
+(overlap with the next training steps); rotation keeps ``keep`` newest.
+A checkpoint is only visible after its atomic rename, so a crash
+mid-write can never corrupt the restore path.
+"""
+from __future__ import annotations
+
+import os
+import re
+import threading
+from typing import Any, Optional, Tuple
+
+from repro.checkpoint.store import save_pytree, load_pytree
+
+_CKPT_RE = re.compile(r"^step_(\d+)\.npz$")
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
+        self.directory = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------------
+    def _path(self, step: int) -> str:
+        return os.path.join(self.directory, f"step_{step:08d}.npz")
+
+    def list_steps(self):
+        steps = []
+        for name in os.listdir(self.directory):
+            m = _CKPT_RE.match(name)
+            if m:
+                steps.append(int(m.group(1)))
+        return sorted(steps)
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, state: Any, block: bool = False) -> None:
+        self.wait()  # one in-flight save at a time
+
+        def _do():
+            save_pytree(state, self._path(step))
+            self._rotate()
+
+        if self.async_save and not block:
+            self._thread = threading.Thread(target=_do, daemon=True)
+            self._thread.start()
+        else:
+            _do()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _rotate(self) -> None:
+        steps = self.list_steps()
+        for s in steps[: -self.keep] if self.keep else []:
+            try:
+                os.remove(self._path(s))
+            except FileNotFoundError:
+                pass
+
+    # ------------------------------------------------------------------
+    def restore_latest(self, shardings: Any = None) -> Tuple[Optional[int], Any]:
+        """(step, state) of the newest checkpoint, or (None, None)."""
+        self.wait()
+        steps = self.list_steps()
+        if not steps:
+            return None, None
+        step = steps[-1]
+        return step, load_pytree(self._path(step), shardings)
+
+    def restore(self, step: int, shardings: Any = None) -> Any:
+        return load_pytree(self._path(step), shardings)

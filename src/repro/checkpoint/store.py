@@ -1,0 +1,90 @@
+"""Mesh-agnostic pytree (de)serialization.
+
+Checkpoints are stored as host numpy arrays (npz) plus a json treedef —
+so a checkpoint written on a (16,16) mesh restores onto (2,16,16), a
+different DP width, or one CPU (elastic scaling / disaster recovery).
+Atomic: write to <path>.tmp, fsync, rename.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten_with_paths(tree: Any, prefix=""):
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            yield from _flatten_with_paths(tree[k], f"{prefix}{_SEP}{k}" if prefix else str(k))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            yield from _flatten_with_paths(v, f"{prefix}{_SEP}[{i}]")
+    else:
+        yield prefix, tree
+
+
+def _structure(tree: Any):
+    if isinstance(tree, dict):
+        return {k: _structure(v) for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        return {"__seq__": type(tree).__name__, "items": [_structure(v) for v in tree]}
+    return None  # leaf marker
+
+
+def _rebuild(struct, leaves: dict, prefix=""):
+    if isinstance(struct, dict) and "__seq__" in struct:
+        items = [
+            _rebuild(s, leaves, f"{prefix}{_SEP}[{i}]")
+            for i, s in enumerate(struct["items"])
+        ]
+        return tuple(items) if struct["__seq__"] == "tuple" else items
+    if isinstance(struct, dict):
+        return {
+            k: _rebuild(v, leaves, f"{prefix}{_SEP}{k}" if prefix else str(k))
+            for k, v in struct.items()
+        }
+    return leaves[prefix]
+
+
+def save_pytree(tree: Any, path: str) -> None:
+    """Atomic save. Device arrays are fetched to host (fully addressable
+    arrays only — the multi-host path gathers per-shard in runtime/)."""
+    arrays = {}
+    for p, leaf in _flatten_with_paths(tree):
+        arrays[p] = np.asarray(jax.device_get(leaf))
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(tmp, "wb") as f:
+        np.savez(f, **{"__struct__": json.dumps(_structure(tree))}, **arrays)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
+def load_pytree(path: str, shardings: Any = None) -> Any:
+    """Load a checkpoint; if ``shardings`` (a pytree of NamedSharding
+    matching the checkpoint structure) is given, leaves are placed
+    sharded — this is the elastic-reshard path: any mesh works."""
+    with np.load(path, allow_pickle=False) as z:
+        struct = json.loads(str(z["__struct__"]))
+        leaves = {k: z[k] for k in z.files if k != "__struct__"}
+    tree = _rebuild(struct, leaves)
+    if shardings is not None:
+        tree = jax.tree.map(
+            lambda x, s: jax.device_put(x, s) if s is not None else jax.device_put(x),
+            tree, shardings,
+            is_leaf=lambda x: isinstance(x, np.ndarray),
+        )
+    return tree
+
+
+def tree_equal(a: Any, b: Any) -> bool:
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    if len(la) != len(lb):
+        return False
+    return all(np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(la, lb))

@@ -1,0 +1,15 @@
+from repro.config.model_config import ModelConfig, SCTConfig
+from repro.config.shapes import SHAPES, ShapeSpec, input_specs, shape_applicable
+from repro.config.registry import get_config, list_archs, ARCH_IDS
+
+__all__ = [
+    "ModelConfig",
+    "SCTConfig",
+    "SHAPES",
+    "ShapeSpec",
+    "input_specs",
+    "shape_applicable",
+    "get_config",
+    "list_archs",
+    "ARCH_IDS",
+]

@@ -1,0 +1,80 @@
+"""Assigned input shapes and ShapeDtypeStruct factories for the dry-run.
+
+Four shapes per LM arch (assignment block):
+  train_4k     seq 4,096   global_batch 256   -> train_step
+  prefill_32k  seq 32,768  global_batch 32    -> serve prefill
+  decode_32k   seq 32,768  global_batch 128   -> serve_step (1 new token,
+                                                 KV cache of seq_len)
+  long_500k    seq 524,288 global_batch 1     -> serve_step; ONLY for
+                                                 sub-quadratic archs
+
+``input_specs`` returns weak-type-correct ShapeDtypeStructs — no device
+allocation, exactly what jit(...).lower(**specs) needs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.model_config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """Assignment rules: long_500k only for sub-quadratic archs."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "skip(full-attention): 500k decode needs sub-quadratic arch"
+    return True, ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        specs = {
+            "tokens": _sds((b, s), jnp.int32),
+            "labels": _sds((b, s), jnp.int32),
+        }
+        if cfg.family == "encdec":
+            specs["encoder_frames"] = _sds((b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": _sds((b, s), jnp.int32)}
+        if cfg.family == "encdec":
+            specs["encoder_frames"] = _sds((b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+        return specs
+    if shape.kind == "decode":
+        # one new token against a cache of s tokens
+        from repro.models.model import decode_state_specs
+
+        specs = {
+            "tokens": _sds((b, 1), jnp.int32),
+            "cache_len": _sds((), jnp.int32),
+            "state": decode_state_specs(cfg, batch=b, max_seq=s),
+        }
+        if cfg.family == "encdec":
+            specs["encoder_out"] = _sds((b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+        return specs
+    raise ValueError(shape.kind)

@@ -1,0 +1,50 @@
+"""Core SCT (Spectral Compact Training) library.
+
+The paper's contribution: permanent truncated-SVD parameterization
+``W = U @ diag(s) @ V.T`` with Stiefel QR retraction after each optimizer
+step. The dense matrix is never materialized.
+"""
+from repro.core.spectral import (
+    SpectralParams,
+    spectral_init,
+    spectral_apply,
+    spectral_param_count,
+    dense_param_count,
+)
+from repro.core.convert import (
+    dense_to_spectral,
+    spectral_to_dense,
+    rank_for_energy,
+)
+from repro.core.retraction import (
+    qr_retract,
+    cholesky_qr2_retract,
+    cayley_retract,
+    retract,
+    RETRACTIONS,
+)
+from repro.core.manifold import (
+    orthogonality_error,
+    project_tangent,
+)
+from repro.core.tree import retract_tree, spectral_leaf_mask
+
+__all__ = [
+    "SpectralParams",
+    "spectral_init",
+    "spectral_apply",
+    "spectral_param_count",
+    "dense_param_count",
+    "dense_to_spectral",
+    "spectral_to_dense",
+    "rank_for_energy",
+    "qr_retract",
+    "cholesky_qr2_retract",
+    "cayley_retract",
+    "retract",
+    "RETRACTIONS",
+    "orthogonality_error",
+    "project_tangent",
+    "retract_tree",
+    "spectral_leaf_mask",
+]

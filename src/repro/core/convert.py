@@ -1,0 +1,79 @@
+"""Dense <-> spectral conversion (truncated SVD) and energy-based rank
+selection (paper S4.4's '95% energy retention' mode)."""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.spectral import SpectralParams
+
+
+def dense_to_spectral(W: jax.Array, k: int, dtype: Any = None) -> SpectralParams:
+    """Truncated SVD of a dense (m, n) matrix -> rank-k spectral factors.
+
+    ``W ~= U @ diag(s) @ V.T`` with U (m, k), V (n, k). This is the
+    conversion the paper applies to pretrained checkpoints (S4.2, S4.4);
+    it is exact when k >= rank(W).
+    """
+    dtype = dtype or W.dtype
+    Wf = W.astype(jnp.float32)
+    u, s, vt = jnp.linalg.svd(Wf, full_matrices=False)
+    return {
+        "U": u[..., :, :k].astype(dtype),
+        "s": s[..., :k].astype(dtype),
+        "V": jnp.swapaxes(vt, -1, -2)[..., :, :k].astype(dtype),
+    }
+
+
+def spectral_to_dense(params: SpectralParams) -> jax.Array:
+    """Materialize the dense matrix. FOR TESTS/EXPORT ONLY — the training
+    and serving paths never call this (the paper's core invariant)."""
+    U, s, V = params["U"], params["s"], params["V"]
+    return jnp.einsum("...mk,...k,...nk->...mn", U, s, V)
+
+
+def rank_for_energy(s: jax.Array, energy: float = 0.95) -> int:
+    """Smallest k with sum_{i<=k} s_i^2 >= energy * sum s_i^2.
+
+    Used for the paper's SmolLM2-135M gradient-integrity experiment
+    ('converted to spectral form at 95% energy retention'). Host-side
+    (returns a Python int) — rank choice happens at model build time.
+    """
+    s2 = jnp.sort(jnp.asarray(s) ** 2)[::-1]
+    cum = jnp.cumsum(s2)
+    total = cum[-1]
+    k = int(jnp.searchsorted(cum, energy * total) + 1)
+    return min(k, s2.shape[0])
+
+
+def convert_mlp_tree_to_spectral(params, energy: float = 0.95):
+    """Walk a dense parameter tree and convert every MLP projection
+    (paths containing '/mlp/') to spectral form via truncated SVD at the
+    given energy retention — the paper's S4.4 conversion. Stacked-layer
+    weights (L, m, n) use the max rank over layers so the stack stays
+    scannable. Returns (new_params, chosen_ranks)."""
+    ranks = []
+
+    def conv(tree, path=""):
+        if isinstance(tree, dict):
+            if set(tree.keys()) == {"w"} and ("/mlp/" in path + "/"):
+                W = tree["w"]
+                s = jnp.linalg.svd(W, compute_uv=False)
+                if W.ndim == 3:  # stacked layers
+                    k = max(rank_for_energy(s[i], energy) for i in range(s.shape[0]))
+                else:
+                    k = rank_for_energy(s, energy)
+                ranks.append(k)
+                return dense_to_spectral(W, k)
+            return {kk: conv(vv, f"{path}/{kk}") for kk, vv in tree.items()}
+        return tree
+
+    return conv(params), ranks
+
+
+def truncation_error(W: jax.Array, params: SpectralParams) -> jax.Array:
+    """||W - U diag(s) V^T||_F — tests compare against the Eckart-Young
+    optimum."""
+    return jnp.linalg.norm(W.astype(jnp.float32) - spectral_to_dense(params).astype(jnp.float32))

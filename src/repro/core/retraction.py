@@ -1,0 +1,121 @@
+"""Stiefel-manifold retractions for spectral factors.
+
+Paper (Algorithm 1, lines 5-7): after each AdamW step,
+
+    Q, R = qr(U);  U <- Q * sign(diag(R))
+
+The sign correction makes the retraction continuous (QR is unique only up
+to column signs; fixing diag(R) > 0 picks the branch closest to the
+pre-update factor).
+
+Beyond-paper (DESIGN.md S2): CholeskyQR2 — the TPU/distributed-native
+retraction. For a row-sharded U only the k x k Gram matrix is
+all-reduced; compute is two matmuls + a tiny Cholesky instead of a
+sequential Householder QR. Applied twice for fp32-grade orthogonality.
+Cayley retraction is included as the paper's own cited alternative
+[Li et al., 2020].
+
+All retractions are vmappable over leading (layer / expert) axes.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+
+def _sign_fix(Q: jax.Array, R: jax.Array) -> jax.Array:
+    """Q * sign(diag(R)) with sign(0) := 1 for determinism."""
+    d = jnp.diagonal(R, axis1=-2, axis2=-1)
+    sign = jnp.where(d >= 0, 1.0, -1.0).astype(Q.dtype)
+    return Q * sign[..., None, :]
+
+
+def qr_retract(U: jax.Array) -> jax.Array:
+    """Paper-faithful QR retraction with sign correction (Eq. 5)."""
+    orig_dtype = U.dtype
+    Q, R = jnp.linalg.qr(U.astype(jnp.float32))
+    return _sign_fix(Q, R).astype(orig_dtype)
+
+
+def _cholesky_qr_once(U: jax.Array, axis_name: str | None) -> jax.Array:
+    """One CholeskyQR pass: G = U^T U (psum over row shards), R = chol(G)^T,
+    U <- U R^{-1}. Communication: k x k, independent of m."""
+    G = jnp.einsum("...mk,...ml->...kl", U, U)
+    if axis_name is not None:
+        G = jax.lax.psum(G, axis_name)
+    # G = R^T R with R upper-triangular  =>  chol(G) = R^T (lower)
+    k = G.shape[-1]
+    G = G + (1e-10 * jnp.trace(G, axis1=-2, axis2=-1)[..., None, None] / k
+             ) * jnp.eye(k, dtype=G.dtype)
+    L = jnp.linalg.cholesky(G)
+    # Solve U_new L^T = U  =>  U_new = U L^{-T}
+    Un = jax.lax.linalg.triangular_solve(
+        L, U, left_side=False, lower=True, transpose_a=True
+    )
+    return Un
+
+
+def cholesky_qr2_retract(U: jax.Array, axis_name: str | None = None) -> jax.Array:
+    """CholeskyQR2 retraction (beyond-paper, distribution-friendly).
+
+    Two passes of CholeskyQR give orthogonality error O(eps) even for
+    moderately ill-conditioned inputs (cond(U) <~ 1e4 in fp32). The
+    column space equals QR's; the sign convention matches the sign-fixed
+    QR (both produce the factor with positive-diagonal R).
+
+    If ``axis_name`` is given, U is interpreted as row-sharded along that
+    mapped axis (inside shard_map) and the Gram matrix is psum'd.
+    """
+    orig_dtype = U.dtype
+    Uf = U.astype(jnp.float32)
+    Uf = _cholesky_qr_once(Uf, axis_name)
+    Uf = _cholesky_qr_once(Uf, axis_name)
+    return Uf.astype(orig_dtype)
+
+
+def cayley_retract(U: jax.Array, tangent_scale: float = 1.0) -> jax.Array:
+    """Cayley-transform retraction [Li et al., 2020], the paper's cited
+    lower-cost alternative (S5). Projects the deviation of U from its own
+    manifold point onto the tangent space and transports along a Cayley
+    curve. For a point already near the manifold this acts as a
+    corrective retraction like QR, at 2 solves of a k x k system when
+    using the low-rank Woodbury form; here we use the full form for
+    clarity (U is tall-skinny so the cost is still O(m k^2)).
+    """
+    orig_dtype = U.dtype
+    Uf = U.astype(jnp.float32)
+    # Nearest-manifold reference point via one CholeskyQR pass.
+    Q = _cholesky_qr_once(Uf, None)
+    # Tangent direction Delta = U - Q at Q; skew part drives the Cayley map.
+    D = (Uf - Q) * tangent_scale
+    A = jnp.einsum("...mk,...ml->...kl", Q, D)
+    A = A - jnp.swapaxes(A, -1, -2)  # skew-symmetric k x k
+    k = A.shape[-1]
+    eye = jnp.eye(k, dtype=Uf.dtype)
+    # Cayley: Q_new = Q (I - A/2)^{-1} (I + A/2)
+    lhs = eye - 0.5 * A
+    rhs = eye + 0.5 * A
+    M = jnp.linalg.solve(lhs, rhs)
+    out = jnp.einsum("...mk,...kl->...ml", Q, M)
+    return out.astype(orig_dtype)
+
+
+RETRACTIONS: Dict[str, Callable[..., jax.Array]] = {
+    "qr": qr_retract,
+    "cholesky_qr2": cholesky_qr2_retract,
+    "cayley": cayley_retract,
+}
+
+
+def retract(U: jax.Array, method: str = "qr", axis_name: str | None = None) -> jax.Array:
+    """Dispatch a retraction by name. ``axis_name`` only affects
+    cholesky_qr2 (the only method that distributes without a gather)."""
+    if method == "cholesky_qr2":
+        return cholesky_qr2_retract(U, axis_name=axis_name)
+    fn = RETRACTIONS.get(method)
+    if fn is None:
+        raise ValueError(f"unknown retraction {method!r}; options {list(RETRACTIONS)}")
+    return fn(U)

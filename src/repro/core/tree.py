@@ -1,0 +1,78 @@
+"""Pytree-wide retraction: walk a model parameter tree, retract every
+spectral factor group, leave everything else untouched.
+
+Spectral groups are dicts {"U": (..., m, k), "s": (..., k), "V": (..., n, k)}
+— possibly with leading layer/expert axes (our models stack per-layer
+params for lax.scan). Retractions broadcast over those axes natively.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+
+from repro.core.spectral import is_spectral
+from repro.core.retraction import retract
+
+
+def _walk(tree: Any, fn) -> Any:
+    """Depth-first walk replacing spectral groups via fn(group)."""
+    if is_spectral(tree):
+        return fn(tree)
+    if isinstance(tree, dict):
+        return {k: _walk(v, fn) for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        return type(tree)(_walk(v, fn) for v in tree)
+    return tree
+
+
+def retract_tree(params: Any, method: str = "qr", axis_name: str | None = None) -> Any:
+    """Apply Stiefel retraction to U and V of every spectral group in the
+    tree (paper Algorithm 1, lines 5-7, over the whole model)."""
+
+    def _retract_group(g: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+        out = dict(g)
+        out["U"] = retract(g["U"], method=method, axis_name=axis_name)
+        out["V"] = retract(g["V"], method=method, axis_name=axis_name)
+        return out
+
+    return _walk(params, _retract_group)
+
+
+def spectral_leaf_mask(params: Any) -> Any:
+    """Pytree of {"U","s","V"} bools marking spectral leaves — used by the
+    optimizer for per-component learning-rate groups (paper S4.3's 'clear
+    next step')."""
+
+    def _mark(g):
+        return {k: (k in ("U", "s", "V")) for k in g}
+
+    def _walk_mask(tree):
+        if is_spectral(tree):
+            return _mark(tree)
+        if isinstance(tree, dict):
+            return {k: _walk_mask(v) for k, v in tree.items()}
+        if isinstance(tree, (list, tuple)):
+            return type(tree)(_walk_mask(v) for v in tree)
+        return False
+
+    return _walk_mask(params)
+
+
+def max_orthogonality_error(params: Any) -> jax.Array:
+    """Max ortho error over all spectral factors in the tree (diagnostic,
+    matches the paper's Table 2 'Ortho. Error' row)."""
+    import jax.numpy as jnp
+    from repro.core.manifold import orthogonality_error
+
+    errs = []
+
+    def _collect(g):
+        errs.append(orthogonality_error(g["U"]))
+        errs.append(orthogonality_error(g["V"]))
+        return g
+
+    _walk(params, _collect)
+    if not errs:
+        return jnp.float32(0.0)
+    return jnp.max(jnp.stack(errs))

@@ -1,0 +1,9 @@
+from repro.data.synthetic import SyntheticLMDataset, make_batch_iterator
+from repro.data.vision_stub import vision_stub_embeddings, audio_frame_stub
+
+__all__ = [
+    "SyntheticLMDataset",
+    "make_batch_iterator",
+    "vision_stub_embeddings",
+    "audio_frame_stub",
+]

@@ -1,0 +1,107 @@
+"""Pallas TPU kernel for the chunkwise-parallel mLSTM cell (xLSTM).
+
+One program per (batch*head); the grid's chunk axis is sequential and
+the inter-chunk state (C (dh, dh), n (dh,), m ()) lives in VMEM scratch
+across chunk iterations — the decay-masked intra-chunk matrices
+(logD, w, scores: (T, T)) never leave VMEM. This is the fused execution
+path for the `PALLAS_EQ_mlstm_chunk` region that the 512-device dry-run
+partitions in jnp form (nn/xlstm.py `_mlstm_chunk_body` — same math,
+asserted equal by tests).
+
+VMEM at T=256, dh=512 fp32: q/k/v 3x512K + (T,T) intra 256K + C 1MB
++ out 512K ~= 3.5 MB << 16 MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, i_ref, f_ref, o_ref, C_ref, n_ref, m_ref,
+            *, T: int):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        C_ref[...] = jnp.zeros_like(C_ref)
+        n_ref[...] = jnp.zeros_like(n_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+
+    q = q_ref[0].astype(jnp.float32)                    # (T, dh)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    i_c = i_ref[0].astype(jnp.float32)                  # (T,)
+    logf = jax.nn.log_sigmoid(f_ref[0].astype(jnp.float32))
+
+    C0 = C_ref[...]
+    n0 = n_ref[...]                                     # (1, dh)
+    m0 = m_ref[0, 0]
+
+    bcum = jnp.cumsum(logf)                             # (T,)
+    btot = bcum[T - 1]
+    logD = bcum[:, None] - bcum[None, :] + i_c[None, :]
+    tpos = jax.lax.broadcasted_iota(jnp.int32, (T, T), 0)
+    jpos = jax.lax.broadcasted_iota(jnp.int32, (T, T), 1)
+    logD = jnp.where(tpos >= jpos, logD, NEG_INF)
+    inter = bcum + m0                                   # (T,)
+    m_loc = jnp.maximum(inter, jnp.max(logD, axis=1))
+    w = jnp.exp(logD - m_loc[:, None])                  # (T, T)
+    inter_sc = jnp.exp(inter - m_loc)                   # (T,)
+
+    scores = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    ws = w * scores
+    num = jax.lax.dot_general(ws, v, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    num = num + inter_sc[:, None] * jax.lax.dot_general(
+        q, C0, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    den = jnp.sum(ws, axis=1) + inter_sc * jnp.sum(q * n0, axis=1)
+    den = jnp.maximum(jnp.abs(den), jnp.exp(-m_loc))
+    o_ref[0] = (num / den[:, None]).astype(o_ref.dtype)
+
+    # inter-chunk state update
+    a = btot - bcum + i_c                               # (T,)
+    m_new = jnp.maximum(btot + m0, jnp.max(a))
+    decay0 = jnp.exp(btot + m0 - m_new)
+    wa = jnp.exp(a - m_new)                             # (T,)
+    C_ref[...] = decay0 * C0 + jax.lax.dot_general(
+        wa[:, None] * k, v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    n_ref[...] = decay0 * n0 + jnp.sum(wa[:, None] * k, axis=0)[None, :]
+    m_ref[...] = jnp.full_like(m_ref, m_new)
+
+
+def mlstm_chunk_pallas(q, k, v, i_pre, f_pre, *, chunk: int = 256,
+                       interpret: bool = False):
+    """q/k/v: (B, S, dh) with B = batch*heads folded (k pre-scaled by
+    1/sqrt(dh)); i_pre/f_pre: (B, S) gate pre-activations.
+    Returns (B, S, dh). Requires S % chunk == 0."""
+    B, S, dh = q.shape
+    T = min(chunk, S)
+    assert S % T == 0, (S, T)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, T=T),
+        grid=(B, S // T),
+        in_specs=[
+            pl.BlockSpec((1, T, dh), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, T, dh), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, T, dh), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, T), lambda b, c: (b, c)),
+            pl.BlockSpec((1, T), lambda b, c: (b, c)),
+        ],
+        out_specs=pl.BlockSpec((1, T, dh), lambda b, c: (b, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, S, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((dh, dh), jnp.float32),  # C
+            pltpu.VMEM((1, dh), jnp.float32),   # n
+            pltpu.VMEM((1, 1), jnp.float32),    # m
+        ],
+        interpret=interpret,
+    )(q, k, v, i_pre, f_pre)

@@ -1,0 +1,87 @@
+"""jit'd public wrapper for the fused spectral matmul: shape handling
+(leading batch dims, padding to tile multiples), custom_vjp, and the
+interpret-mode switch for CPU validation.
+
+Backward design note: the forward fuses three ops to keep ``h`` in VMEM.
+The backward's five GEMMs (dV, dh, ds, dU, dx) have no equivalent fusion
+win — each is a single standard GEMM that XLA already schedules at MXU
+peak, so they are expressed in jnp (recomputing h, remat-style) rather
+than as more Pallas. This keeps the custom kernel surface exactly at the
+paper's hot-spot.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.spectral_matmul import spectral_matmul_pallas
+from repro.kernels.ref import spectral_matmul_ref
+
+_INTERPRET = True  # CPU container: interpret mode. Flip to False on TPU.
+
+
+def _pad_to(x, mult, axis):
+    size = x.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return x, size
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad), size
+
+
+def _fwd_2d(x2, U, s, V):
+    """x2: (M, m). Pads every dim to tile multiples, calls the kernel,
+    slices back."""
+    M, m = x2.shape
+    n = V.shape[0]
+    # modest tiles so small test shapes stay multi-block
+    bm = 256 if M >= 256 else max(8, 1 << (M - 1).bit_length())
+    cm = 512 if m >= 512 else m
+    cn = 512 if n >= 512 else n
+    x2, M0 = _pad_to(x2, bm, 0)
+    xp, _ = _pad_to(x2, cm, 1)
+    Up, _ = _pad_to(U, cm, 0)
+    Vp, _ = _pad_to(V, cn, 0)
+    y = spectral_matmul_pallas(xp, Up, s, Vp, bm=bm, cm=cm, cn=cn, interpret=_INTERPRET)
+    return y[:M0, :n]
+
+
+@jax.custom_vjp
+def spectral_matmul(x, U, s, V):
+    """y = ((x @ U) * s) @ V.T with the h-in-VMEM fused kernel.
+    x: (..., m); U: (m, k); s: (k,); V: (n, k) -> (..., n)."""
+    lead = x.shape[:-1]
+    m = x.shape[-1]
+    x2 = x.reshape(-1, m)
+    y = _fwd_2d(x2, U, s, V)
+    return y.reshape(*lead, V.shape[0])
+
+
+def _vjp_fwd(x, U, s, V):
+    return spectral_matmul(x, U, s, V), (x, U, s, V)
+
+
+def _vjp_bwd(res, dy):
+    x, U, s, V = res
+    lead = x.shape[:-1]
+    m = x.shape[-1]
+    n = V.shape[0]
+    x2 = x.reshape(-1, m)
+    dy2 = dy.reshape(-1, n)
+    # recompute h (remat) — never stored in HBM by the forward
+    h = jnp.dot(x2, U.astype(x2.dtype), preferred_element_type=jnp.float32)
+    hs = h * s.astype(jnp.float32)
+    dV = jnp.einsum("Mn,Mk->nk", dy2.astype(jnp.float32), hs).astype(V.dtype)
+    dhs = jnp.dot(dy2, V.astype(dy2.dtype), preferred_element_type=jnp.float32)
+    ds = jnp.einsum("Mk,Mk->k", dhs, h).astype(s.dtype)
+    dh = dhs * s.astype(jnp.float32)
+    dU = jnp.einsum("Mm,Mk->mk", x2.astype(jnp.float32), dh).astype(U.dtype)
+    dx = jnp.dot(dh.astype(x2.dtype), U.T.astype(x2.dtype),
+                 preferred_element_type=jnp.float32).astype(x.dtype)
+    return dx.reshape(*lead, m), dU, ds, dV
+
+
+spectral_matmul.defvjp(_vjp_fwd, _vjp_bwd)

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the fused spectral matmul kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def spectral_matmul_ref(x: jax.Array, U: jax.Array, s: jax.Array, V: jax.Array) -> jax.Array:
+    """y = ((x @ U) * s) @ V.T — paper Eq. 2-4. x: (M, m), U: (m, k),
+    s: (k,), V: (n, k) -> y: (M, n). Accumulation in fp32."""
+    h = jnp.dot(x, U.astype(x.dtype), preferred_element_type=jnp.float32)
+    h = h * s.astype(jnp.float32)
+    y = jnp.dot(h.astype(x.dtype), V.T.astype(x.dtype), preferred_element_type=jnp.float32)
+    return y.astype(x.dtype)

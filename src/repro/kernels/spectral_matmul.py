@@ -1,0 +1,97 @@
+"""Fused spectral matmul Pallas TPU kernel: y = ((x @ U) * s) @ V.T.
+
+The rank-k bottleneck activation ``h = x @ U`` lives ONLY in VMEM
+scratch — it is never written to HBM (the kernel-level expression of the
+paper's never-materialize rule; the naive 3-op chain writes h to HBM and
+reads it back).
+
+Tiling (DESIGN.md S6): grid = (M/bm, Tm + Tn) with Tm = m/cm, Tn = n/cn.
+For a fixed row-block i, phases t = 0..Tm-1 stream x/U m-chunks and
+accumulate h (bm, k) into fp32 scratch; phases t = Tm..Tm+Tn-1 stream V
+n-chunks and write y tiles from (h * s). MXU contraction dims are
+multiples of 128 for aligned shapes (cm = cn = 512; k is the small dim
+by construction — Mosaic pads lanes for k < 128, acceptable because
+rank is what the paper compresses).
+
+VMEM at bm=256, cm=cn=512, k=256, bf16 in / fp32 acc:
+x 256K + U 256K + V 256K + y 256K + h-scratch 256K ~= 1.3 MB << 16 MB,
+leaving room for double-buffered prefetch of the streamed operands.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BM = 256
+DEFAULT_CM = 512
+DEFAULT_CN = 512
+
+
+def _kernel(x_ref, u_ref, s_ref, v_ref, y_ref, h_ref, *, tm: int, tn: int):
+    t = pl.program_id(1)
+
+    # ---- phase 1: accumulate h += x_chunk @ U_chunk ----
+    @pl.when(t == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    @pl.when(t < tm)
+    def _accum():
+        h_ref[...] += jnp.dot(
+            x_ref[...], u_ref[...], preferred_element_type=jnp.float32
+        )
+
+    # ---- phase 2: y_tile = (h * s) @ V_chunk^T ----
+    @pl.when(t >= tm)
+    def _emit():
+        hs = (h_ref[...] * s_ref[...].astype(jnp.float32)).astype(x_ref.dtype)
+        y_ref[...] = jnp.dot(
+            hs, v_ref[...].T, preferred_element_type=jnp.float32
+        ).astype(y_ref.dtype)
+
+
+def spectral_matmul_pallas(
+    x: jax.Array,
+    U: jax.Array,
+    s: jax.Array,
+    V: jax.Array,
+    *,
+    bm: int = DEFAULT_BM,
+    cm: int = DEFAULT_CM,
+    cn: int = DEFAULT_CN,
+    interpret: bool = False,
+) -> jax.Array:
+    """x: (M, m), U: (m, k), s: (k,), V: (n, k) -> (M, n).
+    Requires M % bm == 0, m % cm == 0, n % cn == 0 (ops.py pads)."""
+    M, m = x.shape
+    mk, k = U.shape
+    n, vk = V.shape
+    assert m == mk and k == vk and s.shape == (k,), (x.shape, U.shape, s.shape, V.shape)
+    bm = min(bm, M)
+    cm = min(cm, m)
+    cn = min(cn, n)
+    assert M % bm == 0 and m % cm == 0 and n % cn == 0, (M, m, n, bm, cm, cn)
+    tm, tn = m // cm, n // cn
+
+    return pl.pallas_call(
+        functools.partial(_kernel, tm=tm, tn=tn),
+        grid=(M // bm, tm + tn),
+        in_specs=[
+            # x m-chunks stream during phase 1; index clamps in phase 2
+            pl.BlockSpec((bm, cm), lambda i, t: (i, jnp.minimum(t, tm - 1))),
+            pl.BlockSpec((cm, k), lambda i, t: (jnp.minimum(t, tm - 1), 0)),
+            pl.BlockSpec((1, k), lambda i, t: (0, 0)),
+            # V n-chunks stream during phase 2
+            pl.BlockSpec((cn, k), lambda i, t: (jnp.maximum(t - tm, 0), 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, cn), lambda i, t: (i, jnp.maximum(t - tm, 0))),
+        out_shape=jax.ShapeDtypeStruct((M, n), x.dtype),
+        # h accumulator: fp32 VMEM scratch, persists across the whole t
+        # sweep for a fixed row-block i (both phases).
+        scratch_shapes=[pltpu.VMEM((bm, k), jnp.float32)],
+        interpret=interpret,
+    )(x, U, s.reshape(1, k), V)

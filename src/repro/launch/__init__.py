@@ -1,0 +1,3 @@
+"""Launchers: mesh construction, train/serve entry points, and the
+multi-pod dry-run (lower + compile proof for every arch x shape x mesh).
+"""

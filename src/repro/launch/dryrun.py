@@ -1,0 +1,129 @@
+"""Multi-pod dry-run: prove the distribution config is coherent by
+lowering + compiling every (architecture x input-shape x mesh) cell with
+512 placeholder host devices, and extracting the roofline inputs
+(memory_analysis, cost_analysis, collective bytes from the HLO).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all --mesh both
+  ... --variant <name>   # perf-hillclimb variants (EXPERIMENTS.md §Perf)
+
+Results append to reports/dryrun/<arch>__<shape>__<mesh>[__<variant>].json.
+"""
+# The VERY FIRST lines, before ANY other import (jax locks device count
+# on first init):
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.config import ARCH_IDS, SHAPES, get_config, shape_applicable  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch import steps as steps_mod  # noqa: E402
+from repro.launch.variants import apply_variant, VARIANTS  # noqa: E402
+from repro.roofline.analysis import roofline_terms, model_flops  # noqa: E402
+
+ASSIGNED = ARCH_IDS[:10]  # the 10 assigned architectures
+
+REPORT_DIR = os.path.join(os.path.dirname(__file__), "../../../reports/dryrun")
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, variant: str | None = None,
+             report_dir: str = REPORT_DIR) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    tag = f"{arch}__{shape_name}__{mesh_name}" + (f"__{variant}" if variant else "")
+    result = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+              "variant": variant or "baseline"}
+    if not ok:
+        result["status"] = "skip"
+        result["reason"] = why
+        _write(report_dir, tag, result)
+        return result
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    if variant:
+        cfg = apply_variant(cfg, shape, variant)
+
+    t0 = time.time()
+    try:
+        lowered = steps_mod.lower_step(cfg, shape, mesh)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        terms = roofline_terms(cost, hlo, chips, model_flops(cfg, shape))
+
+        result.update(
+            status="ok",
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            memory={
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+            },
+            roofline=terms.as_dict(),
+        )
+    except Exception as e:  # noqa: BLE001 - report and continue the sweep
+        result.update(status="error", error=f"{type(e).__name__}: {e}",
+                      trace=traceback.format_exc()[-2000:])
+    _write(report_dir, tag, result)
+    return result
+
+
+def _write(report_dir: str, tag: str, result: dict) -> None:
+    os.makedirs(report_dir, exist_ok=True)
+    with open(os.path.join(report_dir, tag + ".json"), "w") as f:
+        json.dump(result, f, indent=1, default=str)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="16x16", choices=["16x16", "2x16x16", "both"])
+    ap.add_argument("--variant", default=None, choices=[None] + list(VARIANTS))
+    ap.add_argument("--report-dir", default=REPORT_DIR)
+    args = ap.parse_args()
+
+    archs = ASSIGNED if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.mesh == "both" else [args.mesh == "2x16x16"]
+
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                r = run_cell(arch, shape, mp, args.variant, args.report_dir)
+                status = r["status"]
+                extra = ""
+                if status == "ok":
+                    rt = r["roofline"]
+                    extra = (f" dominant={rt['dominant']}"
+                             f" step={rt['step_time_s']*1e3:.2f}ms"
+                             f" mfu={rt['mfu']:.3f}"
+                             f" compile={r['compile_s']}s")
+                elif status == "error":
+                    extra = " " + r["error"][:120]
+                print(f"[dryrun] {arch} {shape} {r['mesh']} -> {status}{extra}",
+                      flush=True)
+
+
+if __name__ == "__main__":
+    main()

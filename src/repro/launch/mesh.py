@@ -1,0 +1,24 @@
+"""Production mesh definitions.
+
+Functions, not module-level constants — importing this module never
+touches jax device state (required: smoke tests see 1 CPU device, only
+dryrun.py forces 512 host devices).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips/pod (v5e pod); 2 pods = 512 chips multi-pod.
+    Axis order puts 'model' innermost — ICI-contiguous for the TP
+    collectives, with 'pod' outermost crossing the (slower) inter-pod
+    links only for DP gradient all-reduces (DESIGN.md S5)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(n_data: int = 2, n_model: int = 2):
+    """Small mesh for CPU tests (requires XLA host-device override)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

@@ -1,0 +1,87 @@
+"""Serving launcher: batched prefill + decode loop with a static-shape
+cache (compile once, serve any request length up to max_seq).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \\
+      --reduced --batch 4 --prompt-len 16 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import get_config
+from repro.models.model import (
+    init_model,
+    init_decode_state,
+    prefill,
+    decode_step,
+)
+
+
+def sample_greedy(logits):
+    return jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    key = jax.random.PRNGKey(args.seed)
+    params = init_model(key, cfg)
+    max_seq = args.prompt_len + args.gen
+
+    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0, cfg.vocab)
+
+    extra_prefill, extra_decode = {}, {}
+    if cfg.family == "encdec":
+        from repro.data.vision_stub import audio_frame_stub
+        from repro.models.encdec import encode
+
+        frames = jnp.asarray(audio_frame_stub(args.batch, cfg.encoder_seq, cfg.d_model))
+        extra_prefill["encoder_frames"] = frames
+        extra_decode["encoder_out"] = encode(params, frames, cfg)
+
+    state = init_decode_state(cfg, args.batch, max_seq)
+
+    prefill_fn = jax.jit(lambda p, t, s, **e: prefill(p, t, cfg, s, **e))
+    decode_fn = jax.jit(
+        lambda p, t, s, n, **e: decode_step(p, t, s, n, cfg, **e),
+        donate_argnums=(2,),
+    )
+
+    t0 = time.time()
+    logits, state = prefill_fn(params, prompts, state, **extra_prefill)
+    tok = sample_greedy(logits)
+    jax.block_until_ready(tok)
+    t_prefill = time.time() - t0
+
+    out_tokens = [tok]
+    t0 = time.time()
+    for i in range(args.gen - 1):
+        cache_len = jnp.int32(args.prompt_len + i)
+        logits, state = decode_fn(params, tok, state, cache_len, **extra_decode)
+        tok = sample_greedy(logits)
+        out_tokens.append(tok)
+    jax.block_until_ready(tok)
+    t_decode = time.time() - t0
+
+    gen = np.asarray(jnp.concatenate(out_tokens, axis=1))
+    print(f"prefill: {t_prefill*1e3:.1f} ms for {args.batch}x{args.prompt_len} tokens")
+    print(f"decode:  {t_decode/max(args.gen-1,1)*1e3:.2f} ms/token "
+          f"({args.batch} sequences)")
+    print("generated token ids (first sequence):", gen[0][:16], "...")
+
+
+if __name__ == "__main__":
+    main()

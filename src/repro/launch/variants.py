@@ -1,0 +1,77 @@
+"""Perf-hillclimb variants (EXPERIMENTS.md §Perf): named config
+transformations applied on top of an arch's baseline for a dry-run cell.
+Each is one hypothesis in the hypothesis->change->measure loop.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+from repro.config.model_config import ModelConfig
+from repro.config.shapes import ShapeSpec
+from repro.sharding import rules as rules_mod
+
+
+def _seq_parallel(cfg: ModelConfig, shape: ShapeSpec) -> ModelConfig:
+    """Shard layer-boundary activations' seq axis over 'model'."""
+    return cfg.replace(seq_parallel=True)
+
+
+def _no_seq_parallel(cfg: ModelConfig, shape: ShapeSpec) -> ModelConfig:
+    return cfg.replace(seq_parallel=False)
+
+
+def _cholesky_retraction(cfg: ModelConfig, shape: ShapeSpec) -> ModelConfig:
+    return cfg.replace_sct(retraction="cholesky_qr2")
+
+
+def _qr_retraction(cfg: ModelConfig, shape: ShapeSpec) -> ModelConfig:
+    return cfg.replace_sct(retraction="qr")
+
+
+def _retract_every_4(cfg: ModelConfig, shape: ShapeSpec) -> ModelConfig:
+    return cfg.replace_sct(retraction="cholesky_qr2", retract_every=4)
+
+
+def _no_remat(cfg: ModelConfig, shape: ShapeSpec) -> ModelConfig:
+    return cfg.replace(remat=False)
+
+
+def _rank_64(cfg: ModelConfig, shape: ShapeSpec) -> ModelConfig:
+    return cfg.replace_sct(rank=64)
+
+
+def _rank_512(cfg: ModelConfig, shape: ShapeSpec) -> ModelConfig:
+    return cfg.replace_sct(rank=512)
+
+
+def _dense_mlp(cfg: ModelConfig, shape: ShapeSpec) -> ModelConfig:
+    """Ablation: the dense baseline the paper compares against."""
+    return cfg.replace_sct(spectral_mlp=False)
+
+
+def _spectral_attention(cfg: ModelConfig, shape: ShapeSpec) -> ModelConfig:
+    """Paper S5 extension: attention projections spectral too."""
+    return cfg.replace_sct(spectral_attention=True)
+
+
+def _capacity_1(cfg: ModelConfig, shape: ShapeSpec) -> ModelConfig:
+    return cfg.replace(capacity_factor=1.0)
+
+
+VARIANTS: Dict[str, Callable[[ModelConfig, ShapeSpec], ModelConfig]] = {
+    "seq_parallel": _seq_parallel,
+    "no_seq_parallel": _no_seq_parallel,
+    "cholesky_qr2": _cholesky_retraction,
+    "qr_retraction": _qr_retraction,
+    "retract_every_4": _retract_every_4,
+    "no_remat": _no_remat,
+    "rank_64": _rank_64,
+    "rank_512": _rank_512,
+    "dense_mlp": _dense_mlp,
+    "spectral_attention": _spectral_attention,
+    "capacity_1": _capacity_1,
+}
+
+
+def apply_variant(cfg: ModelConfig, shape: ShapeSpec, name: str) -> ModelConfig:
+    return VARIANTS[name](cfg, shape)

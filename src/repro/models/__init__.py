@@ -1,0 +1,5 @@
+"""Model definitions: decoder-only LM families + encoder-decoder.
+
+Public entry points live in ``repro.models.model``:
+  init_model / train_loss / prefill / decode_step / decode_state_specs
+"""

@@ -1,0 +1,356 @@
+"""Serving paths for decoder-only families: cache/state construction,
+prefill, and single-token decode. Caches are stacked along a leading
+layer (or period) axis and scanned together with the layer params.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.model_config import ModelConfig
+from repro.nn import attention as attn
+from repro.nn import mamba as mamba_mod
+from repro.nn import xlstm as xlstm_mod
+from repro.nn.embedding import apply_embedding, apply_lm_head
+from repro.nn.mlp import apply_mlp
+from repro.nn.moe import apply_moe
+from repro.models.lm import _norm_apply, _compute_dtype
+
+Params = Dict[str, Any]
+
+
+# ======================================================================
+# State specs / init
+# ======================================================================
+
+def _stack_specs(n: int, tree):
+    return jax.tree.map(lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), tree)
+
+
+def _attn_cache_spec(cfg: ModelConfig, batch: int, max_seq: int):
+    if cfg.attention == "mla":
+        return {
+            "ckv": jax.ShapeDtypeStruct((batch, max_seq, cfg.kv_lora_rank), jnp.bfloat16),
+            "krope": jax.ShapeDtypeStruct((batch, max_seq, cfg.qk_rope_dim), jnp.bfloat16),
+        }
+    return {
+        "k": jax.ShapeDtypeStruct((batch, max_seq, cfg.n_kv_heads, cfg.head_dim), jnp.bfloat16),
+        "v": jax.ShapeDtypeStruct((batch, max_seq, cfg.n_kv_heads, cfg.head_dim), jnp.bfloat16),
+    }
+
+
+def _mamba_state_spec(cfg, batch):
+    di = cfg.mamba_expand * cfg.d_model
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, cfg.mamba_d_conv - 1, di), jnp.bfloat16),
+        "ssm": jax.ShapeDtypeStruct((batch, di, cfg.mamba_d_state), jnp.bfloat16),
+    }
+
+
+def _mlstm_state_spec(cfg, batch):
+    di = 2 * cfg.d_model
+    dh = di // cfg.n_heads
+    h = cfg.n_heads
+    return {
+        "C": jax.ShapeDtypeStruct((batch, h, dh, dh), jnp.float32),
+        "n": jax.ShapeDtypeStruct((batch, h, dh), jnp.float32),
+        "m": jax.ShapeDtypeStruct((batch, h), jnp.float32),
+    }
+
+
+def _slstm_state_spec(cfg, batch):
+    nh = cfg.n_heads
+    dh = cfg.d_model // nh
+    s = jax.ShapeDtypeStruct((batch, nh, dh), jnp.float32)
+    return {"h": s, "c": s, "n": s, "m": s}
+
+
+def lm_state_specs(cfg: ModelConfig, batch: int, max_seq: int):
+    """ShapeDtypeStruct tree of the decode state for this family."""
+    if cfg.family == "dense_lm":
+        return {"cache": _stack_specs(cfg.n_layers, _attn_cache_spec(cfg, batch, max_seq))}
+    if cfg.family == "moe_lm":
+        st = {}
+        if cfg.first_dense_layers:
+            st["dense_cache"] = _stack_specs(
+                cfg.first_dense_layers, _attn_cache_spec(cfg, batch, max_seq)
+            )
+        st["moe_cache"] = _stack_specs(
+            cfg.n_layers - cfg.first_dense_layers, _attn_cache_spec(cfg, batch, max_seq)
+        )
+        return st
+    if cfg.family == "hybrid":
+        n_periods = cfg.n_layers // cfg.attn_every
+        n_mamba = cfg.attn_every - 1
+        return {
+            "attn_cache": _stack_specs(n_periods, _attn_cache_spec(cfg, batch, max_seq)),
+            "mamba": _stack_specs(n_periods, _stack_specs(n_mamba, _mamba_state_spec(cfg, batch))),
+        }
+    if cfg.family == "ssm_lm":
+        n_periods = cfg.n_layers // cfg.slstm_every
+        n_m = cfg.slstm_every - 1
+        return {
+            "mlstm": _stack_specs(n_periods, _stack_specs(n_m, _mlstm_state_spec(cfg, batch))),
+            "slstm": _stack_specs(n_periods, _slstm_state_spec(cfg, batch)),
+        }
+    raise ValueError(cfg.family)
+
+
+def lm_init_state(cfg: ModelConfig, batch: int, max_seq: int):
+    """Zero-filled decode state (real allocation — for smoke tests and
+    the serving example; the dry-run uses lm_state_specs instead)."""
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), lm_state_specs(cfg, batch, max_seq))
+
+
+# ======================================================================
+# Prefill
+# ======================================================================
+
+def _attn_prefill(cfg, p, h, positions, cache):
+    if cfg.attention == "mla":
+        return attn.apply_mla_prefill(p, h, cfg, positions=positions, cache=cache)
+    return attn.apply_gqa_prefill(p, h, cfg, positions=positions, cache=cache,
+                                  use_pallas=cfg.use_pallas)
+
+
+def _dense_block_prefill(cfg, p, x, positions, cache):
+    h = _norm_apply(cfg, p["attn_norm"], x)
+    h, cache = _attn_prefill(cfg, p["attn"], h, positions, cache)
+    x = x + h
+    h = _norm_apply(cfg, p["mlp_norm"], x)
+    body = p.get("mlp")
+    if body is not None:
+        h = apply_mlp(body, h, act=cfg.act, use_pallas=cfg.use_pallas)
+    else:
+        h, _ = apply_moe(p["moe"], h, cfg, capacity_factor=cfg.capacity_factor,
+                         use_pallas=cfg.use_pallas)
+    return x + h, cache
+
+
+def prefill_lm(params: Params, tokens: jax.Array, cfg: ModelConfig, state):
+    """Process the prompt, fill caches. Returns (last-token logits, state).
+
+    For hybrid/ssm families the prefill runs the training forward for
+    outputs and reconstructs the recurrent state from a final single-step
+    replay (exact for attention caches; SSM/xlstm prefill states are
+    produced by their scan's final carry).
+    """
+    b, s = tokens.shape
+    dt = _compute_dtype(cfg)
+    x = apply_embedding(params["embed"], tokens, compute_dtype=dt)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    if cfg.family in ("dense_lm", "moe_lm"):
+        stacks = []
+        if cfg.family == "dense_lm":
+            stacks = [("layers", "cache")]
+        else:
+            if cfg.first_dense_layers:
+                stacks.append(("dense_layers", "dense_cache"))
+            stacks.append(("moe_layers", "moe_cache"))
+        new_state = dict(state)
+        for pk, ck in stacks:
+            def f(carry, xs):
+                layer_p, cache = xs
+                h, cache = _dense_block_prefill(cfg, layer_p, carry, positions, cache)
+                return h, cache
+
+            x, new_cache = jax.lax.scan(f, x, (params[pk], state[ck]))
+            new_state[ck] = new_cache
+        state = new_state
+    elif cfg.family == "hybrid":
+        def f(carry, xs):
+            period_p, cache, mstates = xs
+            h = carry
+            new_m = []
+            for p in range(cfg.attn_every):
+                lp = period_p[f"p{p}"]
+                hh = _norm_apply(cfg, lp["pre_norm"], h)
+                if "attn" in lp:
+                    hh, cache = attn.apply_gqa_prefill(
+                        lp["attn"], hh, cfg, positions=positions, cache=cache,
+                        use_pallas=cfg.use_pallas)
+                else:
+                    mi = p if p < cfg.attn_offset else p - 1
+                    hh, ms = _mamba_prefill(lp["mamba"], hh, cfg,
+                                            jax.tree.map(lambda t: t[mi], mstates))
+                    new_m.append(ms)
+                h = h + hh
+                hh = _norm_apply(cfg, lp["ff_norm"], h)
+                if "moe" in lp:
+                    hh, _ = apply_moe(lp["moe"], hh, cfg, capacity_factor=cfg.capacity_factor,
+                                      use_pallas=cfg.use_pallas)
+                else:
+                    hh = apply_mlp(lp["mlp"], hh, act=cfg.act, use_pallas=cfg.use_pallas)
+                h = h + hh
+            mstacked = jax.tree.map(lambda *xs: jnp.stack(xs), *new_m)
+            return h, (cache, mstacked)
+
+        x, (new_cache, new_mamba) = jax.lax.scan(
+            f, x, (params["periods"], state["attn_cache"], state["mamba"])
+        )
+        state = {"attn_cache": new_cache, "mamba": new_mamba}
+    elif cfg.family == "ssm_lm":
+        def f(carry, xs):
+            period_p, mstates, sstate = xs
+            h = carry
+            new_m = []
+            new_s = sstate
+            for p in range(cfg.slstm_every):
+                lp = period_p[f"p{p}"]
+                hh = _norm_apply(cfg, lp["pre_norm"], h)
+                if "slstm" in lp:
+                    hh, new_s = _slstm_prefill(lp["slstm"], hh, cfg)
+                else:
+                    mi = p if p < cfg.slstm_offset else p - 1
+                    hh, ms = _mlstm_prefill(lp["mlstm"], hh, cfg)
+                    new_m.append(ms)
+                h = h + hh
+            mstacked = jax.tree.map(lambda *xs: jnp.stack(xs), *new_m)
+            return h, (mstacked, new_s)
+
+        x, (new_m, new_s) = jax.lax.scan(f, x, (params["periods"], state["mlstm"], state["slstm"]))
+        state = {"mlstm": new_m, "slstm": new_s}
+    else:
+        raise ValueError(cfg.family)
+
+    x = _norm_apply(cfg, params["final_norm"], x[:, -1:, :])
+    logits = apply_lm_head(params["embed"], x)
+    return logits, state
+
+
+def _mamba_prefill(p, x, cfg, state):
+    """Training scan + exact final state (conv tail, final SSM carry)."""
+    y, new = mamba_mod.apply_mamba(p, x, cfg, return_state=True)
+    return y, {
+        "conv": new["conv"].astype(state["conv"].dtype),
+        "ssm": new["ssm"].astype(state["ssm"].dtype),
+    }
+
+
+def _mlstm_prefill(p, x, cfg):
+    # chunkwise form returns outputs AND the exact final recurrent state
+    return xlstm_mod.apply_mlstm_with_state(p, x, cfg)
+
+
+def _slstm_prefill(p, x, cfg):
+    b, s, d = x.shape
+    y = xlstm_mod.apply_slstm(p, x, cfg)
+    # final state via the same scan the forward uses
+    from repro.nn.linear import apply_linear
+    xg = apply_linear(p["wx"], x)
+    state = xlstm_mod.slstm_init_state(cfg, b, dtype=jnp.float32)
+
+    def step(st, xg_t):
+        return xlstm_mod._slstm_cell(p, cfg, xg_t, st), None
+
+    state, _ = jax.lax.scan(step, state, jnp.moveaxis(xg, 1, 0))
+    return y, state
+
+
+# ======================================================================
+# Decode (single token)
+# ======================================================================
+
+def decode_step_lm(params: Params, tokens: jax.Array, state, cache_len: jax.Array,
+                   cfg: ModelConfig):
+    """tokens (b, 1) + state -> (logits (b, 1, vocab), new state).
+
+    cache_len is the number of tokens already in the cache (static cache
+    size, dynamic fill level) so the step compiles once and serves any
+    position — the serving-loop contract.
+    """
+    b = tokens.shape[0]
+    dt = _compute_dtype(cfg)
+    x = apply_embedding(params["embed"], tokens, compute_dtype=dt)
+
+    def attn_decode(p, h, cache):
+        if cfg.attention == "mla":
+            return attn.apply_mla_decode(p, h, cfg, cache=cache, cache_len=cache_len)
+        return attn.apply_gqa_decode(p, h, cfg, cache=cache, cache_len=cache_len,
+                                     use_pallas=cfg.use_pallas)
+
+    if cfg.family in ("dense_lm", "moe_lm"):
+        stacks = [("layers", "cache")] if cfg.family == "dense_lm" else (
+            ([("dense_layers", "dense_cache")] if cfg.first_dense_layers else [])
+            + [("moe_layers", "moe_cache")]
+        )
+        new_state = dict(state)
+        for pk, ck in stacks:
+            def f(carry, xs):
+                layer_p, cache = xs
+                h = _norm_apply(cfg, layer_p["attn_norm"], carry)
+                h, cache = attn_decode(layer_p["attn"], h, cache)
+                hx = carry + h
+                h = _norm_apply(cfg, layer_p["mlp_norm"], hx)
+                if "mlp" in layer_p:
+                    h = apply_mlp(layer_p["mlp"], h, act=cfg.act, use_pallas=cfg.use_pallas)
+                else:
+                    h, _ = apply_moe(layer_p["moe"], h, cfg,
+                                     capacity_factor=cfg.capacity_factor,
+                                     use_pallas=cfg.use_pallas)
+                return hx + h, cache
+
+            x, new_cache = jax.lax.scan(f, x, (params[pk], state[ck]))
+            new_state[ck] = new_cache
+        state = new_state
+    elif cfg.family == "hybrid":
+        def f(carry, xs):
+            period_p, cache, mstates = xs
+            h = carry
+            new_m = []
+            for p in range(cfg.attn_every):
+                lp = period_p[f"p{p}"]
+                hh = _norm_apply(cfg, lp["pre_norm"], h)
+                if "attn" in lp:
+                    hh, cache = attn_decode(lp["attn"], hh, cache)
+                else:
+                    mi = p if p < cfg.attn_offset else p - 1
+                    hh, ms = mamba_mod.apply_mamba_decode(
+                        lp["mamba"], hh, cfg, state=jax.tree.map(lambda t: t[mi], mstates))
+                    new_m.append(ms)
+                h = h + hh
+                hh = _norm_apply(cfg, lp["ff_norm"], h)
+                if "moe" in lp:
+                    hh, _ = apply_moe(lp["moe"], hh, cfg,
+                                      capacity_factor=cfg.capacity_factor,
+                                      use_pallas=cfg.use_pallas)
+                else:
+                    hh = apply_mlp(lp["mlp"], hh, act=cfg.act, use_pallas=cfg.use_pallas)
+                h = h + hh
+            mstacked = jax.tree.map(lambda *xs: jnp.stack(xs), *new_m)
+            return h, (cache, mstacked)
+
+        x, (new_cache, new_m) = jax.lax.scan(
+            f, x, (params["periods"], state["attn_cache"], state["mamba"]))
+        state = {"attn_cache": new_cache, "mamba": new_m}
+    elif cfg.family == "ssm_lm":
+        def f(carry, xs):
+            period_p, mstates, sstate = xs
+            h = carry
+            new_m = []
+            new_s = sstate
+            for p in range(cfg.slstm_every):
+                lp = period_p[f"p{p}"]
+                hh = _norm_apply(cfg, lp["pre_norm"], h)
+                if "slstm" in lp:
+                    hh, new_s = xlstm_mod.apply_slstm_decode(lp["slstm"], hh, cfg, state=sstate)
+                else:
+                    mi = p if p < cfg.slstm_offset else p - 1
+                    hh, ms = xlstm_mod.apply_mlstm_decode(
+                        lp["mlstm"], hh, cfg, state=jax.tree.map(lambda t: t[mi], mstates))
+                    new_m.append(ms)
+                h = h + hh
+            mstacked = jax.tree.map(lambda *xs: jnp.stack(xs), *new_m)
+            return h, (mstacked, new_s)
+
+        x, (new_m, new_s) = jax.lax.scan(f, x, (params["periods"], state["mlstm"], state["slstm"]))
+        state = {"mlstm": new_m, "slstm": new_s}
+    else:
+        raise ValueError(cfg.family)
+
+    x = _norm_apply(cfg, params["final_norm"], x)
+    logits = apply_lm_head(params["embed"], x)
+    return logits, state

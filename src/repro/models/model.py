@@ -1,0 +1,100 @@
+"""Model dispatcher: one uniform API over every family.
+
+  init_model(key, cfg)                         -> params
+  train_loss(params, batch, cfg)               -> (loss, metrics)
+  prefill(params, tokens, cfg, state, **extra) -> (logits, state)
+  decode_step(params, tokens, state, cache_len, cfg, **extra)
+  decode_state_specs(cfg, batch, max_seq)      -> ShapeDtypeStruct tree
+  param_count(params) / active_param_count(cfg)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.model_config import ModelConfig
+from repro.models import lm as lm_mod
+from repro.models import decode as decode_mod
+from repro.models import encdec as encdec_mod
+
+
+def init_model(key, cfg: ModelConfig):
+    if cfg.family == "encdec":
+        return encdec_mod.init_encdec(key, cfg)
+    return lm_mod.init_lm(key, cfg)
+
+
+def train_loss(params, batch: Dict[str, jax.Array], cfg: ModelConfig):
+    if cfg.family == "encdec":
+        return encdec_mod.train_loss_encdec(params, batch, cfg)
+    return lm_mod.train_loss_lm(params, batch, cfg)
+
+
+def forward(params, tokens, cfg: ModelConfig):
+    if cfg.family == "encdec":
+        raise ValueError("encdec needs encoder_frames; use train_loss/prefill")
+    return lm_mod.forward_lm(params, tokens, cfg)
+
+
+def decode_state_specs(cfg: ModelConfig, batch: int, max_seq: int):
+    if cfg.family == "encdec":
+        return encdec_mod.encdec_state_specs(cfg, batch, max_seq)
+    return decode_mod.lm_state_specs(cfg, batch, max_seq)
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_seq: int):
+    return jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype), decode_state_specs(cfg, batch, max_seq)
+    )
+
+
+def prefill(params, tokens, cfg: ModelConfig, state, **extra):
+    if cfg.family == "encdec":
+        return encdec_mod.prefill_encdec(params, tokens, cfg, state,
+                                         encoder_frames=extra["encoder_frames"])
+    return decode_mod.prefill_lm(params, tokens, cfg, state)
+
+
+def decode_step(params, tokens, state, cache_len, cfg: ModelConfig, **extra):
+    if cfg.family == "encdec":
+        return encdec_mod.decode_step_encdec(params, tokens, state, cache_len, cfg,
+                                             encoder_out=extra["encoder_out"])
+    return decode_mod.decode_step_lm(params, tokens, state, cache_len, cfg)
+
+
+def param_count(params) -> int:
+    return sum(int(jnp.size(x)) for x in jax.tree.leaves(params))
+
+
+def dense_equivalent_param_count(params) -> int:
+    """Parameter count of the dense model this spectral model represents
+    (paper: '452M spectral parameters correspond to a 77.8B dense
+    architecture')."""
+    from repro.core.spectral import is_spectral
+
+    total = 0
+
+    def walk(tree):
+        nonlocal total
+        if is_spectral(tree):
+            U, V = tree["U"], tree["V"]
+            m, n = U.shape[-2], V.shape[-2]
+            lead = 1
+            for d in U.shape[:-2]:
+                lead *= d
+            total += lead * m * n
+            total += sum(int(jnp.size(v)) for k, v in tree.items() if k not in ("U", "s", "V"))
+            return
+        if isinstance(tree, dict):
+            for v in tree.values():
+                walk(v)
+        elif isinstance(tree, (list, tuple)):
+            for v in tree:
+                walk(v)
+        else:
+            total += int(jnp.size(tree))
+
+    walk(params)
+    return total

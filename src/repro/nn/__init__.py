@@ -1,0 +1,6 @@
+"""Neural-net substrate: every block the 10 assigned architectures need.
+
+Functional style: ``init_*(key, ...) -> params`` / ``apply_*(params, x, ...)``.
+Params are plain nested dicts (pytrees) so they compose with pjit, our
+optimizer, and the SCT retraction walker without a module framework.
+"""

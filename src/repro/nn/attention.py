@@ -1,0 +1,452 @@
+"""Attention blocks: GQA (llama/qwen/granite/whisper/qwen2-vl) and MLA
+(deepseek-v2/v3), each with a training path, a prefill path (fills the
+cache) and a single-token decode path.
+
+Projections can optionally be spectral (SCT) via ``rank`` — the paper
+leaves attention dense (S5 'Attention layers'); we expose the extension
+as a config flag and benchmark it separately.
+
+Cache layouts (per layer, stacked with a leading L axis by the model):
+  GQA: {"k": (b, S, kvh, hd), "v": (b, S, kvh, hd)}
+  MLA: {"ckv": (b, S, kv_lora), "krope": (b, S, rope_dim)}   <- the MLA
+       memory win: compressed latent is cached, not full K/V.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.linear import init_linear, apply_linear
+from repro.nn.norms import init_rmsnorm, apply_rmsnorm
+from repro.nn.rotary import apply_rope, apply_mrope
+
+NEG_INF = -1e30
+
+
+FLASH_THRESHOLD = 2048  # direct softmax below this sequence length
+# big chunks: few loop iterations => few HBM round-trips of the chunk
+# intermediates in the XLA fallback (a Pallas flash kernel keeps them in
+# VMEM; see kernels/flash_attention.py and EXPERIMENTS.md §Perf)
+FLASH_Q_CHUNK = 2048
+FLASH_KV_CHUNK = 4096
+
+
+def _sdpa_direct(q, k, v, *, causal: bool, q_offset=0, kv_len_mask=None):
+    """Reference O(s^2)-memory attention — short sequences and
+    single-token decode (sq == 1). q: (b, sq, g, r, d) grouped;
+    k/v: (b, skv, g, d)."""
+    b, sq, g, r, d = q.shape
+    scores = jnp.einsum("bqgrd,bkgd->bgrqk", q, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(d))
+    if causal:
+        qpos = jnp.arange(sq) + q_offset
+        kpos = jnp.arange(k.shape[1])
+        mask = qpos[:, None] >= kpos[None, :]
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    if kv_len_mask is not None:
+        scores = jnp.where(kv_len_mask[:, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bgrqk,bkgd->bqgrd", probs, v)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _flash(q, k, v, causal):
+    out, _, _ = _flash_fwd_impl(q, k, v, causal)
+    return out
+
+
+def _flash_vjp_fwd(q, k, v, causal):
+    out, m, l = _flash_fwd_impl(q, k, v, causal)
+    return out, (q, k, v, out, m, l)
+
+
+def _flash_vjp_bwd(causal, res, dout):
+    return _flash_bwd_impl(causal, res, dout)
+
+
+def _flash_fwd_impl(q, k, v, causal):
+    """Exact flash-style attention in pure jnp: lax.map over q chunks,
+    lax.scan over kv chunks with online softmax. Peak live scores tensor
+    is (b, g, r, cq, ck) instead of (b, g, r, s, s). On TPU this region
+    runs as the fused kernels/flash_attention.py kernel; this jnp
+    equivalent is what the 512-device dry-run partitions.
+    q: (b, sq, g, r, d); k/v: (b, skv, g, d).
+    Returns (out, m, l) — the softmax stats the backward needs."""
+    b, sq, g, r, d = q.shape
+    skv = k.shape[1]
+    dv = v.shape[-1]          # MLA: v_head_dim != qk head dim
+    cq = min(FLASH_Q_CHUNK, sq)
+    ck = min(FLASH_KV_CHUNK, skv)
+    nq, nk = sq // cq, skv // ck
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+
+    qc = q.reshape(b, nq, cq, g, r, d)
+    kc = k.reshape(b, nk, ck, g, d)
+    vc = v.reshape(b, nk, ck, g, dv)
+
+    def per_q_chunk(qi):
+        q_i = qc[:, qi]                                   # (b, cq, g, r, d)
+        qpos = qi * cq + jnp.arange(cq)
+
+        def kv_step(carry, kj):
+            acc, m, l = carry
+            k_j = kc[:, kj]
+            v_j = vc[:, kj]
+            s_ij = jnp.einsum("bqgrd,bkgd->bgrqk", q_i, k_j).astype(jnp.float32) * scale
+            if causal:
+                kpos = kj * ck + jnp.arange(ck)
+                mask = qpos[:, None] >= kpos[None, :]
+                s_ij = jnp.where(mask[None, None, None], s_ij, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s_ij, axis=-1))
+            p = jnp.exp(s_ij - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + jnp.sum(p, axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bgrqk,bkgd->bgrqd", p.astype(q_i.dtype), v_j
+            ).astype(jnp.float32)
+            return (acc, m_new, l), None
+
+        acc0 = jnp.zeros((b, g, r, cq, dv), jnp.float32)
+        m0 = jnp.full((b, g, r, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, g, r, cq), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(kv_step, (acc0, m0, l0), jnp.arange(nk))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        # out: (b, g, r, cq, dv) -> (b, cq, g, r, dv); stats (b, g, r, cq)
+        return jnp.moveaxis(out, 3, 1).astype(q.dtype), m, l
+
+    outs, ms, ls = jax.lax.map(per_q_chunk, jnp.arange(nq))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, sq, g, r, dv)
+    return out, ms, ls                                    # ms/ls: (nq, b, g, r, cq)
+
+
+def _flash_bwd_impl(causal, res, dout):
+    """Chunked flash backward (the standard recompute-p form — what the
+    Pallas backward kernel implements on TPU):
+      delta_i = rowsum(dO_i * O_i)
+      p_ij    = exp(s_ij - m_i) / l_i
+      dV_j   += p_ij^T dO_i
+      ds_ij   = p_ij * (dO_i V_j^T - delta_i) * scale
+      dQ_i   += ds_ij K_j ;  dK_j += ds_ij^T Q_i
+    Never materializes an (s, s) tensor."""
+    q, k, v, out, ms, ls = res
+    b, sq, g, r, d = q.shape
+    skv = k.shape[1]
+    dv = v.shape[-1]
+    cq = min(FLASH_Q_CHUNK, sq)
+    ck = min(FLASH_KV_CHUNK, skv)
+    nq, nk = sq // cq, skv // ck
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+
+    qc = q.reshape(b, nq, cq, g, r, d)
+    kc = k.reshape(b, nk, ck, g, d)
+    vc = v.reshape(b, nk, ck, g, dv)
+    doc = dout.reshape(b, nq, cq, g, r, dv)
+    oc = out.reshape(b, nq, cq, g, r, dv)
+
+    def per_q_chunk(carry, qi):
+        dk_acc, dv_acc = carry                            # (b, skv, g, d/dv) f32
+        q_i = qc[:, qi]
+        do_i = doc[:, qi].astype(jnp.float32)
+        o_i = oc[:, qi].astype(jnp.float32)
+        m_i = ms[qi]                                      # (b, g, r, cq)
+        l_i = jnp.maximum(ls[qi], 1e-30)
+        delta = jnp.einsum("bqgrd,bqgrd->bgrq", do_i, o_i)  # (b, g, r, cq)
+        qpos = qi * cq + jnp.arange(cq)
+
+        def kv_step(inner, kj):
+            dq_i, dk_acc, dv_acc = inner
+            k_j = kc[:, kj]
+            v_j = vc[:, kj]
+            s_ij = jnp.einsum("bqgrd,bkgd->bgrqk", q_i, k_j).astype(jnp.float32) * scale
+            if causal:
+                kpos = kj * ck + jnp.arange(ck)
+                mask = qpos[:, None] >= kpos[None, :]
+                s_ij = jnp.where(mask[None, None, None], s_ij, NEG_INF)
+            p = jnp.exp(s_ij - m_i[..., None]) / l_i[..., None]   # (b,g,r,cq,ck)
+            pv = p.astype(v_j.dtype)
+            dv_j = jnp.einsum("bgrqk,bqgrd->bkgd", pv, do_i.astype(v_j.dtype))
+            dp = jnp.einsum("bqgrd,bkgd->bgrqk", do_i.astype(v_j.dtype), v_j).astype(jnp.float32)
+            ds = p * (dp - delta[..., None]) * scale             # (b,g,r,cq,ck)
+            dsq = ds.astype(q_i.dtype)
+            dq_i = dq_i + jnp.einsum("bgrqk,bkgd->bqgrd", dsq, k_j).astype(jnp.float32)
+            dk_j = jnp.einsum("bgrqk,bqgrd->bkgd", dsq, q_i)
+            dk_acc = _acc_update(dk_acc, dk_j.astype(jnp.float32), kj, ck)
+            dv_acc = _acc_update(dv_acc, dv_j.astype(jnp.float32), kj, ck)
+            return (dq_i, dk_acc, dv_acc), None
+
+        dq0 = jnp.zeros((b, cq, g, r, d), jnp.float32)
+        (dq_i, dk_acc, dv_acc), _ = jax.lax.scan(
+            kv_step, (dq0, dk_acc, dv_acc), jnp.arange(nk))
+        return (dk_acc, dv_acc), dq_i
+
+    dk0 = jnp.zeros((b, skv, g, d), jnp.float32)
+    dv0 = jnp.zeros((b, skv, g, dv), jnp.float32)
+    with jax.named_scope("PALLAS_EQ_flash_attention_bwd"):
+        (dk, dvv), dqs = jax.lax.scan(per_q_chunk, (dk0, dv0), jnp.arange(nq))
+    dq = jnp.moveaxis(dqs, 0, 1).reshape(b, sq, g, r, d).astype(q.dtype)
+    return dq, dk.astype(k.dtype), dvv.astype(v.dtype)
+
+
+def _acc_update(acc, delta, kj, ck):
+    """acc[:, kj*ck:(kj+1)*ck] += delta, XLA-friendly."""
+    cur = jax.lax.dynamic_slice_in_dim(acc, kj * ck, ck, axis=1)
+    return jax.lax.dynamic_update_slice_in_dim(acc, cur + delta, kj * ck, axis=1)
+
+
+_flash.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
+
+
+def _sdpa(q, k, v, *, causal: bool, q_offset=0, kv_len_mask=None):
+    """q: (b, sq, h, d); k/v: (b, skv, kvh, d). GQA via grouped-head
+    einsums — kv heads are never materialized repeated (a rep x HBM-
+    traffic save over jnp.repeat). Softmax in fp32. causal uses absolute
+    positions (q_offset for decode); kv_len_mask: (b, skv) valid slots.
+    """
+    b, sq, h, d = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    rep = h // kvh
+    qg = q.reshape(b, sq, kvh, rep, d)
+    dv = v.shape[-1]
+    use_flash = (
+        kv_len_mask is None
+        and sq == skv
+        and sq > FLASH_THRESHOLD
+        and sq % min(FLASH_Q_CHUNK, sq) == 0
+        and skv % min(FLASH_KV_CHUNK, skv) == 0
+        and q_offset == 0
+    )
+    if use_flash:
+        # PALLAS_EQ marker: on TPU this region runs as the fused
+        # kernels/flash_attention.py kernel (validated against the same
+        # math); the roofline cost model substitutes the kernel's HBM
+        # traffic for the XLA fallback's (roofline/hlo_cost.py).
+        with jax.named_scope("PALLAS_EQ_flash_attention"):
+            out = _flash(qg, k, v, causal)
+    else:
+        out = _sdpa_direct(qg, k, v, causal=causal, q_offset=q_offset,
+                           kv_len_mask=kv_len_mask)
+    return out.reshape(b, sq, h, dv)
+
+
+# ---------------------------------------------------------------- GQA ----
+
+def init_gqa(key, cfg, dtype=jnp.float32):
+    """cfg needs: d_model, n_heads, n_kv_heads, head_dim, qkv_bias,
+    attn_rank (None => dense, the paper-faithful default)."""
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    d, h, kvh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    r = cfg.attn_rank
+    return {
+        "wq": init_linear(kq, d, h * hd, rank=r, bias=cfg.qkv_bias, dtype=dtype),
+        "wk": init_linear(kk, d, kvh * hd, rank=r, bias=cfg.qkv_bias, dtype=dtype),
+        "wv": init_linear(kv, d, kvh * hd, rank=r, bias=cfg.qkv_bias, dtype=dtype),
+        "wo": init_linear(ko, h * hd, d, rank=r, bias=False, dtype=dtype),
+    }
+
+
+def _gqa_qkv(p, x, cfg, positions, use_pallas=False):
+    b, s, _ = x.shape
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = apply_linear(p["wq"], x, use_pallas=use_pallas).reshape(b, s, h, hd)
+    k = apply_linear(p["wk"], x, use_pallas=use_pallas).reshape(b, s, kvh, hd)
+    v = apply_linear(p["wv"], x, use_pallas=use_pallas).reshape(b, s, kvh, hd)
+    if cfg.rope == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    elif cfg.rope == "mrope":
+        mpos = jnp.broadcast_to(positions[None], (3,) + positions.shape)
+        q = apply_mrope(q, mpos, cfg.mrope_sections, cfg.rope_theta)
+        k = apply_mrope(k, mpos, cfg.mrope_sections, cfg.rope_theta)
+    return q, k, v
+
+
+def apply_gqa(p, x, cfg, *, positions, causal=True, use_pallas=False):
+    """Training / no-cache forward."""
+    b, s, _ = x.shape
+    q, k, v = _gqa_qkv(p, x, cfg, positions, use_pallas)
+    o = _sdpa(q, k, v, causal=causal)
+    return apply_linear(p["wo"], o.reshape(b, s, -1), use_pallas=use_pallas)
+
+
+def gqa_init_cache(cfg, batch, max_seq, dtype=jnp.bfloat16):
+    kvh, hd = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, max_seq, kvh, hd), dtype=dtype),
+        "v": jnp.zeros((batch, max_seq, kvh, hd), dtype=dtype),
+    }
+
+
+def apply_gqa_prefill(p, x, cfg, *, positions, cache, use_pallas=False):
+    """Fill cache[:, :s] and return outputs (causal)."""
+    b, s, _ = x.shape
+    q, k, v = _gqa_qkv(p, x, cfg, positions, use_pallas)
+    cache = {
+        "k": jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0)),
+        "v": jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0)),
+    }
+    o = _sdpa(q, k, v, causal=True)
+    return apply_linear(p["wo"], o.reshape(b, s, -1), use_pallas=use_pallas), cache
+
+
+def apply_gqa_decode(p, x, cfg, *, cache, cache_len, use_pallas=False):
+    """One-token step. x: (b, 1, d); cache_len: scalar int32 (tokens
+    already in cache). Attends over the full cache with a validity mask
+    — S stays static so the step compiles once."""
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(cache_len[None, None], (b, s)).astype(jnp.int32)
+    q, k, v = _gqa_qkv(p, x, cfg, positions, use_pallas)
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), cache_len, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), cache_len, axis=1)
+    S = ck.shape[1]
+    valid = (jnp.arange(S)[None, :] <= cache_len).astype(bool)
+    valid = jnp.broadcast_to(valid, (b, S))
+    o = _sdpa(q, ck.astype(q.dtype), cv.astype(q.dtype), causal=False, kv_len_mask=valid)
+    return apply_linear(p["wo"], o.reshape(b, s, -1), use_pallas=use_pallas), {"k": ck, "v": cv}
+
+
+# ---------------------------------------------------------------- MLA ----
+
+def init_mla(key, cfg, dtype=jnp.float32):
+    """DeepSeek Multi-head Latent Attention. cfg needs: d_model, n_heads,
+    q_lora_rank (0 => direct q proj), kv_lora_rank, qk_nope_dim,
+    qk_rope_dim, v_head_dim."""
+    keys = jax.random.split(key, 6)
+    d, h = cfg.d_model, cfg.n_heads
+    nope, rope_d, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    p = {}
+    if cfg.q_lora_rank:
+        p["wdq"] = init_linear(keys[0], d, cfg.q_lora_rank, dtype=dtype)
+        p["q_norm"] = init_rmsnorm(cfg.q_lora_rank, dtype=dtype)
+        p["wuq"] = init_linear(keys[1], cfg.q_lora_rank, h * (nope + rope_d), dtype=dtype)
+    else:
+        p["wq"] = init_linear(keys[1], d, h * (nope + rope_d), dtype=dtype)
+    p["wdkv"] = init_linear(keys[2], d, cfg.kv_lora_rank + rope_d, dtype=dtype)
+    p["kv_norm"] = init_rmsnorm(cfg.kv_lora_rank, dtype=dtype)
+    p["wukv"] = init_linear(keys[3], cfg.kv_lora_rank, h * (nope + vd), dtype=dtype)
+    p["wo"] = init_linear(keys[4], h * vd, d, dtype=dtype)
+    return p
+
+
+def _mla_q(p, x, cfg):
+    b, s, _ = x.shape
+    h, nope, rope_d = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim
+    if cfg.q_lora_rank:
+        cq = apply_rmsnorm(p["q_norm"], apply_linear(p["wdq"], x))
+        q = apply_linear(p["wuq"], cq)
+    else:
+        q = apply_linear(p["wq"], x)
+    q = q.reshape(b, s, h, nope + rope_d)
+    return jnp.split(q, [nope], axis=-1)  # q_nope (b,s,h,nope), q_rope (b,s,h,rope)
+
+
+def _mla_ckv(p, x, cfg, positions):
+    """Compressed latent + shared rope key. Returns ckv (b,s,kv_lora),
+    krope (b,s,rope_d) — exactly what the decode cache stores."""
+    lat = apply_linear(p["wdkv"], x)
+    ckv, krope = jnp.split(lat, [cfg.kv_lora_rank], axis=-1)
+    ckv = apply_rmsnorm(p["kv_norm"], ckv)
+    krope = apply_rope(krope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
+    return ckv, krope
+
+
+def apply_mla(p, x, cfg, *, positions, causal=True):
+    """Training/prefill form: expand full K/V from the latent."""
+    b, s, _ = x.shape
+    h, nope, rope_d, vd = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    q_nope, q_rope = _mla_q(p, x, cfg)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    ckv, krope = _mla_ckv(p, x, cfg, positions)
+    kv = apply_linear(p["wukv"], ckv).reshape(b, s, h, nope + vd)
+    k_nope, v = jnp.split(kv, [nope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(krope[:, :, None, :], (b, s, h, rope_d))], axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    o = _sdpa(q, k, v, causal=causal)
+    return apply_linear(p["wo"], o.reshape(b, s, -1))
+
+
+def mla_init_cache(cfg, batch, max_seq, dtype=jnp.bfloat16):
+    return {
+        "ckv": jnp.zeros((batch, max_seq, cfg.kv_lora_rank), dtype=dtype),
+        "krope": jnp.zeros((batch, max_seq, cfg.qk_rope_dim), dtype=dtype),
+    }
+
+
+def apply_mla_prefill(p, x, cfg, *, positions, cache):
+    b, s, _ = x.shape
+    ckv, krope = _mla_ckv(p, x, cfg, positions)
+    cache = {
+        "ckv": jax.lax.dynamic_update_slice(cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, 0, 0)),
+        "krope": jax.lax.dynamic_update_slice(cache["krope"], krope.astype(cache["krope"].dtype), (0, 0, 0)),
+    }
+    # reuse the training attention for outputs
+    out = apply_mla(p, x, cfg, positions=positions, causal=True)
+    return out, cache
+
+
+def _split_wukv(p, cfg):
+    """Split the (kv_lora, h*(nope+vd)) up-projection into per-head
+    W_uk (h, kv_lora, nope) and W_uv (h, kv_lora, vd) for the absorbed
+    decode path. Works for dense wukv (MLA up-proj is never spectral —
+    it IS already a low-rank factor by design)."""
+    h, nope, vd = cfg.n_heads, cfg.qk_nope_dim, cfg.v_head_dim
+    w = p["wukv"]["w"]                                  # (kv_lora, h*(nope+vd))
+    w = w.reshape(cfg.kv_lora_rank, h, nope + vd)
+    return w[:, :, :nope], w[:, :, nope:]               # (kv_lora,h,nope), (kv_lora,h,vd)
+
+
+def apply_mla_decode(p, x, cfg, *, cache, cache_len):
+    """Absorbed single-token decode: scores and values are computed
+    directly against the cached compressed latent — no full K/V is ever
+    materialized (the MLA idea, mirroring SCT's never-materialize rule).
+    """
+    b, s, _ = x.shape
+    h, nope, rope_d, vd = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    positions = jnp.broadcast_to(cache_len[None, None], (b, s)).astype(jnp.int32)
+    q_nope, q_rope = _mla_q(p, x, cfg)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    ckv_new, krope_new = _mla_ckv(p, x, cfg, positions)
+    cckv = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv_new.astype(cache["ckv"].dtype), cache_len, axis=1)
+    ckr = jax.lax.dynamic_update_slice_in_dim(cache["krope"], krope_new.astype(cache["krope"].dtype), cache_len, axis=1)
+    wuk, wuv = _split_wukv(p, cfg)
+    # absorb W_uk into q: q_lat (b,s,h,kv_lora)
+    q_lat = jnp.einsum("bshn,lhn->bshl", q_nope, wuk.astype(q_nope.dtype))
+    S = cckv.shape[1]
+    scores = (
+        jnp.einsum("bshl,bSl->bhsS", q_lat, cckv.astype(q_lat.dtype))
+        + jnp.einsum("bshr,bSr->bhsS", q_rope, ckr.astype(q_rope.dtype))
+    ).astype(jnp.float32) / jnp.sqrt(jnp.float32(nope + rope_d))
+    valid = jnp.broadcast_to((jnp.arange(S)[None, :] <= cache_len), (b, S))
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    o_lat = jnp.einsum("bhsS,bSl->bshl", probs, cckv.astype(probs.dtype))   # (b,s,h,kv_lora)
+    o = jnp.einsum("bshl,lhv->bshv", o_lat, wuv.astype(o_lat.dtype))        # (b,s,h,vd)
+    out = apply_linear(p["wo"], o.reshape(b, s, h * vd))
+    return out, {"ckv": cckv, "krope": ckr}
+
+
+# ----------------------------------------------------------- cross-attn --
+
+def init_cross_attn(key, cfg, dtype=jnp.float32):
+    """Whisper decoder cross-attention (no rope)."""
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    return {
+        "wq": init_linear(kq, d, h * hd, bias=True, dtype=dtype),
+        "wk": init_linear(kk, d, h * hd, bias=False, dtype=dtype),
+        "wv": init_linear(kv, d, h * hd, bias=True, dtype=dtype),
+        "wo": init_linear(ko, h * hd, d, bias=True, dtype=dtype),
+    }
+
+
+def apply_cross_attn(p, x, enc_out, cfg):
+    b, s, _ = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    se = enc_out.shape[1]
+    q = apply_linear(p["wq"], x).reshape(b, s, h, hd)
+    k = apply_linear(p["wk"], enc_out).reshape(b, se, h, hd)
+    v = apply_linear(p["wv"], enc_out).reshape(b, se, h, hd)
+    o = _sdpa(q, k, v, causal=False)
+    return apply_linear(p["wo"], o.reshape(b, s, -1))

@@ -1,0 +1,22 @@
+"""Token embedding + (tied or untied) LM head, vocab-shardable."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_embedding(key: jax.Array, vocab: int, dim: int, dtype=jnp.float32):
+    w = jax.random.normal(key, (vocab, dim), dtype=jnp.float32) * (dim ** -0.5)
+    return {"w": w.astype(dtype)}
+
+
+def apply_embedding(p, tokens: jax.Array, compute_dtype=jnp.bfloat16) -> jax.Array:
+    # take() keeps the vocab axis shardable (gather across shards is a
+    # collective the partitioner handles; no full-table replication).
+    return jnp.take(p["w"].astype(compute_dtype), tokens, axis=0)
+
+
+def apply_lm_head(p, x: jax.Array) -> jax.Array:
+    """Logits = x @ E^T. Output vocab axis stays sharded; the loss uses a
+    shard-local max/sum so the full-vocab tensor is never gathered."""
+    return x @ p["w"].astype(x.dtype).T

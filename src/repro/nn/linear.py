@@ -1,0 +1,57 @@
+"""Linear layers: dense or spectral (SCT). One call site for both, so the
+paper's technique is a config switch on every projection in the system.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.spectral import spectral_init, spectral_apply, is_spectral
+
+
+def init_linear(
+    key: jax.Array,
+    in_dim: int,
+    out_dim: int,
+    *,
+    rank: Optional[int] = None,
+    bias: bool = False,
+    dtype: Any = jnp.float32,
+    scale: float | None = None,
+):
+    """rank=None -> dense {'w': (in, out)[, 'b']}; rank=k -> spectral
+    {'U': (in,k), 's': (k,), 'V': (out,k)[, 'b']} (paper Eq. 1)."""
+    if rank is not None:
+        k = min(rank, in_dim, out_dim)
+        p = spectral_init(key, in_dim, out_dim, k, dtype=dtype, scale=scale)
+    else:
+        sigma = scale if scale is not None else in_dim ** -0.5
+        w = jax.random.normal(key, (in_dim, out_dim), dtype=jnp.float32) * sigma
+        p = {"w": w.astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((out_dim,), dtype=dtype)
+    return p
+
+
+def apply_linear(p, x: jax.Array, *, use_pallas: bool = False) -> jax.Array:
+    """Dispatch on parameterization. The dense (m, n) matrix is never
+    built in the spectral branch."""
+    if is_spectral(p):
+        if use_pallas:
+            from repro.kernels.ops import spectral_matmul
+
+            y = spectral_matmul(x, p["U"], p["s"], p["V"])
+        else:
+            y = spectral_apply(p, x)
+    else:
+        w = p["w"]
+        y = x @ w.astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+def linear_out_dim(p) -> int:
+    return p["V"].shape[-2] if is_spectral(p) else p["w"].shape[-1]

@@ -1,0 +1,135 @@
+"""Mamba selective-SSM mixer — the '7' in Jamba's 1:7 attention:mamba
+interleave [arXiv:2403.19887]. Training path runs a lax.scan over time;
+decode carries (conv buffer, ssm state) and costs O(1) per token — which
+is why jamba runs the long_500k cell that full-attention archs skip.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.linear import init_linear, apply_linear
+
+
+def init_mamba(key, cfg, dtype=jnp.float32):
+    """cfg needs: d_model, mamba_expand, mamba_d_state, mamba_d_conv,
+    mamba_dt_rank, mlp_rank (spectral option for in/out projections —
+    kept dense in paper-faithful mode, see DESIGN.md S7)."""
+    d = cfg.d_model
+    di = cfg.mamba_expand * d
+    ds, dc = cfg.mamba_d_state, cfg.mamba_d_conv
+    dtr = cfg.mamba_dt_rank
+    ks = jax.random.split(key, 6)
+    rank = cfg.mamba_rank  # None in faithful mode
+    p = {
+        "in_proj": init_linear(ks[0], d, 2 * di, rank=rank, dtype=dtype),
+        "conv_w": (jax.random.normal(ks[1], (dc, di), dtype=jnp.float32) * (dc ** -0.5)).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype=dtype),
+        "x_proj": init_linear(ks[2], di, dtr + 2 * ds, dtype=dtype),
+        "dt_proj": init_linear(ks[3], dtr, di, bias=True, dtype=dtype),
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32), (di, 1))).astype(dtype),
+        "D": jnp.ones((di,), dtype=dtype),
+        "out_proj": init_linear(ks[4], di, d, rank=rank, dtype=dtype),
+    }
+    return p
+
+
+def _causal_conv(x, w, b):
+    """x: (b, s, di); depthwise causal conv, kernel (dc, di)."""
+    dc = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (dc - 1, 0), (0, 0)))
+    # unrolled taps (dc is 4): sum_j w[j] * x[t - dc + 1 + j]
+    out = sum(pad[:, j : j + x.shape[1], :] * w[j].astype(x.dtype) for j in range(dc))
+    return out + b.astype(x.dtype)
+
+
+def _ssm_scan(u, dt, B, C, A, D, h0=None):
+    """Selective scan. u: (b, s, di); dt: (b, s, di); B, C: (b, s, ds);
+    A: (di, ds) negative; returns ((b, s, di), final state (b, di, ds)).
+
+    The (b, s, di, ds) discretized tensors are never materialized —
+    dA/dBu are formed per-step inside the scan body (memory-roofline
+    fix: scan inputs are O(b*s*di), not O(b*s*di*ds))."""
+    b, s, di = u.shape
+    ds = B.shape[-1]
+
+    def step(h, inp):
+        dt_t, B_t, C_t, u_t = inp                          # (b,di),(b,ds),(b,ds),(b,di)
+        # PALLAS_EQ marker: the selective scan runs as a fused kernel on
+        # TPU (state resident in VMEM across steps, as mamba's CUDA
+        # kernel does on GPU); roofline substitutes kernel traffic.
+        with jax.named_scope("PALLAS_EQ_mamba_scan"):
+            dA_t = jnp.exp(dt_t[..., None] * A[None])      # (b, di, ds)
+            dBu_t = dt_t[..., None] * B_t[:, None, :] * u_t[..., None]
+            h = dA_t * h + dBu_t                           # (b, di, ds)
+            y = jnp.einsum("bds,bs->bd", h, C_t)
+        return h, y
+
+    if h0 is None:
+        h0 = jnp.zeros((b, di, ds), dtype=u.dtype)
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (dt, B, C, u))
+    hT, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1)                             # (b, s, di)
+    return y + u * D.astype(u.dtype), hT
+
+
+def _mamba_pre(p, x, cfg):
+    di = cfg.mamba_expand * cfg.d_model
+    xz = apply_linear(p["in_proj"], x)
+    xi, z = jnp.split(xz, [di], axis=-1)
+    return xi, z
+
+
+def _mamba_ssm_params(p, xi, cfg):
+    dtr, ds = cfg.mamba_dt_rank, cfg.mamba_d_state
+    proj = apply_linear(p["x_proj"], xi)
+    dt_in, B, C = jnp.split(proj, [dtr, dtr + ds], axis=-1)
+    dt = jax.nn.softplus(apply_linear(p["dt_proj"], dt_in))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32)).astype(xi.dtype)
+    return dt, B, C, A
+
+
+def apply_mamba(p, x, cfg, *, return_state: bool = False):
+    """Training / prefill forward. x: (b, s, d). With return_state=True
+    also returns the exact decode state (conv tail + final SSM state)."""
+    xi, z = _mamba_pre(p, x, cfg)
+    xi_c = jax.nn.silu(_causal_conv(xi, p["conv_w"], p["conv_b"]))
+    dt, B, C, A = _mamba_ssm_params(p, xi_c, cfg)
+    y, hT = _ssm_scan(xi_c, dt, B, C, A, p["D"])
+    y = y * jax.nn.silu(z)
+    out = apply_linear(p["out_proj"], y)
+    if return_state:
+        conv_tail = xi[:, -(cfg.mamba_d_conv - 1):, :]
+        return out, {"conv": conv_tail, "ssm": hT}
+    return out
+
+
+def mamba_init_state(cfg, batch, dtype=jnp.bfloat16):
+    di = cfg.mamba_expand * cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, cfg.mamba_d_conv - 1, di), dtype=dtype),
+        "ssm": jnp.zeros((batch, di, cfg.mamba_d_state), dtype=dtype),
+    }
+
+
+def apply_mamba_decode(p, x, cfg, *, state):
+    """One-token step. x: (b, 1, d); O(1) in sequence length."""
+    b = x.shape[0]
+    di = cfg.mamba_expand * cfg.d_model
+    xi, z = _mamba_pre(p, x, cfg)                          # (b, 1, di)
+    conv_in = jnp.concatenate([state["conv"].astype(xi.dtype), xi], axis=1)  # (b, dc, di)
+    w = p["conv_w"].astype(xi.dtype)
+    xi_c = jnp.einsum("bcd,cd->bd", conv_in, w)[:, None, :] + p["conv_b"].astype(xi.dtype)
+    xi_c = jax.nn.silu(xi_c)
+    dt, B, C, A = _mamba_ssm_params(p, xi_c, cfg)
+    dA = jnp.exp(dt[:, 0, :, None] * A[None])              # (b, di, ds)
+    dBu = dt[:, 0, :, None] * B[:, 0, None, :] * xi_c[:, 0, :, None]
+    h = dA * state["ssm"].astype(dA.dtype) + dBu
+    y = jnp.einsum("bds,bs->bd", h, C[:, 0])[:, None, :]
+    y = (y + xi_c * p["D"].astype(xi_c.dtype)) * jax.nn.silu(z)
+    out = apply_linear(p["out_proj"], y)
+    new_state = {"conv": conv_in[:, 1:, :].astype(state["conv"].dtype), "ssm": h.astype(state["ssm"].dtype)}
+    return out, new_state

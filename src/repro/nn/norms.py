@@ -1,0 +1,49 @@
+"""RMSNorm / LayerNorm.
+
+Statistics (mean/variance) are computed in fp32 — but only as fused
+reductions; the normalized output path stays in the INPUT dtype, so a
+bf16 model keeps a bf16 residual/backward stream. This halves the
+memory-roofline traffic of the norm backward (EXPERIMENTS.md §Perf,
+llama/deepseek hillclimb iteration: fp32[b,s,d] mul/add chains -> bf16).
+Set ``FP32_NORM_PATH = True`` to restore full-fp32 normalization
+(paper-faithful numerics ablation).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+FP32_NORM_PATH = False
+
+
+def init_rmsnorm(dim: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype=dtype)}
+
+
+def apply_rmsnorm(p, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    if FP32_NORM_PATH:
+        xf = x.astype(jnp.float32)
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+        return y.astype(x.dtype)
+    # fp32 accumulation INSIDE the reduce — no fp32 (b, s, d) tensor is
+    # ever materialized (the convert fuses into the reduction)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True, dtype=jnp.float32)
+    inv = jax.lax.rsqrt(var + eps)
+    return x * inv.astype(x.dtype) * p["scale"].astype(x.dtype)
+
+
+def init_layernorm(dim: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype=dtype), "bias": jnp.zeros((dim,), dtype=dtype)}
+
+
+def apply_layernorm(p, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True) - jnp.square(mu)
+    inv = jax.lax.rsqrt(var + eps)
+    if FP32_NORM_PATH:
+        y = (xf - mu) * inv * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+        return y.astype(x.dtype)
+    y = (x - mu.astype(x.dtype)) * inv.astype(x.dtype)
+    return y * p["scale"].astype(x.dtype) + p["bias"].astype(x.dtype)

@@ -1,0 +1,58 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL's M-RoPE.
+
+M-RoPE splits the rotary dimension into (temporal, height, width)
+sections, each rotated by its own position id. For text-only input all
+three position streams are equal and M-RoPE reduces exactly to RoPE —
+which is what the vlm backbone stub exercises (the vision frontend that
+would produce distinct h/w positions is a stub per the assignment).
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """x: (b, s, h, d), positions: (b, s) int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                                  # (d/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs     # (b, s, d/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jax.Array,
+    positions: jax.Array,
+    sections: Sequence[int] = (16, 24, 24),
+    theta: float = 1_000_000.0,
+) -> jax.Array:
+    """Qwen2-VL multimodal RoPE. positions: (3, b, s) — temporal/h/w ids.
+    sections are in half-dim units and must sum to head_dim // 2."""
+    d = x.shape[-1]
+    half = d // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(d, theta)                                   # (half,)
+    # angle per half-dim slot, selecting the position stream per section
+    angles_per_stream = positions[..., None].astype(jnp.float32) * freqs  # (3, b, s, half)
+    sect_id = jnp.repeat(
+        jnp.arange(len(sections)), jnp.array(sections), total_repeat_length=half
+    )                                                              # (half,)
+    # select the stream for each half-dim slot: one-hot over streams
+    sel = jax.nn.one_hot(sect_id, len(sections), dtype=jnp.float32)  # (half, 3)
+    angles = jnp.einsum("pbsh,hp->bsh", angles_per_stream, sel)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)

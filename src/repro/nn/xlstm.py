@@ -1,0 +1,274 @@
+"""xLSTM blocks [arXiv:2405.04517]: mLSTM (matrix memory, parallel
+training form) and sLSTM (scalar memory, sequential scan).
+
+Training uses the mLSTM's quadratic *parallel* form (decay-masked
+attention-like einsum, as trained in the paper); decode uses the O(1)
+recurrent state — which is why xlstm-1.3b runs the long_500k cell.
+
+The recurrent cell matrices are dynamics-coupled, so SCT is applied to
+the surrounding up/down projections only (DESIGN.md S7).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.linear import init_linear, apply_linear
+from repro.nn.norms import init_rmsnorm, apply_rmsnorm
+
+
+# ------------------------------------------------------------- mLSTM ----
+
+def init_mlstm(key, cfg, dtype=jnp.float32):
+    """mLSTM block, projection factor 2. cfg: d_model, n_heads, mlp_rank."""
+    d = cfg.d_model
+    di = 2 * d
+    h = cfg.n_heads
+    ks = jax.random.split(key, 8)
+    r = cfg.mlp_rank
+    return {
+        "up": init_linear(ks[0], d, 2 * di, rank=r, dtype=dtype),
+        "wq": init_linear(ks[1], di, di, dtype=dtype),
+        "wk": init_linear(ks[2], di, di, dtype=dtype),
+        "wv": init_linear(ks[3], di, di, dtype=dtype),
+        "wi": init_linear(ks[4], di, h, bias=True, dtype=dtype),
+        "wf": init_linear(ks[5], di, h, bias=True, dtype=dtype),
+        "wo_gate": init_linear(ks[6], di, di, bias=True, dtype=dtype),
+        "norm": init_rmsnorm(di, dtype=dtype),
+        "down": init_linear(ks[7], di, d, rank=r, dtype=dtype),
+    }
+
+
+def _mlstm_gates_qkv(p, xu, cfg):
+    b, s, di = xu.shape
+    h = cfg.n_heads
+    dh = di // h
+    q = apply_linear(p["wq"], xu).reshape(b, s, h, dh)
+    k = apply_linear(p["wk"], xu).reshape(b, s, h, dh) / math.sqrt(dh)
+    v = apply_linear(p["wv"], xu).reshape(b, s, h, dh)
+    i_pre = apply_linear(p["wi"], xu).astype(jnp.float32)   # (b, s, h)
+    f_pre = apply_linear(p["wf"], xu).astype(jnp.float32)
+    return q, k, v, i_pre, f_pre
+
+
+MLSTM_CHUNK = 256
+
+
+def _mlstm_chunk_body(q_c, k_c, v_c, i_c, logf_c, C0, n0, m0):
+    """One chunk of the exact chunkwise-parallel mLSTM (xLSTM paper's
+    training form). q/k/v_c: (b, T, h, dh) fp32; i/logf_c: (b, T, h);
+    carried state (C0 (b,h,dh,dh), n0 (b,h,dh), m0 (b,h)) in the same
+    stabilized units as the recurrent decode cell (apply_mlstm_decode) —
+    the two forms agree exactly, which tests assert."""
+    b, T, h, dh = q_c.shape
+    bcum = jnp.cumsum(logf_c, axis=1)                        # (b, T, h)
+    btot = bcum[:, -1]                                       # (b, h)
+    # intra-chunk log weights w_{t,j} = b_t - b_j + i_j  (j <= t)
+    logD = bcum[:, :, None, :] - bcum[:, None, :, :] + i_c[:, None, :, :]
+    tpos = jnp.arange(T)
+    causal = tpos[:, None] >= tpos[None, :]
+    logD = jnp.where(causal[None, :, :, None], logD, -jnp.inf)
+    inter = bcum + m0[:, None, :]                            # (b, T, h)
+    m_loc = jnp.maximum(inter, jnp.max(logD, axis=2))        # (b, T, h)
+    w = jnp.exp(logD - m_loc[:, :, None, :])                 # (b, t, j, h)
+    inter_sc = jnp.exp(inter - m_loc)                        # (b, T, h)
+    scores = jnp.einsum("bthd,bjhd->btjh", q_c, k_c)
+    num = (
+        jnp.einsum("btjh,bjhd->bthd", w * scores, v_c)
+        + inter_sc[..., None] * jnp.einsum("bthd,bhde->bthe", q_c, C0)
+    )
+    den = (
+        jnp.einsum("btjh,btjh->bth", w, scores)
+        + inter_sc * jnp.einsum("bthd,bhd->bth", q_c, n0)
+    )
+    den = jnp.maximum(jnp.abs(den), jnp.exp(-m_loc))
+    out = num / den[..., None]                               # (b, T, h, dh)
+    # end-of-chunk state
+    a = btot[:, None, :] - bcum + i_c                        # (b, T, h)
+    m_new = jnp.maximum(btot + m0, jnp.max(a, axis=1))       # (b, h)
+    decay0 = jnp.exp(btot + m0 - m_new)
+    wa = jnp.exp(a - m_new[:, None, :])
+    C_new = decay0[..., None, None] * C0 + jnp.einsum("bjh,bjhd,bjhe->bhde", wa, k_c, v_c)
+    n_new = decay0[..., None] * n0 + jnp.einsum("bjh,bjhd->bhd", wa, k_c)
+    return out, (C_new, n_new, m_new)
+
+
+def _mlstm_core(p, xu, cfg, state=None, chunk=MLSTM_CHUNK):
+    """Chunkwise mLSTM over (b, s, di) gate inputs. Returns (y, state).
+    Peak intra tensor is (b, chunk, chunk, h) instead of (b, s, s, h) —
+    the memory-roofline fix that lets xlstm train_4k fit HBM."""
+    b, s, di = xu.shape
+    h = cfg.n_heads
+    dh = di // h
+    q, k, v, i_pre, f_pre = _mlstm_gates_qkv(p, xu, cfg)
+    q, k, v = (t.astype(jnp.float32) for t in (q, k, v))
+    logf = jax.nn.log_sigmoid(f_pre)
+    if state is None:
+        C0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+        n0 = jnp.zeros((b, h, dh), jnp.float32)
+        m0 = jnp.full((b, h), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = state["C"], state["n"], state["m"]
+
+    T = min(chunk, s)
+    if s % T != 0:
+        T = s  # fall back to one chunk (small/odd lengths)
+    nc = s // T
+
+    def to_chunks(t):
+        return jnp.moveaxis(t.reshape(b, nc, T, *t.shape[2:]), 1, 0)
+
+    xs = tuple(to_chunks(t) for t in (q, k, v, i_pre, logf))
+
+    def step(carry, xc):
+        q_c, k_c, v_c, i_c, lf_c = xc
+        # PALLAS_EQ marker: kernel-substituted in the roofline (the
+        # chunkwise mLSTM cell is the same fused-kernel shape as flash
+        # attention — decay-masked scores in VMEM; see DESIGN.md S6).
+        with jax.named_scope("PALLAS_EQ_mlstm_chunk"):
+            out, carry = _mlstm_chunk_body(q_c, k_c, v_c, i_c, lf_c, *carry)
+        return carry, out
+
+    (C, n, m), outs = jax.lax.scan(step, (C0, n0, m0), xs)
+    y = jnp.moveaxis(outs, 0, 1).reshape(b, s, h, dh)
+    return y, {"C": C, "n": n, "m": m}
+
+
+def apply_mlstm(p, x, cfg):
+    """Training forward (exact chunkwise-parallel form). x: (b, s, d)."""
+    b, s, d = x.shape
+    up = apply_linear(p["up"], x)
+    xu, z = jnp.split(up, 2, axis=-1)                       # (b, s, di) each
+    y, _ = _mlstm_core(p, xu, cfg)
+    y = y.reshape(b, s, -1).astype(x.dtype)
+    o = jax.nn.sigmoid(apply_linear(p["wo_gate"], xu))
+    y = apply_rmsnorm(p["norm"], y * o) * jax.nn.silu(z)
+    return apply_linear(p["down"], y)
+
+
+def apply_mlstm_with_state(p, x, cfg, state=None):
+    """Prefill path: same as apply_mlstm but returns the final recurrent
+    state for the decode loop."""
+    b, s, d = x.shape
+    up = apply_linear(p["up"], x)
+    xu, z = jnp.split(up, 2, axis=-1)
+    y, new_state = _mlstm_core(p, xu, cfg, state=state)
+    y = y.reshape(b, s, -1).astype(x.dtype)
+    o = jax.nn.sigmoid(apply_linear(p["wo_gate"], xu))
+    y = apply_rmsnorm(p["norm"], y * o) * jax.nn.silu(z)
+    return apply_linear(p["down"], y), new_state
+
+
+def mlstm_init_state(cfg, batch, dtype=jnp.float32):
+    di = 2 * cfg.d_model
+    h = cfg.n_heads
+    dh = di // h
+    return {
+        "C": jnp.zeros((batch, h, dh, dh), dtype=dtype),
+        "n": jnp.zeros((batch, h, dh), dtype=dtype),
+        "m": jnp.full((batch, h), -1e30, dtype=dtype),
+    }
+
+
+def apply_mlstm_decode(p, x, cfg, *, state):
+    """Recurrent single-token step — O(1) in sequence length."""
+    b = x.shape[0]
+    up = apply_linear(p["up"], x)
+    xu, z = jnp.split(up, 2, axis=-1)
+    q, k, v, i_pre, f_pre = _mlstm_gates_qkv(p, xu, cfg)
+    q, k, v = (t[:, 0].astype(jnp.float32) for t in (q, k, v))   # (b, h, dh)
+    i_pre, f_pre = i_pre[:, 0], f_pre[:, 0]                      # (b, h)
+    logf = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(logf + state["m"], i_pre)
+    f_sc = jnp.exp(logf + state["m"] - m_new)[..., None]
+    i_sc = jnp.exp(i_pre - m_new)[..., None]
+    C = f_sc[..., None] * state["C"] + i_sc[..., None] * jnp.einsum("bhk,bhv->bhkv", k, v)
+    n = f_sc * state["n"] + i_sc * k
+    num = jnp.einsum("bhk,bhkv->bhv", q, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", q, n)), jnp.exp(-m_new))
+    y = (num / den[..., None]).reshape(b, 1, -1).astype(x.dtype)
+    o = jax.nn.sigmoid(apply_linear(p["wo_gate"], xu))
+    y = apply_rmsnorm(p["norm"], y * o) * jax.nn.silu(z)
+    out = apply_linear(p["down"], y)
+    return out, {"C": C, "n": n, "m": m_new}
+
+
+# ------------------------------------------------------------- sLSTM ----
+
+def init_slstm(key, cfg, dtype=jnp.float32):
+    """sLSTM block: scalar memory with per-head recurrent mixing, plus a
+    4/3-factor gated FFN (paper's block design)."""
+    d = cfg.d_model
+    h = cfg.n_heads
+    dh = d // h
+    ks = jax.random.split(key, 7)
+    r = cfg.mlp_rank
+    dff = int(4 * d / 3)
+    return {
+        "wx": init_linear(ks[0], d, 4 * d, bias=True, dtype=dtype),   # i,f,z,o pre-acts
+        "wr": (jax.random.normal(ks[1], (h, dh, 4 * dh), dtype=jnp.float32) * dh ** -0.5).astype(dtype),
+        "norm": init_rmsnorm(d, dtype=dtype),
+        "ff_up": init_linear(ks[2], d, 2 * dff, rank=r, dtype=dtype),
+        "ff_down": init_linear(ks[3], dff, d, rank=r, dtype=dtype),
+    }
+
+
+def _slstm_cell(p, cfg, xg, state):
+    """One time step. xg: (b, 4d) input pre-activations; state dict with
+    h,c,n,m each (b, h, dh) / (b, h)."""
+    b = xg.shape[0]
+    nh = cfg.n_heads
+    dh = cfg.d_model // nh
+    # recurrent contribution: per-head h @ wr -> (b, h, 4dh)
+    rec = jnp.einsum("bhd,hdg->bhg", state["h"], p["wr"].astype(state["h"].dtype))
+    pre = xg.reshape(b, nh, 4 * dh) + rec
+    i_pre, f_pre, z_pre, o_pre = jnp.split(pre.astype(jnp.float32), 4, axis=-1)
+    # stabilized exponential gating (per head-dim)
+    logf = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(logf + state["m"], i_pre)
+    i_sc = jnp.exp(i_pre - m_new)
+    f_sc = jnp.exp(logf + state["m"] - m_new)
+    c = f_sc * state["c"] + i_sc * jnp.tanh(z_pre)
+    n = f_sc * state["n"] + i_sc
+    hat = c / jnp.maximum(n, 1.0)
+    h_new = jax.nn.sigmoid(o_pre) * hat
+    return {"h": h_new.astype(state["h"].dtype), "c": c, "n": n, "m": m_new}
+
+
+def slstm_init_state(cfg, batch, dtype=jnp.float32):
+    nh = cfg.n_heads
+    dh = cfg.d_model // nh
+    z = jnp.zeros((batch, nh, dh), dtype=dtype)
+    return {"h": z, "c": z, "n": z, "m": jnp.full((batch, nh, dh), -1e30, dtype=dtype)}
+
+
+def _slstm_ffn(p, y):
+    u = apply_linear(p["ff_up"], y)
+    a, g = jnp.split(u, 2, axis=-1)
+    return apply_linear(p["ff_down"], jax.nn.gelu(a) * g)
+
+
+def apply_slstm(p, x, cfg):
+    """Training forward: sequential scan over time. x: (b, s, d)."""
+    b, s, d = x.shape
+    xg = apply_linear(p["wx"], x)                          # (b, s, 4d)
+    state = slstm_init_state(cfg, b, dtype=jnp.float32)
+
+    def step(st, xg_t):
+        st = _slstm_cell(p, cfg, xg_t, st)
+        return st, st["h"]
+
+    _, hs = jax.lax.scan(step, state, jnp.moveaxis(xg, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).reshape(b, s, d).astype(x.dtype)
+    y = apply_rmsnorm(p["norm"], y)
+    return _slstm_ffn(p, y)
+
+
+def apply_slstm_decode(p, x, cfg, *, state):
+    xg = apply_linear(p["wx"], x)[:, 0]                    # (b, 4d)
+    state = _slstm_cell(p, cfg, xg, state)
+    y = state["h"].reshape(x.shape[0], 1, cfg.d_model).astype(x.dtype)
+    y = apply_rmsnorm(p["norm"], y)
+    return _slstm_ffn(p, y), state

@@ -1,0 +1,21 @@
+from repro.optim.adamw import adamw_init, adamw_update, AdamWConfig
+from repro.optim.schedule import make_schedule, ScheduleConfig
+from repro.optim.clip import global_norm, clip_by_global_norm
+from repro.optim.sct_optimizer import (
+    SCTOptimizer,
+    make_sct_optimizer,
+    TrainState,
+)
+
+__all__ = [
+    "adamw_init",
+    "adamw_update",
+    "AdamWConfig",
+    "make_schedule",
+    "ScheduleConfig",
+    "global_norm",
+    "clip_by_global_norm",
+    "SCTOptimizer",
+    "make_sct_optimizer",
+    "TrainState",
+]

@@ -1,0 +1,85 @@
+"""AdamW from scratch (no optax in this environment), with per-leaf
+learning-rate scaling — the paper's 'per-component learning rate
+scheduling' next step (S4.3): dense attention/embeddings can train at
+the dense LR while spectral factors get a higher one.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 5e-4                  # paper's SCT learning rate
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    # per-component scaling (multiplies lr on the matching leaves):
+    spectral_lr_scale: float = 1.0    # U, V factors
+    sv_lr_scale: float = 1.0          # singular values s
+    dense_lr_scale: float = 1.0       # everything else
+    decay_spectral: bool = False      # weight decay fights orthonormality;
+                                      # retraction would undo it anyway
+
+
+def adamw_init(params: Any) -> dict:
+    zeros = lambda p: jax.tree.map(lambda x: jnp.zeros_like(x, dtype=jnp.float32), p)
+    return {"mu": zeros(params), "nu": zeros(params), "count": jnp.zeros((), jnp.int32)}
+
+
+def _leaf_kind_tree(params: Any):
+    """0 = dense, 1 = spectral U/V, 2 = spectral s. Mirrors params."""
+    from repro.core.spectral import is_spectral
+
+    def walk(tree):
+        if is_spectral(tree):
+            return {k: (1 if k in ("U", "V") else 2 if k == "s" else 0) for k in tree}
+        if isinstance(tree, dict):
+            return {k: walk(v) for k, v in tree.items()}
+        if isinstance(tree, (list, tuple)):
+            return type(tree)(walk(v) for v in tree)
+        return 0
+
+    return walk(params)
+
+
+def adamw_update(params: Any, grads: Any, state: dict, cfg: AdamWConfig,
+                 lr_t: jax.Array | float | None = None):
+    """One AdamW step. lr_t overrides cfg.lr (schedule value).
+    Returns (new_params, new_state)."""
+    count = state["count"] + 1
+    b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+    base_lr = cfg.lr if lr_t is None else lr_t
+    kinds = _leaf_kind_tree(params)
+
+    def upd(p, g, mu, nu, kind):
+        g = g.astype(jnp.float32)
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1 - cfg.b2) * (g * g)
+        mhat = mu / b1c
+        nhat = nu / b2c
+        scale = {0: cfg.dense_lr_scale, 1: cfg.spectral_lr_scale, 2: cfg.sv_lr_scale}[kind]
+        step = mhat / (jnp.sqrt(nhat) + cfg.eps)
+        wd = cfg.weight_decay
+        if kind in (1, 2) and not cfg.decay_spectral:
+            wd = 0.0
+        new_p = p.astype(jnp.float32) - base_lr * scale * (step + wd * p.astype(jnp.float32))
+        return new_p.astype(p.dtype), mu, nu
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_mu = jax.tree.leaves(state["mu"])
+    flat_nu = jax.tree.leaves(state["nu"])
+    flat_k = jax.tree.leaves(kinds)
+    out = [upd(p, g, mu, nu, k) for p, g, mu, nu, k in
+           zip(flat_p, flat_g, flat_mu, flat_nu, flat_k)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_mu = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_nu = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_params, {"mu": new_mu, "nu": new_nu, "count": count}

@@ -1,0 +1,36 @@
+"""LR schedules: linear warmup + cosine decay (the standard pre-training
+schedule; the paper's diagnosed bottleneck is exactly this knob)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleConfig:
+    peak_lr: float = 5e-4
+    warmup_steps: int = 100
+    total_steps: int = 2000
+    final_fraction: float = 0.1
+    kind: str = "cosine"  # cosine | linear | constant
+
+
+def make_schedule(cfg: ScheduleConfig):
+    def schedule(step):
+        # 1-indexed so the first optimizer step gets a nonzero LR
+        step = jnp.asarray(step, jnp.float32) + 1.0
+        warm = cfg.peak_lr * jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+        if cfg.kind == "constant":
+            return warm
+        frac = jnp.clip(
+            (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+            0.0, 1.0,
+        )
+        if cfg.kind == "cosine":
+            decay = cfg.final_fraction + (1 - cfg.final_fraction) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        else:
+            decay = 1.0 - (1 - cfg.final_fraction) * frac
+        return jnp.where(step < cfg.warmup_steps, warm, cfg.peak_lr * decay)
+
+    return schedule

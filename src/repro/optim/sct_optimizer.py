@@ -1,0 +1,83 @@
+"""The SCT training step as an optimizer wrapper: AdamW on all params,
+then Stiefel retraction of every spectral U/V (paper Algorithm 1).
+
+``retract_every`` > 1 is a beyond-paper optimization: orthogonality
+drift per AdamW step is O(lr), so retracting every r steps keeps the
+error bounded at O(r*lr) while cutting the retraction cost (40-50% of
+the paper's 70B step time) by r. r=1 is the faithful default.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tree import retract_tree
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.clip import clip_by_global_norm
+from repro.optim.schedule import ScheduleConfig, make_schedule
+
+TrainState = dict  # {"params", "opt", "step"}
+
+
+@dataclasses.dataclass(frozen=True)
+class SCTOptimizer:
+    adamw: AdamWConfig
+    schedule: ScheduleConfig
+    retraction: str = "qr"
+    retract_every: int = 1
+    clip_norm: float = 1.0
+    retract_axis_name: Optional[str] = None   # set inside shard_map
+
+    def init(self, params: Any) -> TrainState:
+        return {
+            "params": params,
+            "opt": adamw_init(params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def apply(self, state: TrainState, grads: Any) -> TrainState:
+        lr_t = make_schedule(self.schedule)(state["step"])
+        if self.clip_norm:
+            grads, _ = clip_by_global_norm(grads, self.clip_norm)
+        params, opt = adamw_update(state["params"], grads, state["opt"], self.adamw, lr_t)
+        step = state["step"] + 1
+        if self.retract_every == 1:
+            params = retract_tree(params, self.retraction, self.retract_axis_name)
+        else:
+            params = jax.lax.cond(
+                step % self.retract_every == 0,
+                lambda p: retract_tree(p, self.retraction, self.retract_axis_name),
+                lambda p: p,
+                params,
+            )
+        return {"params": params, "opt": opt, "step": step}
+
+
+def make_sct_optimizer(
+    model_cfg=None,
+    *,
+    lr: float = 5e-4,
+    warmup: int = 100,
+    total_steps: int = 2000,
+    clip_norm: float = 1.0,
+    spectral_lr_scale: float = 1.0,
+    dense_lr_scale: float = 1.0,
+    weight_decay: float = 0.01,
+) -> SCTOptimizer:
+    retraction = model_cfg.sct.retraction if model_cfg is not None else "qr"
+    retract_every = model_cfg.sct.retract_every if model_cfg is not None else 1
+    return SCTOptimizer(
+        adamw=AdamWConfig(
+            lr=lr,
+            weight_decay=weight_decay,
+            spectral_lr_scale=spectral_lr_scale,
+            dense_lr_scale=dense_lr_scale,
+        ),
+        schedule=ScheduleConfig(peak_lr=lr, warmup_steps=warmup, total_steps=total_steps),
+        retraction=retraction,
+        retract_every=retract_every,
+        clip_norm=clip_norm,
+    )

@@ -1,0 +1,8 @@
+from repro.roofline.analysis import (
+    roofline_terms,
+    collective_bytes,
+    model_flops,
+    HW,
+)
+
+__all__ = ["roofline_terms", "collective_bytes", "model_flops", "HW"]

@@ -1,0 +1,420 @@
+"""Loop-aware HLO cost model.
+
+``compiled.cost_analysis()`` visits each while-loop body ONCE (verified
+empirically: a scan of 8 matmuls reports 1 matmul of FLOPs), so for
+scan-based models — ours scan over layers, microbatches, attention
+chunks — both FLOPs and collective bytes are undercounted by the trip
+counts. The optimized HLO keeps ``backend_config={"known_trip_count":
+{"n": ...}}`` on while ops, so we parse the module text and account
+properly:
+
+  flops       : 2 * prod(out) * prod(contracting dims) per dot
+                (MXU flops; elementwise ALU ops are not counted — they
+                are bandwidth-, not compute-, limited on TPU)
+  bytes       : operands + outputs per top-level op (fusion internals
+                excluded — the XLA HBM-traffic model)
+  collectives : output bytes per collective op, by kind
+
+All values are per-device (the module is the post-GSPMD partitioned
+module) and include loop multipliers, including nested loops.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2, "s32": 4,
+    "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_ARRAY_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "collective-broadcast",
+)
+
+# one HLO instruction: [ROOT] %name = <shape> opcode(operands), attrs
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$"
+)
+_COMP_RE = re.compile(r"^\s*(ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->\s*.+\s*\{\s*$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _ARRAY_RE.finditer(shape_str):
+        nb = _DTYPE_BYTES.get(m.group(1))
+        if nb is None:
+            continue
+        n = 1
+        for d in m.group(2).split(","):
+            if d:
+                n *= int(d)
+        total += n * nb
+    return total
+
+
+def _shape_elems(shape_str: str) -> int:
+    total = 0
+    for m in _ARRAY_RE.finditer(shape_str):
+        n = 1
+        for d in m.group(2).split(","):
+            if d:
+                n *= int(d)
+        total += n
+    return total
+
+
+def _first_array(shape_str: str) -> Optional[Tuple[str, List[int]]]:
+    m = _ARRAY_RE.search(shape_str)
+    if not m:
+        return None
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    return m.group(1), dims
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    shape: str
+    opcode: str
+    rest: str  # operands + attrs (raw tail of the line)
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Cost", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        for k, v in other.coll.items():
+            self.coll[k] = self.coll.get(k, 0.0) + v * mult
+
+    @property
+    def coll_bytes(self) -> float:
+        return sum(v for k, v in self.coll.items() if not k.endswith("_count"))
+
+
+KERNEL_MARKER = "PALLAS_EQ"
+
+
+class HloCostModel:
+    """Set ``kernel_substitution=False`` to cost the raw XLA fallback
+    (the 'as-lowered' number reported alongside the kernel-substituted
+    one in EXPERIMENTS.md §Roofline)."""
+
+    def __init__(self, hlo_text: str, kernel_substitution: bool = True):
+        self.comps: Dict[str, List[_Op]] = {}
+        self.kernel_substitution = kernel_substitution
+        self._parse(hlo_text)
+        self._memo: Dict[str, Cost] = {}
+        self._shapes: Dict[str, Dict[str, str]] = {}
+        self._marked_comp: Dict[str, bool] = {}
+
+    def _op_marked(self, op: _Op) -> bool:
+        """Op belongs to a PALLAS_EQ named scope: on TPU it executes
+        inside a fused Pallas kernel (VMEM-resident intermediates), so
+        its HBM-byte charge is suppressed; FLOPs still count."""
+        if not self.kernel_substitution:
+            return False
+        return KERNEL_MARKER in op.rest
+
+    def _comp_marked(self, comp: str) -> bool:
+        """A called computation counts as kernel-interior if any of its
+        ops carries the marker (fusions inherit metadata from a
+        representative op)."""
+        if comp not in self._marked_comp:
+            self._marked_comp[comp] = any(
+                KERNEL_MARKER in op.rest for op in self.comps.get(comp, [])
+            )
+        return self._marked_comp[comp]
+
+    def _parse(self, text: str) -> None:
+        current: Optional[str] = None
+        for line in text.splitlines():
+            mc = _COMP_RE.match(line)
+            if mc:
+                current = mc.group(2)
+                self.comps[current] = []
+                continue
+            if current is None:
+                continue
+            if line.strip() == "}":
+                current = None
+                continue
+            mo = _OP_RE.match(line)
+            if mo:
+                self.comps[current].append(
+                    _Op(mo.group(1), mo.group(2).strip(), mo.group(3), mo.group(4))
+                )
+
+    # ------------------------------------------------------------------
+    def _sym(self, comp: str) -> Dict[str, str]:
+        if comp not in self._shapes:
+            self._shapes[comp] = {op.name: op.shape for op in self.comps.get(comp, [])}
+        return self._shapes[comp]
+
+    def _dot_flops(self, comp: str, op: _Op) -> float:
+        out = _first_array(op.shape)
+        if out is None:
+            return 0.0
+        _, out_dims = out
+        n_out = 1
+        for d in out_dims:
+            n_out *= d
+        # contracted size from lhs operand shape + contracting dims
+        mct = _CONTRACT_RE.search(op.rest)
+        k = 1
+        if mct:
+            lhs_name = op.rest.split("(", 0)[0] if False else None
+            # operands are the leading %refs of rest
+            ops = re.findall(r"%([\w.\-]+)", op.rest.split(")")[0])
+            if ops:
+                lhs_shape = self._sym(comp).get(ops[0])
+                if lhs_shape:
+                    arr = _first_array(lhs_shape)
+                    if arr:
+                        dims = arr[1]
+                        for ci in mct.group(1).split(","):
+                            if ci:
+                                ci = int(ci)
+                                if ci < len(dims):
+                                    k *= dims[ci]
+        return 2.0 * n_out * k
+
+    def _operand_names(self, op: _Op) -> List[str]:
+        return re.findall(r"%([\w.\-]+)", op.rest.split(")")[0])
+
+    def _operand_bytes(self, comp: str, op: _Op) -> float:
+        total = 0
+        sym = self._sym(comp)
+        for o in self._operand_names(op):
+            sh = sym.get(o)
+            if sh:
+                total += _shape_bytes(sh)
+        return float(total)
+
+    def _fusion_bytes(self, comp: str, op: _Op) -> float:
+        """HBM traffic of a fusion: output + operands, EXCEPT operands
+        that are only dynamic-sliced/gathered inside (a scanned layer
+        stack reads one layer's slice per iteration, not the whole
+        stack — charging full operands would overcount bytes by ~L)."""
+        called = _CALLS_RE.search(op.rest)
+        sym = self._sym(comp)
+        operands = self._operand_names(op)
+        sliced_params = {}
+        dus_aliased_params = set()
+        out_bytes = float(_shape_bytes(op.shape))
+        if called:
+            inner = self.comps.get(called.group(1), [])
+            param_ids = {}
+            for iop in inner:
+                if iop.opcode == "parameter":
+                    m = re.match(r"(\d+)", iop.rest)
+                    if m:
+                        param_ids[iop.name] = int(m.group(1))
+            for iop in inner:
+                if iop.opcode in ("dynamic-slice", "gather"):
+                    names = self._operand_names(iop)
+                    if names and names[0] in param_ids:
+                        idx = param_ids[names[0]]
+                        prev = sliced_params.get(idx, 0.0)
+                        sliced_params[idx] = prev + _shape_bytes(iop.shape)
+                elif iop.opcode == "dynamic-update-slice":
+                    # aliased in-place update fused at the root (KV cache
+                    # write / scan-carry stacking): traffic ~ updates,
+                    # not the full buffer
+                    names = self._operand_names(iop)
+                    if names and _shape_elems(iop.shape) == _shape_elems(op.shape):
+                        if names[0] in param_ids:
+                            dus_aliased_params.add(param_ids[names[0]])
+                        upd = names[1] if len(names) > 1 else None
+                        inner_sym = {o2.name: o2.shape for o2 in inner}
+                        upd_b = _shape_bytes(inner_sym.get(upd, "")) if upd else 0
+                        out_bytes = 3.0 * upd_b
+        total = out_bytes
+        aliased_by_shape_done = not dus_aliased_params and out_bytes != _shape_bytes(op.shape)
+        for i, o in enumerate(operands):
+            sh = sym.get(o)
+            if not sh:
+                continue
+            if i in dus_aliased_params:
+                continue
+            # alias fallback: when the inner DUS matched but its operand
+            # wasn't a direct parameter, skip the one operand that has
+            # the same element count as the (aliased) output buffer
+            if aliased_by_shape_done and _shape_elems(sh) == _shape_elems(op.shape):
+                aliased_by_shape_done = False
+                continue
+            if i in sliced_params:
+                total += min(sliced_params[i], _shape_bytes(sh))
+            else:
+                total += _shape_bytes(sh)
+        return total
+
+    def comp_cost(self, comp: str) -> Cost:
+        if comp in self._memo:
+            return self._memo[comp]
+        # pre-seed to break recursion cycles defensively
+        self._memo[comp] = Cost()
+        cost = Cost()
+        for op in self.comps.get(comp, []):
+            oc = op.opcode
+            if oc == "while":
+                n = 1
+                mt = _TRIP_RE.search(op.rest)
+                if mt:
+                    n = int(mt.group(1))
+                body = _BODY_RE.search(op.rest)
+                cond = _COND_RE.search(op.rest)
+                if body:
+                    cost.add(self.comp_cost(body.group(1)), n)
+                if cond:
+                    cost.add(self.comp_cost(cond.group(1)), n)
+            elif oc in ("fusion", "call", "async-start", "custom-call"):
+                mc = _CALLS_RE.search(op.rest)
+                marked = self._op_marked(op)
+                if mc:
+                    sub = self.comp_cost(mc.group(1))
+                    # fusion: internal flops count; internal bytes don't
+                    cost.flops += sub.flops
+                    for k, v in sub.coll.items():
+                        cost.coll[k] = cost.coll.get(k, 0.0) + v
+                    marked = marked or self._comp_marked(mc.group(1))
+                if not marked:
+                    cost.bytes += self._fusion_bytes(comp, op)
+            elif oc in ("dynamic-slice", "gather"):
+                # reads only the slice, not the full operand
+                if not self._op_marked(op):
+                    cost.bytes += 2.0 * _shape_bytes(op.shape)
+            elif oc in ("scatter", "dynamic-update-slice"):
+                # aliased in-place update: traffic ~ the updates, not the
+                # full buffer (KV-cache writes inside the layer scan!)
+                if not self._op_marked(op):
+                    names = self._operand_names(op)
+                    upd = names[-1] if names else None
+                    upd_b = _shape_bytes(self._sym(comp).get(upd, "")) if upd else 0
+                    cost.bytes += 3.0 * upd_b
+            elif oc == "conditional":
+                for m in re.finditer(r"(?:true_computation|false_computation|branch_computations=\{)([\w.\-,% ]+)", op.rest):
+                    for sub in re.findall(r"[\w.\-]+", m.group(1)):
+                        cost.add(self.comp_cost(sub), 1.0)
+                cost.bytes += _shape_bytes(op.shape)
+            elif oc in ("dot", "dot-general"):
+                cost.flops += self._dot_flops(comp, op)
+                if not self._op_marked(op):
+                    cost.bytes += _shape_bytes(op.shape) + self._operand_bytes(comp, op)
+            elif oc == "convolution":
+                # treat like dot via output x window (rare here: stubs)
+                cost.bytes += _shape_bytes(op.shape) + self._operand_bytes(comp, op)
+            elif any(oc == c or oc == c + "-start" for c in _COLLECTIVES):
+                kind = oc[:-6] if oc.endswith("-start") else oc
+                nbytes = _shape_bytes(op.shape)
+                cost.coll[kind] = cost.coll.get(kind, 0.0) + nbytes
+                cost.coll[kind + "_count"] = cost.coll.get(kind + "_count", 0.0) + 1
+                cost.bytes += nbytes
+            elif oc in ("parameter", "constant", "get-tuple-element", "tuple",
+                        "bitcast", "after-all", "all-reduce-done",
+                        "all-gather-done", "async-done", "copy-done"):
+                continue
+            else:
+                # plain op at module level (rare post-fusion): memory only
+                if not self._op_marked(op):
+                    cost.bytes += _shape_bytes(op.shape) + self._operand_bytes(comp, op)
+        self._memo[comp] = cost
+        return cost
+
+    def entry_cost(self) -> Cost:
+        # the ENTRY computation is conventionally named 'main...' — find
+        # the computation that no other computation references
+        referenced = set()
+        for ops in self.comps.values():
+            for op in ops:
+                for pat in (_CALLS_RE, _BODY_RE, _COND_RE):
+                    m = pat.search(op.rest)
+                    if m:
+                        referenced.add(m.group(1))
+        entries = [c for c in self.comps if c not in referenced and c.startswith("main")]
+        if not entries:
+            entries = [c for c in self.comps if c not in referenced]
+        cost = Cost()
+        for e in entries[:1] if entries else []:
+            cost.add(self.comp_cost(e))
+        return cost
+
+
+def analyze_hlo(hlo_text: str) -> Cost:
+    return HloCostModel(hlo_text).entry_cost()
+
+
+def top_bytes_contributors(hlo_text: str, n: int = 25):
+    """Debug: (bytes_with_multipliers, comp, op, opcode) heaviest first —
+    the §Perf hypothesis generator (what to optimize next)."""
+    m = HloCostModel(hlo_text)
+    contrib: Dict[Tuple[str, str, str], float] = {}
+
+    def walk(comp: str, mult: float):
+        for op in m.comps.get(comp, []):
+            oc = op.opcode
+            if oc == "while":
+                nmt = _TRIP_RE.search(op.rest)
+                nn = int(nmt.group(1)) if nmt else 1
+                bm = _BODY_RE.search(op.rest)
+                cm = _COND_RE.search(op.rest)
+                if bm:
+                    walk(bm.group(1), mult * nn)
+                if cm:
+                    walk(cm.group(1), mult * nn)
+                continue
+            key = (comp, op.name, oc)
+            if oc in ("fusion", "call", "async-start", "custom-call"):
+                marked = m._op_marked(op)
+                mc = _CALLS_RE.search(op.rest)
+                if mc:
+                    marked = marked or m._comp_marked(mc.group(1))
+                if not marked:
+                    contrib[key] = contrib.get(key, 0.0) + m._fusion_bytes(comp, op) * mult
+            elif oc in ("dynamic-slice", "gather"):
+                if not m._op_marked(op):
+                    contrib[key] = contrib.get(key, 0.0) + 2.0 * _shape_bytes(op.shape) * mult
+            elif oc in ("scatter", "dynamic-update-slice"):
+                if not m._op_marked(op):
+                    names = m._operand_names(op)
+                    upd = names[-1] if names else None
+                    ub = _shape_bytes(m._sym(comp).get(upd, "")) if upd else 0
+                    contrib[key] = contrib.get(key, 0.0) + 3.0 * ub * mult
+            elif oc in ("parameter", "constant", "get-tuple-element", "tuple",
+                        "bitcast", "after-all"):
+                continue
+            else:
+                if not m._op_marked(op):
+                    contrib[key] = contrib.get(key, 0.0) + (
+                        _shape_bytes(op.shape) + m._operand_bytes(comp, op)
+                    ) * mult
+
+    referenced = set()
+    for ops in m.comps.values():
+        for op in ops:
+            for pat in (_CALLS_RE, _BODY_RE, _COND_RE):
+                mm = pat.search(op.rest)
+                if mm:
+                    referenced.add(mm.group(1))
+    entries = [c for c in m.comps if c not in referenced and c.startswith("main")]
+    if not entries:
+        entries = [c for c in m.comps if c not in referenced]
+    if entries:
+        walk(entries[0], 1.0)
+    return sorted(((v, *k) for k, v in contrib.items()), reverse=True)[:n]

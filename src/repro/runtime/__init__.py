@@ -1,0 +1,10 @@
+from repro.runtime.train_loop import TrainLoop, TrainLoopConfig
+from repro.runtime.compression import compress_int8, decompress_int8, ErrorFeedbackState
+
+__all__ = [
+    "TrainLoop",
+    "TrainLoopConfig",
+    "compress_int8",
+    "decompress_int8",
+    "ErrorFeedbackState",
+]

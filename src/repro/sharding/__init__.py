@@ -1,0 +1,18 @@
+from repro.sharding.rules import param_pspecs, set_current_mesh, constrain, dp_axes
+from repro.sharding.partition import (
+    state_pspecs,
+    batch_pspecs,
+    decode_state_pspecs,
+    named_shardings,
+)
+
+__all__ = [
+    "param_pspecs",
+    "set_current_mesh",
+    "constrain",
+    "dp_axes",
+    "state_pspecs",
+    "batch_pspecs",
+    "decode_state_pspecs",
+    "named_shardings",
+]

@@ -1,0 +1,112 @@
+"""Whole-state and input partition specs per (config, shape, mesh)."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config.model_config import ModelConfig
+from repro.config.shapes import ShapeSpec
+from repro.sharding.rules import param_pspecs, dp_axes, MODEL
+
+
+def state_pspecs(state_like: Any, n_model: int, n_data: int = 16) -> Any:
+    """TrainState {'params','opt':{'mu','nu','count'},'step'} specs:
+    optimizer moments mirror the parameter sharding exactly."""
+    pspec = param_pspecs(state_like["params"], n_model, n_data)
+    return {
+        "params": pspec,
+        "opt": {
+            "mu": param_pspecs(state_like["opt"]["mu"], n_model, n_data),
+            "nu": param_pspecs(state_like["opt"]["nu"], n_model, n_data),
+            "count": P(),
+        },
+        "step": P(),
+    }
+
+
+def batch_axes(global_batch: int, mesh):
+    """The mesh axes the batch dim shards over: all DP axes when the
+    batch divides them, 'data' alone as a fallback, else unsharded."""
+    dp = dp_axes(mesh)
+    n_dp = 1
+    for a in dp:
+        n_dp *= mesh.shape[a]
+    if dp and global_batch % n_dp == 0:
+        return dp
+    if "data" in mesh.axis_names and global_batch % mesh.shape["data"] == 0:
+        return ("data",)
+    return None
+
+
+def batch_pspecs(cfg: ModelConfig, shape: ShapeSpec, mesh) -> Any:
+    bt = batch_axes(shape.global_batch, mesh)
+
+    specs = {}
+    if shape.kind == "train":
+        specs["tokens"] = P(bt, None)
+        specs["labels"] = P(bt, None)
+        if cfg.family == "encdec":
+            specs["encoder_frames"] = P(bt, None, None)
+        return specs
+    if shape.kind == "prefill":
+        specs["tokens"] = P(bt, None)
+        if cfg.family == "encdec":
+            specs["encoder_frames"] = P(bt, None, None)
+        return specs
+    # decode
+    specs["tokens"] = P(bt, None)
+    specs["cache_len"] = P()
+    specs["state"] = decode_state_pspecs(cfg, shape, mesh, bt)
+    if cfg.family == "encdec":
+        specs["encoder_out"] = P(bt, None, None)
+    return specs
+
+
+def decode_state_pspecs(cfg: ModelConfig, shape: ShapeSpec, mesh, bt) -> Any:
+    """Decode caches: batch-shard when the batch divides the DP axes;
+    otherwise (long_500k, batch=1) shard the cache *sequence* axis over
+    'data' (sequence parallelism for the KV cache)."""
+    from repro.models.model import decode_state_specs
+
+    specs = decode_state_specs(cfg, batch=shape.global_batch, max_seq=shape.seq_len)
+    seq_shard = bt is None  # batch unshardable -> shard cache seq over data
+
+    def spec_for(path, leaf):
+        shp = leaf.shape
+        nd = len(shp)
+        # KV caches: (L, b, S, ...) — attn k/v/ckv/krope
+        tail = path.split("/")[-1]
+        if tail in ("k", "v", "ckv", "krope"):
+            out = [None] * nd
+            out[1] = bt
+            if seq_shard and shp[2] % mesh.shape.get("data", 1) == 0:
+                out[2] = "data"
+            return P(*out)
+        # recurrent states: (P, n, b, ...) or (P, b, ...); shard batch
+        # axis if possible, model-dim channels over 'model' where they
+        # divide (mamba di)
+        out = [None] * nd
+        # find the batch axis: it equals shape.global_batch
+        for i, d in enumerate(shp):
+            if d == shape.global_batch and bt is not None:
+                out[i] = bt
+                break
+        return P(*out)
+
+    def walk(tree, path=""):
+        if isinstance(tree, dict):
+            return {k: walk(v, f"{path}/{k}" if path else k) for k, v in tree.items()}
+        return spec_for(path, tree)
+
+    return walk(specs)
+
+
+def named_shardings(pspecs: Any, mesh) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        pspecs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

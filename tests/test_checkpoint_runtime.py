@@ -1,0 +1,132 @@
+"""Checkpoint + fault-tolerant runtime tests: roundtrip, rotation,
+crash/restart bitwise continuation, failure injection, straggler
+monitoring, gradient compression."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, save_pytree, load_pytree, tree_equal
+from repro.config import get_config
+from repro.data.synthetic import SyntheticLMDataset
+from repro.launch.steps import make_train_step
+from repro.models.model import init_model
+from repro.optim import make_sct_optimizer
+from repro.runtime.train_loop import TrainLoop, TrainLoopConfig
+from repro.runtime.compression import (
+    compress_int8,
+    decompress_int8,
+    init_error_feedback,
+)
+
+
+def test_pytree_roundtrip(tmp_path, key):
+    tree = {
+        "a": jax.random.normal(key, (4, 5)),
+        "nested": {"b": jnp.arange(7), "c": (jnp.ones((2,)), jnp.zeros((3,)))},
+    }
+    p = str(tmp_path / "ck.npz")
+    save_pytree(tree, p)
+    out = load_pytree(p)
+    assert tree_equal(tree, out)
+    assert isinstance(out["nested"]["c"], tuple)
+
+
+def test_manager_rotation(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    for s in (10, 20, 30, 40):
+        mgr.save(s, {"x": jnp.full((2,), s)})
+    assert mgr.list_steps() == [30, 40]
+    step, state = mgr.restore_latest()
+    assert step == 40 and float(state["x"][0]) == 40
+
+
+def _make_loop(tmp_path, cfg, total=12, ckpt_every=4, failure_hook=None,
+               deadline=None):
+    opt = make_sct_optimizer(cfg, lr=1e-3, warmup=2, total_steps=total)
+    step_fn = jax.jit(make_train_step(cfg, opt))
+    ds = SyntheticLMDataset(vocab=cfg.vocab, seq_len=16, seed=0)
+
+    def batches(start):
+        step = start
+        while True:
+            t, l = ds.batch(step, 4)
+            yield {"tokens": jnp.asarray(t), "labels": jnp.asarray(l)}
+            step += 1
+
+    def init_state():
+        return opt.init(init_model(jax.random.PRNGKey(0), cfg))
+
+    return TrainLoop(
+        step_fn=step_fn,
+        batch_iter_factory=batches,
+        ckpt_dir=str(tmp_path),
+        cfg=TrainLoopConfig(total_steps=total, checkpoint_every=ckpt_every,
+                            step_deadline_s=deadline, max_restarts=3),
+        init_state_fn=init_state,
+        failure_hook=failure_hook,
+    )
+
+
+def test_restart_is_bitwise_identical(tmp_path):
+    """Train 12 steps straight vs. train-8/crash/restart: identical."""
+    cfg = get_config("smollm2-1.7b", reduced=True)
+    straight = _make_loop(tmp_path / "a", cfg).run()
+
+    crashed = {"done": False}
+
+    def bomb(step):
+        if step == 8 and not crashed["done"]:
+            crashed["done"] = True
+            raise RuntimeError("injected node failure")
+
+    loop = _make_loop(tmp_path / "b", cfg, failure_hook=bomb)
+    resumed = loop.run()
+    assert loop.restarts == 1
+    assert tree_equal(straight["params"], resumed["params"])
+    assert int(straight["step"]) == int(resumed["step"]) == 12
+
+
+def test_too_many_failures_raises(tmp_path):
+    cfg = get_config("smollm2-1.7b", reduced=True)
+
+    def always_bomb(step):
+        raise RuntimeError("persistent failure")
+
+    loop = _make_loop(tmp_path, cfg, failure_hook=always_bomb)
+    with pytest.raises(RuntimeError):
+        loop.run()
+
+
+def test_straggler_detection(tmp_path):
+    cfg = get_config("smollm2-1.7b", reduced=True)
+    loop = _make_loop(tmp_path, cfg, total=4, deadline=1e-9)
+    loop.run()
+    assert loop.straggler_steps == 4  # every step 'misses' a 1ns deadline
+
+
+def test_elastic_reshard_roundtrip(tmp_path, key):
+    """Checkpoints are mesh-agnostic: save plain, load with explicit
+    (single-device) shardings — the elastic-scaling path."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    tree = {"w": jax.random.normal(key, (8, 4))}
+    p = str(tmp_path / "ck.npz")
+    save_pytree(tree, p)
+    mesh = jax.make_mesh((1,), ("data",))
+    sh = {"w": NamedSharding(mesh, P(None, None))}
+    out = load_pytree(p, shardings=sh)
+    assert tree_equal(tree, out)
+    assert out["w"].sharding == sh["w"]
+
+
+def test_int8_compression_error_feedback(key):
+    g = jax.random.normal(key, (256,))
+    q, scale = compress_int8(g)
+    rec = decompress_int8(q, scale)
+    rel = float(jnp.linalg.norm(rec - g) / jnp.linalg.norm(g))
+    assert rel < 0.01  # int8 quantization error ~0.4% for gaussian
+    ef = init_error_feedback({"g": g})
+    assert float(jnp.max(jnp.abs(ef.residual["g"]))) == 0.0

@@ -1,0 +1,114 @@
+"""Core SCT unit + property tests: spectral parameterization, truncated
+SVD conversion, Eckart-Young optimality (hypothesis), storage math."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    spectral_init,
+    spectral_apply,
+    spectral_param_count,
+    dense_param_count,
+    dense_to_spectral,
+    spectral_to_dense,
+    rank_for_energy,
+    orthogonality_error,
+)
+from repro.core.convert import truncation_error
+from repro.core.manifold import frobenius_tail
+
+
+def test_spectral_init_on_manifold(key):
+    p = spectral_init(key, 64, 96, 16)
+    assert float(orthogonality_error(p["U"])) < 1e-5
+    assert float(orthogonality_error(p["V"])) < 1e-5
+    assert p["U"].shape == (64, 16) and p["V"].shape == (96, 16) and p["s"].shape == (16,)
+
+
+def test_spectral_apply_matches_dense_materialization(key):
+    p = spectral_init(key, 32, 48, 8)
+    x = jax.random.normal(key, (5, 32))
+    y = spectral_apply(p, x)
+    W = spectral_to_dense(p)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ W), rtol=2e-5, atol=2e-5)
+
+
+def test_full_rank_conversion_exact(key):
+    W = jax.random.normal(key, (24, 40))
+    p = dense_to_spectral(W, k=24)
+    np.testing.assert_allclose(np.asarray(spectral_to_dense(p)), np.asarray(W),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(8, 48),
+    n=st.integers(8, 48),
+    seed=st.integers(0, 2**31 - 1),
+    frac=st.floats(0.2, 0.9),
+)
+def test_eckart_young_optimality(m, n, seed, frac):
+    """Truncation error of dense_to_spectral equals the optimal
+    Frobenius tail sqrt(sum_{i>k} sigma_i^2) — the paper's rank
+    truncation is exactly the optimal rank-k approximation."""
+    k = max(1, int(frac * min(m, n)))
+    W = jax.random.normal(jax.random.PRNGKey(seed), (m, n))
+    p = dense_to_spectral(W, k)
+    err = float(truncation_error(W, p))
+    s = jnp.linalg.svd(W, compute_uv=False)
+    opt = float(frobenius_tail(s, k))
+    assert err <= opt * 1.001 + 1e-4
+    assert err >= opt * 0.999 - 1e-4
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), energy=st.floats(0.5, 0.999))
+def test_rank_for_energy_property(seed, energy):
+    s = jnp.abs(jax.random.normal(jax.random.PRNGKey(seed), (32,))) + 1e-3
+    k = rank_for_energy(s, energy)
+    s2 = np.sort(np.asarray(s) ** 2)[::-1]
+    cum = np.cumsum(s2) / np.sum(s2)
+    assert cum[k - 1] >= energy - 1e-6
+    if k > 1:
+        assert cum[k - 2] < energy
+
+
+def test_paper_table1_storage_counts():
+    """Paper Table 1: k(m+n+1) vs 4mn with Adam (weights+grads+2 moments).
+    LLaMA-70B MLP layer at k=32 must give the famous 199x."""
+    rows = [
+        (576, 1536, 13),      # SmolLM2-135M
+        (1024, 4096, 26),     # SmolLM2-360M
+        (2048, 8192, 51),     # SmolLM2-1.7B
+        (4096, 11008, 93),    # LLaMA-7B
+        (4096, 17408, 104),   # Qwen-27B
+        (8192, 28672, 199),   # LLaMA-70B
+    ]
+    for m, n, expected in rows:
+        ratio = dense_param_count(m, n) / spectral_param_count(m, n, 32)
+        assert round(ratio) == expected, (m, n, ratio)
+
+
+def test_spectral_apply_bf16_no_upcast(key):
+    p = spectral_init(key, 32, 48, 8)
+    x = jax.random.normal(key, (4, 32)).astype(jnp.bfloat16)
+    assert spectral_apply(p, x).dtype == jnp.bfloat16
+
+
+def test_convert_mlp_tree_selects_energy_ranks(key):
+    """Tree-level conversion touches only /mlp/ dense leaves and picks
+    ranks meeting the energy threshold (paper S4.4)."""
+    from repro.core.convert import convert_mlp_tree_to_spectral
+
+    tree = {
+        "layers": {
+            "mlp": {"up": {"w": jax.random.normal(key, (3, 32, 64))}},
+            "attn": {"wq": {"w": jax.random.normal(key, (3, 32, 32))}},
+        }
+    }
+    out, ranks = convert_mlp_tree_to_spectral(tree, energy=0.9)
+    assert len(ranks) == 1 and 1 <= ranks[0] <= 32
+    assert set(out["layers"]["mlp"]["up"].keys()) >= {"U", "s", "V"}
+    assert "w" in out["layers"]["attn"]["wq"]  # attention untouched

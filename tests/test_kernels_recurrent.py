@@ -1,0 +1,95 @@
+"""Recurrent-cell Pallas kernels vs their jnp (dry-run) equivalents:
+mLSTM chunk kernel and mamba selective-scan kernel — these back the
+PALLAS_EQ kernel-substitution claims in the roofline (DESIGN.md S6)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import get_config
+from repro.kernels.mlstm_chunk import mlstm_chunk_pallas
+from repro.kernels.mamba_scan import mamba_scan_pallas
+from repro.nn import xlstm as xm
+from repro.nn import mamba as mamba_mod
+
+
+@pytest.mark.parametrize("S,dh,chunk", [(128, 32, 64), (256, 64, 128), (64, 16, 64)])
+def test_mlstm_kernel_vs_jnp_chunkwise(S, dh, chunk, key):
+    """Kernel output == nn/xlstm.py chunkwise form (the partitioned
+    fallback) == the recurrent decode cell, for random gates/qkv."""
+    B = 3
+    ks = jax.random.split(key, 5)
+    q = jax.random.normal(ks[0], (B, S, dh))
+    k = jax.random.normal(ks[1], (B, S, dh)) / np.sqrt(dh)
+    v = jax.random.normal(ks[2], (B, S, dh))
+    i_pre = jax.random.normal(ks[3], (B, S))
+    f_pre = jax.random.normal(ks[4], (B, S)) + 1.0
+
+    y_kernel = mlstm_chunk_pallas(q, k, v, i_pre, f_pre, chunk=chunk, interpret=True)
+
+    # jnp chunkwise reference via the same _mlstm_chunk_body math
+    logf = jax.nn.log_sigmoid(f_pre)
+    T = chunk
+    nc = S // T
+    C = jnp.zeros((B, 1, dh, dh)); n = jnp.zeros((B, 1, dh)); m = jnp.full((B, 1), -1e30)
+    outs = []
+    for c in range(nc):
+        sl = slice(c * T, (c + 1) * T)
+        out, (C, n, m) = xm._mlstm_chunk_body(
+            q[:, sl, None, :], k[:, sl, None, :], v[:, sl, None, :],
+            i_pre[:, sl, None], logf[:, sl, None], C, n, m)
+        outs.append(out[:, :, 0, :])  # (B, T, dh) after squeeze head
+    y_ref = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_kernel), np.asarray(y_ref),
+                               atol=2e-4, rtol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_mlstm_kernel_dtypes(dtype, key):
+    B, S, dh = 2, 128, 32
+    ks = jax.random.split(key, 5)
+    q = jax.random.normal(ks[0], (B, S, dh), dtype)
+    k = (jax.random.normal(ks[1], (B, S, dh)) / np.sqrt(dh)).astype(dtype)
+    v = jax.random.normal(ks[2], (B, S, dh), dtype)
+    i_pre = jax.random.normal(ks[3], (B, S), jnp.float32)
+    f_pre = jax.random.normal(ks[4], (B, S), jnp.float32)
+    y = mlstm_chunk_pallas(q, k, v, i_pre, f_pre, chunk=64, interpret=True)
+    assert y.dtype == dtype
+    assert bool(jnp.all(jnp.isfinite(y.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("S,di,ds,tc,dic", [
+    (64, 64, 8, 32, 32),
+    (128, 128, 16, 64, 64),
+    (96, 32, 4, 96, 32),
+])
+def test_mamba_kernel_vs_ssm_scan(S, di, ds, tc, dic, key):
+    b = 2
+    ks = jax.random.split(key, 6)
+    u = jax.random.normal(ks[0], (b, S, di)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, S, di)) - 1.0)
+    B = jax.random.normal(ks[2], (b, S, ds)) * 0.5
+    C = jax.random.normal(ks[3], (b, S, ds)) * 0.5
+    A = -jnp.exp(jax.random.normal(ks[4], (di, ds)) * 0.3)
+    D = jnp.ones((di,))
+
+    y_kernel = mamba_scan_pallas(u, dt, B, C, A, D, t_chunk=tc, di_chunk=dic,
+                                 interpret=True)
+    y_ref, _ = mamba_mod._ssm_scan(u, dt, B, C, A, D)
+    np.testing.assert_allclose(np.asarray(y_kernel), np.asarray(y_ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_mamba_kernel_jamba_dims(key):
+    """The exact jamba dims (di=8192/16-shard = 512 per device, ds=16)."""
+    b, S, di, ds = 1, 128, 512, 16
+    ks = jax.random.split(key, 6)
+    u = jax.random.normal(ks[0], (b, S, di)) * 0.3
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, S, di)))
+    B = jax.random.normal(ks[2], (b, S, ds)) * 0.3
+    C = jax.random.normal(ks[3], (b, S, ds)) * 0.3
+    A = -jnp.exp(jax.random.normal(ks[4], (di, ds)) * 0.2)
+    D = jnp.ones((di,))
+    y = mamba_scan_pallas(u, dt, B, C, A, D, t_chunk=64, di_chunk=512, interpret=True)
+    y_ref, _ = mamba_mod._ssm_scan(u, dt, B, C, A, D)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=2e-5, rtol=2e-5)

@@ -1,0 +1,102 @@
+"""Optimizer tests: AdamW math, per-component LR groups (the paper's
+'clear next step'), schedules, clipping, and the SCT step invariant
+(always on-manifold after apply)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import spectral_init, orthogonality_error
+from repro.core.tree import max_orthogonality_error
+from repro.optim import (
+    adamw_init,
+    adamw_update,
+    AdamWConfig,
+    make_schedule,
+    ScheduleConfig,
+    clip_by_global_norm,
+    global_norm,
+    make_sct_optimizer,
+)
+
+
+def test_adamw_first_step_is_signed_lr():
+    """After one step from zero moments, AdamW moves ~lr*sign(grad)."""
+    params = {"w": jnp.array([1.0, -2.0, 3.0])}
+    grads = {"w": jnp.array([0.5, -0.1, 0.0])}
+    cfg = AdamWConfig(lr=0.01, weight_decay=0.0)
+    state = adamw_init(params)
+    new, _ = adamw_update(params, grads, state, cfg)
+    step = np.asarray(params["w"] - new["w"])
+    np.testing.assert_allclose(step[:2], [0.01, -0.01], rtol=1e-3)
+    assert abs(step[2]) < 1e-6
+
+
+def test_per_component_lr_scaling(key):
+    spec = spectral_init(key, 16, 24, 4)
+    params = {"mlp": spec, "dense": {"w": jnp.ones((4, 4))}}
+    grads = jax.tree.map(jnp.ones_like, params)
+    cfg = AdamWConfig(lr=0.01, weight_decay=0.0, spectral_lr_scale=10.0,
+                      dense_lr_scale=1.0, sv_lr_scale=0.0)
+    state = adamw_init(params)
+    new, _ = adamw_update(params, grads, state, cfg)
+    du = float(jnp.max(jnp.abs(new["mlp"]["U"] - params["mlp"]["U"])))
+    dd = float(jnp.max(jnp.abs(new["dense"]["w"] - params["dense"]["w"])))
+    ds = float(jnp.max(jnp.abs(new["mlp"]["s"] - params["mlp"]["s"])))
+    assert du == pytest.approx(0.1, rel=1e-2)   # 10x scale
+    assert dd == pytest.approx(0.01, rel=1e-2)  # 1x
+    assert ds == 0.0                             # frozen singular values
+
+
+def test_schedule_warmup_and_cosine():
+    sched = make_schedule(ScheduleConfig(peak_lr=1.0, warmup_steps=10, total_steps=110,
+                                         final_fraction=0.1))
+    # 1-indexed: the first step gets a nonzero LR
+    assert float(sched(0)) == pytest.approx(0.1)
+    assert float(sched(9)) == pytest.approx(1.0)
+    assert float(sched(4)) == pytest.approx(0.5)
+    assert float(sched(109)) == pytest.approx(0.1, abs=1e-6)
+    assert float(sched(60)) < 1.0
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.ones((10,)) * 3.0}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(3.0 * np.sqrt(10), rel=1e-5)
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-4)
+
+
+@pytest.mark.parametrize("retraction", ["qr", "cholesky_qr2"])
+def test_sct_optimizer_keeps_manifold(key, retraction):
+    spec = spectral_init(key, 32, 48, 8)
+    params = {"mlp": spec}
+    from repro.config import get_config
+
+    cfg = get_config("smollm2-1.7b", reduced=True).replace_sct(retraction=retraction)
+    opt = make_sct_optimizer(cfg, lr=0.05)  # huge LR to stress the manifold
+    state = opt.init(params)
+    for i in range(3):
+        grads = jax.tree.map(
+            lambda p: jax.random.normal(jax.random.PRNGKey(i), p.shape), params)
+        state = opt.apply(state, grads)
+    assert float(max_orthogonality_error(state["params"])) < 2e-5
+    assert int(state["step"]) == 3
+
+
+def test_retract_every_n(key):
+    """retract_every=2: off-steps drift, on-steps restore (beyond-paper
+    retraction scheduling)."""
+    spec = spectral_init(key, 32, 48, 8)
+    from repro.config import get_config
+
+    cfg = get_config("smollm2-1.7b", reduced=True).replace_sct(
+        retraction="qr", retract_every=2)
+    opt = make_sct_optimizer(cfg, lr=0.05, warmup=1)
+    state = opt.init({"mlp": spec})
+    g = jax.tree.map(lambda p: jax.random.normal(key, p.shape), state["params"])
+    state = opt.apply(state, g)   # step 1: no retraction
+    err1 = float(max_orthogonality_error(state["params"]))
+    state = opt.apply(state, g)   # step 2: retraction fires
+    err2 = float(max_orthogonality_error(state["params"]))
+    assert err1 > 1e-4           # drifted
+    assert err2 < 2e-5           # restored

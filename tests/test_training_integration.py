@@ -1,0 +1,74 @@
+"""End-to-end training integration: loss decreases on structured
+synthetic data, spectral factors stay on-manifold throughout, dense
+baseline path works (paper's comparison arm), microbatching is
+equivalent to full-batch."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import get_config
+from repro.core.tree import max_orthogonality_error
+from repro.data.synthetic import SyntheticLMDataset
+from repro.launch.steps import make_train_step
+from repro.models.model import init_model
+from repro.optim import make_sct_optimizer
+
+
+def _train(cfg, steps=40, lr=3e-3, microbatches=1, batch=8, seq=32):
+    opt = make_sct_optimizer(cfg, lr=lr, warmup=4, total_steps=steps)
+    step_fn = jax.jit(make_train_step(cfg, opt, microbatches=microbatches))
+    state = opt.init(init_model(jax.random.PRNGKey(0), cfg))
+    ds = SyntheticLMDataset(vocab=cfg.vocab, seq_len=seq, seed=0)
+    losses = []
+    for i in range(steps):
+        t, l = ds.batch(i, batch)
+        state, m = step_fn(state, {"tokens": jnp.asarray(t), "labels": jnp.asarray(l)})
+        losses.append(float(m["loss"]))
+    return state, losses
+
+
+def test_sct_training_converges(key):
+    cfg = get_config("smollm2-1.7b", reduced=True)
+    state, losses = _train(cfg)
+    assert losses[-1] < losses[0] - 0.3, (losses[0], losses[-1])
+    assert float(max_orthogonality_error(state["params"])) < 2e-5
+
+
+def test_dense_baseline_converges(key):
+    """The paper's dense comparison arm — same model, spectral off."""
+    cfg = get_config("smollm2-1.7b", reduced=True).replace_sct(spectral_mlp=False)
+    state, losses = _train(cfg)
+    assert losses[-1] < losses[0] - 0.3
+
+
+def test_sct_param_count_below_dense():
+    from repro.models.model import param_count
+
+    cfg_s = get_config("smollm2-1.7b", reduced=True)
+    cfg_d = cfg_s.replace_sct(spectral_mlp=False)
+    ps = param_count(init_model(jax.random.PRNGKey(0), cfg_s))
+    pd = param_count(init_model(jax.random.PRNGKey(0), cfg_d))
+    assert ps < pd
+
+
+def test_microbatching_matches_full_batch():
+    """Gradient accumulation must be loss-equivalent to the full batch
+    (per-microbatch mean CE over equal-sized slices == full-batch CE)."""
+    cfg = get_config("smollm2-1.7b", reduced=True).replace(dtype="float32")
+    _, l_full = _train(cfg, steps=6, microbatches=1)
+    _, l_micro = _train(cfg, steps=6, microbatches=4)
+    np.testing.assert_allclose(l_full, l_micro, rtol=2e-3, atol=2e-3)
+
+
+def test_moe_training_step_runs_and_balances(key):
+    cfg = get_config("deepseek-v3-671b", reduced=True)
+    state, losses = _train(cfg, steps=10, lr=1e-3)
+    assert np.isfinite(losses).all()
+
+
+def test_hybrid_and_ssm_training(key):
+    for arch in ("jamba-v0.1-52b", "xlstm-1.3b"):
+        cfg = get_config(arch, reduced=True)
+        state, losses = _train(cfg, steps=8, lr=1e-3)
+        assert np.isfinite(losses).all(), arch
