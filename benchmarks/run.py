@@ -16,6 +16,7 @@ from benchmarks import (
     table3_rank_sweep,
     table4_gradient_integrity,
     bench_kernels,
+    bench_serving,
     roofline_table,
 )
 
@@ -25,6 +26,7 @@ SUITES = {
     "table3": table3_rank_sweep.run,
     "table4": table4_gradient_integrity.run,
     "kernels": bench_kernels.run,
+    "serving": bench_serving.run,
     "roofline": roofline_table.run,
 }
 

@@ -1,26 +1,38 @@
-"""Batched serving example: prefill a batch of prompts, decode with the
-static-shape KV cache, report per-token latency. Exercises the same
-prefill/decode_step the decode_32k dry-run cells prove at 512 devices.
+"""Serving demo, both modes:
+
+  1. static batch — prefill a batch of same-length prompts, decode with
+     the dense (batch, max_seq) cache;
+  2. streaming — continuous batching over a staggered mixed-length
+     request trace with the paged KV cache, verified token-for-token
+     against the static path.
 
   PYTHONPATH=src python examples/serve_batched.py [arch]
 """
-import sys
-import subprocess
 import os
+import subprocess
+import sys
 
 
-def main():
+def run(label, extra):
     arch = sys.argv[1] if len(sys.argv) > 1 else "llama3.2-1b"
     env = dict(os.environ)
     env["PYTHONPATH"] = "src"
     cmd = [sys.executable, "-m", "repro.launch.serve",
-           "--arch", arch, "--reduced",
-           "--batch", "4", "--prompt-len", "16", "--gen", "24"]
+           "--arch", arch, "--reduced"] + extra
+    print(f"--- {label}: {' '.join(cmd[3:])}")
     out = subprocess.run(cmd, env=env, capture_output=True, text=True)
     print(out.stdout)
     if out.returncode != 0:
         print(out.stderr[-2000:])
         sys.exit(1)
+
+
+def main():
+    run("static batch", ["--batch", "4", "--prompt-len", "16", "--gen", "24"])
+    run("streaming (paged, continuous batching)",
+        ["--paged", "--stream", "--requests", "6", "--slots", "3",
+         "--prompt-len", "12", "--gen", "12", "--page-size", "8",
+         "--num-pages", "32", "--pages-per-seq", "4", "--verify"])
 
 
 if __name__ == "__main__":

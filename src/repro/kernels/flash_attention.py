@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.interpret import resolve_interpret
+
 NEG_INF = -1e30
 
 
@@ -61,7 +63,7 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
 
 def flash_attention_pallas(q, k, v, *, causal: bool = True,
                            cq: int = 512, ck: int = 1024,
-                           interpret: bool = False):
+                           interpret: bool | None = None):
     """q: (B, sq, d), k/v: (B, skv, d) with B = batch*heads folded.
     Returns (B, sq, d). Requires sq % cq == 0, skv % ck == 0."""
     B, sq, d = q.shape
@@ -87,5 +89,5 @@ def flash_attention_pallas(q, k, v, *, causal: bool = True,
             pltpu.VMEM((cq, 1), jnp.float32),   # running max
             pltpu.VMEM((cq, 1), jnp.float32),   # running sum
         ],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(q, k, v)

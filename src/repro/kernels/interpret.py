@@ -1,0 +1,36 @@
+"""One switch for Pallas interpret mode, shared by every kernel.
+
+Resolution order:
+  1. ``SCT_INTERPRET`` env var ("1"/"true" forces interpret, "0"/"false"
+     forces compiled) — what CI sets explicitly;
+  2. otherwise: interpret everywhere except on a TPU backend.
+
+CI, laptops, and TPU runs all go through this one code path instead of
+a hand-flipped module constant.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+
+_TRUTHY = ("1", "true", "yes", "on")
+_FALSY = ("0", "false", "no", "off")
+
+
+def default_interpret() -> bool:
+    env = os.environ.get("SCT_INTERPRET")
+    if env is not None:
+        v = env.strip().lower()
+        if v in _TRUTHY:
+            return True
+        if v in _FALSY:
+            return False
+        raise ValueError(f"SCT_INTERPRET={env!r}: expected one of {_TRUTHY + _FALSY}")
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """None -> environment default; explicit bool wins."""
+    return default_interpret() if interpret is None else interpret

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.interpret import resolve_interpret
+
 
 def _kernel(u_ref, dt_ref, B_ref, C_ref, A_ref, D_ref, y_ref, h_ref, *, Tc: int):
     tchunk = pl.program_id(2)
@@ -48,7 +50,7 @@ def _kernel(u_ref, dt_ref, B_ref, C_ref, A_ref, D_ref, y_ref, h_ref, *, Tc: int)
 
 
 def mamba_scan_pallas(u, dt, B, C, A, D, *, t_chunk: int = 512,
-                      di_chunk: int = 512, interpret: bool = False):
+                      di_chunk: int = 512, interpret: bool | None = None):
     """u/dt: (b, S, di); B/C: (b, S, ds); A: (di, ds); D: (di,).
     Returns y: (b, S, di). Requires S % t_chunk == 0, di % di_chunk == 0
     (callers pad; dims in the assigned configs already divide)."""
@@ -72,5 +74,5 @@ def mamba_scan_pallas(u, dt, B, C, A, D, *, t_chunk: int = 512,
         out_specs=pl.BlockSpec((1, Tc, dic), lambda i, j, t: (i, t, j)),
         out_shape=jax.ShapeDtypeStruct((b, S, di), u.dtype),
         scratch_shapes=[pltpu.VMEM((dic, ds), jnp.float32)],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(u, dt, B, C, A, D.reshape(1, di))

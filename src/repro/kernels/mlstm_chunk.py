@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.interpret import resolve_interpret
+
 NEG_INF = -1e30
 
 
@@ -78,7 +80,7 @@ def _kernel(q_ref, k_ref, v_ref, i_ref, f_ref, o_ref, C_ref, n_ref, m_ref,
 
 
 def mlstm_chunk_pallas(q, k, v, i_pre, f_pre, *, chunk: int = 256,
-                       interpret: bool = False):
+                       interpret: bool | None = None):
     """q/k/v: (B, S, dh) with B = batch*heads folded (k pre-scaled by
     1/sqrt(dh)); i_pre/f_pre: (B, S) gate pre-activations.
     Returns (B, S, dh). Requires S % chunk == 0."""
@@ -103,5 +105,5 @@ def mlstm_chunk_pallas(q, k, v, i_pre, f_pre, *, chunk: int = 256,
             pltpu.VMEM((1, dh), jnp.float32),   # n
             pltpu.VMEM((1, 1), jnp.float32),    # m
         ],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(q, k, v, i_pre, f_pre)

@@ -16,10 +16,9 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.interpret import resolve_interpret
 from repro.kernels.spectral_matmul import spectral_matmul_pallas
 from repro.kernels.ref import spectral_matmul_ref
-
-_INTERPRET = True  # CPU container: interpret mode. Flip to False on TPU.
 
 
 def _pad_to(x, mult, axis):
@@ -45,7 +44,8 @@ def _fwd_2d(x2, U, s, V):
     xp, _ = _pad_to(x2, cm, 1)
     Up, _ = _pad_to(U, cm, 0)
     Vp, _ = _pad_to(V, cn, 0)
-    y = spectral_matmul_pallas(xp, Up, s, Vp, bm=bm, cm=cm, cn=cn, interpret=_INTERPRET)
+    y = spectral_matmul_pallas(xp, Up, s, Vp, bm=bm, cm=cm, cn=cn,
+                               interpret=resolve_interpret(None))
     return y[:M0, :n]
 
 

@@ -1,12 +1,27 @@
-"""Serving launcher: batched prefill + decode loop with a static-shape
-cache (compile once, serve any request length up to max_seq).
+"""Serving launcher.
+
+Static mode (the original path): one batch, one shared prompt length,
+dense ``(batch, max_seq)`` cache — compile once, serve any length up to
+max_seq:
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \\
       --reduced --batch 4 --prompt-len 16 --gen 32
+
+Streaming mode (continuous batching + paged KV cache): replays a trace
+of staggered, variable-length requests through the ServingEngine —
+requests arrive mid-flight, join free decode slots, and share one page
+pool:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \\
+      --reduced --paged --stream [--verify]
+
+``--verify`` re-decodes every request through the static path and
+checks the greedy outputs match token for token.
 """
 from __future__ import annotations
 
 import argparse
+import functools
 import time
 
 import jax
@@ -26,21 +41,99 @@ def sample_greedy(logits):
     return jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="llama3.2-1b")
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+def build_trace(args, vocab, pcfg):
+    """Staggered mixed-length request trace: lengths cycle through a
+    spread around --prompt-len, arrivals step every --arrive-every
+    engine steps."""
+    from repro.serving import Request
 
-    cfg = get_config(args.arch, reduced=args.reduced)
+    rng = np.random.default_rng(args.seed)
+    lens = [max(2, args.prompt_len + d) for d in (-7, 0, 5, -3, 9, 2, -5, 12)]
+    reqs = []
+    for i in range(args.requests):
+        plen = lens[i % len(lens)]
+        gen = max(1, args.gen + (i % 3) * 4 - 4)
+        if gen + 2 > pcfg.max_seq:
+            raise SystemExit(
+                f"request {i}: gen={gen} (spread from --gen {args.gen}) plus a "
+                f">=2-token prompt exceeds page-size x pages-per-seq = "
+                f"{pcfg.max_seq} tokens")
+        plen = min(plen, pcfg.max_seq - gen)
+        reqs.append(Request(
+            rid=i,
+            prompt=rng.integers(0, vocab, size=(plen,)).astype(np.int32),
+            max_new_tokens=gen,
+            arrival=i // max(1, args.slots) * args.arrive_every,
+        ))
+    return reqs
+
+
+@functools.lru_cache(maxsize=None)
+def _reference_step_fns(cfg):
+    """Jitted prefill/decode for the oracle (one compile per config +
+    shape, shared across requests)."""
+    pf = jax.jit(lambda p, t, s: prefill(p, t, cfg, s))
+    df = jax.jit(lambda p, t, s, n: decode_step(p, t, s, n, cfg))
+    return pf, df
+
+
+def static_greedy_reference(cfg, params, prompt, gen, max_seq):
+    """Batch-1 static-cache greedy decode — the token-for-token oracle
+    for --verify (also used by tests/test_serving.py)."""
+    prefill_fn, decode_fn = _reference_step_fns(cfg)
+    state = init_decode_state(cfg, 1, max_seq)
+    logits, state = prefill_fn(params, jnp.asarray(prompt)[None], state)
+    toks = [int(jnp.argmax(logits[0, -1]))]
+    for i in range(gen - 1):
+        tok = jnp.asarray([[toks[-1]]], dtype=jnp.int32)
+        logits, state = decode_fn(params, tok, state, jnp.int32(len(prompt) + i))
+        toks.append(int(jnp.argmax(logits[0, -1])))
+    return np.asarray(toks, dtype=np.int32)
+
+
+def run_stream(args, cfg, params) -> None:
+    from repro.serving import PagedCacheConfig
+    from repro.serving.engine import ServingEngine
+
+    pcfg = PagedCacheConfig(
+        page_size=args.page_size,
+        num_pages=args.num_pages,
+        max_slots=args.slots,
+        max_pages_per_seq=args.pages_per_seq,
+    )
+    engine = ServingEngine(cfg, params, pcfg,
+                           prefill_token_budget=args.prefill_budget)
+    trace = build_trace(args, cfg.vocab, pcfg)
+    print(f"streaming {len(trace)} requests, prompt lens "
+          f"{sorted({r.prompt_len for r in trace})}, slots={pcfg.max_slots}, "
+          f"pool={pcfg.num_pages}x{pcfg.page_size} tokens")
+    out = engine.run(trace)
+    engine.sched.check_invariants()
+    st = engine.stats()
+    print(f"served {int(st['requests'])} requests: "
+          f"{int(st['prefill_tokens'])} prefill + {int(st['generated_tokens'])} generated "
+          f"tokens in {st['wall_s']:.2f}s ({st['tokens_per_s']:.1f} tok/s)")
+    print(f"paged attention cache: {int(st['attn_cache_bytes'])} bytes "
+          f"({pcfg.num_pages}+1 pages x {pcfg.page_size} tokens)")
+    first = trace[0]
+    print("generated token ids (request 0):", out[first.rid][:16], "...")
+
+    if args.verify:
+        bad = 0
+        for r in trace:
+            ref = static_greedy_reference(cfg, params, r.prompt, r.max_new_tokens,
+                                          pcfg.max_seq)
+            if not np.array_equal(ref, out[r.rid]):
+                bad += 1
+                print(f"request {r.rid}: MISMATCH\n  static {ref}\n  paged  {out[r.rid]}")
+        if bad:
+            raise SystemExit(f"{bad}/{len(trace)} requests diverged from the static path")
+        print(f"verify: all {len(trace)} requests match the static path token-for-token")
+
+
+def run_static(args, cfg, params) -> None:
     key = jax.random.PRNGKey(args.seed)
-    params = init_model(key, cfg)
     max_seq = args.prompt_len + args.gen
-
     prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0, cfg.vocab)
 
     extra_prefill, extra_decode = {}, {}
@@ -81,6 +174,43 @@ def main() -> None:
     print(f"decode:  {t_decode/max(args.gen-1,1)*1e3:.2f} ms/token "
           f"({args.batch} sequences)")
     print("generated token ids (first sequence):", gen[0][:16], "...")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    # streaming / paged mode
+    ap.add_argument("--paged", action="store_true",
+                    help="use the paged KV cache (serving/paged_cache.py)")
+    ap.add_argument("--stream", action="store_true",
+                    help="continuous batching over a staggered request trace")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4, help="decode slots")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--num-pages", type=int, default=64)
+    ap.add_argument("--pages-per-seq", type=int, default=8)
+    ap.add_argument("--arrive-every", type=int, default=4,
+                    help="engine steps between arrival waves")
+    ap.add_argument("--prefill-budget", type=int, default=64,
+                    help="max prefill tokens admitted per engine step")
+    ap.add_argument("--verify", action="store_true",
+                    help="check streaming outputs against the static path")
+    args = ap.parse_args()
+
+    if args.paged != args.stream:
+        raise SystemExit("--paged and --stream go together (static mode: neither)")
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    params = init_model(jax.random.PRNGKey(args.seed), cfg)
+    if args.paged:
+        run_stream(args, cfg, params)
+    else:
+        run_static(args, cfg, params)
 
 
 if __name__ == "__main__":

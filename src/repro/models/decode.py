@@ -1,10 +1,17 @@
 """Serving paths for decoder-only families: cache/state construction,
 prefill, and single-token decode. Caches are stacked along a leading
 layer (or period) axis and scanned together with the layer params.
+
+Cache construction is pluggable: the attention cache is either the
+static dense ``(batch, max_seq)`` layout or a paged pool layout
+(serving/paged_cache.py) where each layer holds a shared page pool and
+sequences map logical positions through a block table. Recurrent
+(mamba / xlstm) decode state is fixed-size per sequence, so both
+layouts index it by slot; only the attention leaves change shape.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Callable, Dict
 
 import jax
 import jax.numpy as jnp
@@ -19,6 +26,20 @@ from repro.nn.moe import apply_moe
 from repro.models.lm import _norm_apply, _compute_dtype
 
 Params = Dict[str, Any]
+
+# state-dict keys holding attention caches (layout-dependent leaves) vs
+# recurrent per-slot state, and the axis the serving slot lives on after
+# layer stacking — the serving engine scatters prefill state with these
+ATTN_STATE_KEYS = ("cache", "dense_cache", "moe_cache", "attn_cache")
+
+
+def recurrent_slot_axes(cfg: ModelConfig) -> Dict[str, int]:
+    """state key -> axis of the serving slot (batch) in stacked leaves."""
+    if cfg.family == "hybrid":
+        return {"mamba": 2}         # (n_periods, n_mamba, batch, ...)
+    if cfg.family == "ssm_lm":
+        return {"mlstm": 2, "slstm": 1}
+    return {}
 
 
 # ======================================================================
@@ -38,6 +59,20 @@ def _attn_cache_spec(cfg: ModelConfig, batch: int, max_seq: int):
     return {
         "k": jax.ShapeDtypeStruct((batch, max_seq, cfg.n_kv_heads, cfg.head_dim), jnp.bfloat16),
         "v": jax.ShapeDtypeStruct((batch, max_seq, cfg.n_kv_heads, cfg.head_dim), jnp.bfloat16),
+    }
+
+
+def _attn_pool_spec(cfg: ModelConfig, pcfg):
+    """Per-layer paged pool: (num_pages + 1 null page, page_size, *feat)."""
+    P, pg = pcfg.num_pages + 1, pcfg.page_size
+    if cfg.attention == "mla":
+        return {
+            "ckv": jax.ShapeDtypeStruct((P, pg, cfg.kv_lora_rank), jnp.bfloat16),
+            "krope": jax.ShapeDtypeStruct((P, pg, cfg.qk_rope_dim), jnp.bfloat16),
+        }
+    return {
+        "k": jax.ShapeDtypeStruct((P, pg, cfg.n_kv_heads, cfg.head_dim), jnp.bfloat16),
+        "v": jax.ShapeDtypeStruct((P, pg, cfg.n_kv_heads, cfg.head_dim), jnp.bfloat16),
     }
 
 
@@ -67,25 +102,22 @@ def _slstm_state_spec(cfg, batch):
     return {"h": s, "c": s, "n": s, "m": s}
 
 
-def lm_state_specs(cfg: ModelConfig, batch: int, max_seq: int):
-    """ShapeDtypeStruct tree of the decode state for this family."""
+def _lm_state_specs(cfg: ModelConfig, batch: int, attn_spec: Callable[[], Any]):
+    """Family state tree; ``attn_spec`` supplies the per-layer attention
+    cache spec — the pluggable (static vs. paged) part."""
     if cfg.family == "dense_lm":
-        return {"cache": _stack_specs(cfg.n_layers, _attn_cache_spec(cfg, batch, max_seq))}
+        return {"cache": _stack_specs(cfg.n_layers, attn_spec())}
     if cfg.family == "moe_lm":
         st = {}
         if cfg.first_dense_layers:
-            st["dense_cache"] = _stack_specs(
-                cfg.first_dense_layers, _attn_cache_spec(cfg, batch, max_seq)
-            )
-        st["moe_cache"] = _stack_specs(
-            cfg.n_layers - cfg.first_dense_layers, _attn_cache_spec(cfg, batch, max_seq)
-        )
+            st["dense_cache"] = _stack_specs(cfg.first_dense_layers, attn_spec())
+        st["moe_cache"] = _stack_specs(cfg.n_layers - cfg.first_dense_layers, attn_spec())
         return st
     if cfg.family == "hybrid":
         n_periods = cfg.n_layers // cfg.attn_every
         n_mamba = cfg.attn_every - 1
         return {
-            "attn_cache": _stack_specs(n_periods, _attn_cache_spec(cfg, batch, max_seq)),
+            "attn_cache": _stack_specs(n_periods, attn_spec()),
             "mamba": _stack_specs(n_periods, _stack_specs(n_mamba, _mamba_state_spec(cfg, batch))),
         }
     if cfg.family == "ssm_lm":
@@ -98,10 +130,26 @@ def lm_state_specs(cfg: ModelConfig, batch: int, max_seq: int):
     raise ValueError(cfg.family)
 
 
+def lm_state_specs(cfg: ModelConfig, batch: int, max_seq: int):
+    """ShapeDtypeStruct tree of the static-cache decode state."""
+    return _lm_state_specs(cfg, batch, lambda: _attn_cache_spec(cfg, batch, max_seq))
+
+
+def lm_paged_state_specs(cfg: ModelConfig, pcfg):
+    """Decode state with paged attention pools: recurrent leaves are
+    slot-indexed by ``pcfg.max_slots``; attention leaves are shared page
+    pools addressed through the engine's block tables."""
+    return _lm_state_specs(cfg, pcfg.max_slots, lambda: _attn_pool_spec(cfg, pcfg))
+
+
 def lm_init_state(cfg: ModelConfig, batch: int, max_seq: int):
     """Zero-filled decode state (real allocation — for smoke tests and
     the serving example; the dry-run uses lm_state_specs instead)."""
     return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), lm_state_specs(cfg, batch, max_seq))
+
+
+def lm_init_paged_state(cfg: ModelConfig, pcfg):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), lm_paged_state_specs(cfg, pcfg))
 
 
 # ======================================================================
@@ -262,15 +310,41 @@ def decode_step_lm(params: Params, tokens: jax.Array, state, cache_len: jax.Arra
     size, dynamic fill level) so the step compiles once and serves any
     position — the serving-loop contract.
     """
-    b = tokens.shape[0]
-    dt = _compute_dtype(cfg)
-    x = apply_embedding(params["embed"], tokens, compute_dtype=dt)
-
     def attn_decode(p, h, cache):
         if cfg.attention == "mla":
             return attn.apply_mla_decode(p, h, cfg, cache=cache, cache_len=cache_len)
         return attn.apply_gqa_decode(p, h, cfg, cache=cache, cache_len=cache_len,
                                      use_pallas=cfg.use_pallas)
+
+    return _decode_step_body(params, tokens, state, cfg, attn_decode)
+
+
+def decode_step_lm_paged(params: Params, tokens: jax.Array, state,
+                         block_table: jax.Array, seq_lens: jax.Array,
+                         cfg: ModelConfig):
+    """One-token step against paged attention pools with per-slot fill
+    levels — mixed request lengths in one compiled step, the
+    continuous-batching contract. block_table: (slots, n_pages) int32;
+    seq_lens: (slots,) int32. Recurrent state paths are shared with the
+    static step (slot-indexed either way)."""
+    def attn_decode(p, h, cache):
+        if cfg.attention == "mla":
+            return attn.apply_mla_decode_paged(
+                p, h, cfg, cache=cache, block_table=block_table, seq_lens=seq_lens)
+        return attn.apply_gqa_decode_paged(
+            p, h, cfg, cache=cache, block_table=block_table, seq_lens=seq_lens,
+            use_pallas=cfg.use_pallas)
+
+    return _decode_step_body(params, tokens, state, cfg, attn_decode)
+
+
+def _decode_step_body(params: Params, tokens: jax.Array, state, cfg: ModelConfig,
+                      attn_decode):
+    """Family-dispatched layer scan shared by the static and paged steps;
+    ``attn_decode(layer_params, h, cache) -> (out, cache)`` is the
+    layout-specific part."""
+    dt = _compute_dtype(cfg)
+    x = apply_embedding(params["embed"], tokens, compute_dtype=dt)
 
     if cfg.family in ("dense_lm", "moe_lm"):
         stacks = [("layers", "cache")] if cfg.family == "dense_lm" else (

@@ -64,6 +64,27 @@ def decode_step(params, tokens, state, cache_len, cfg: ModelConfig, **extra):
     return decode_mod.decode_step_lm(params, tokens, state, cache_len, cfg)
 
 
+# ------------------------------------------------------- paged serving --
+
+def paged_state_specs(cfg: ModelConfig, pcfg):
+    if cfg.family == "encdec":
+        raise NotImplementedError("paged serving targets decoder-only families")
+    return decode_mod.lm_paged_state_specs(cfg, pcfg)
+
+
+def init_paged_state(cfg: ModelConfig, pcfg):
+    return jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype), paged_state_specs(cfg, pcfg)
+    )
+
+
+def decode_step_paged(params, tokens, state, block_table, seq_lens, cfg: ModelConfig):
+    if cfg.family == "encdec":
+        raise NotImplementedError("paged serving targets decoder-only families")
+    return decode_mod.decode_step_lm_paged(params, tokens, state, block_table,
+                                           seq_lens, cfg)
+
+
 def param_count(params) -> int:
     return sum(int(jnp.size(x)) for x in jax.tree.leaves(params))
 

@@ -307,6 +307,30 @@ def apply_gqa_decode(p, x, cfg, *, cache, cache_len, use_pallas=False):
     return apply_linear(p["wo"], o.reshape(b, s, -1), use_pallas=use_pallas), {"k": ck, "v": cv}
 
 
+def apply_gqa_decode_paged(p, x, cfg, *, cache, block_table, seq_lens, use_pallas=False):
+    """One-token step against a paged pool (serving/paged_cache.py).
+
+    cache: {"k"/"v": (P+1, page, kvh, hd)} — this layer's shared pool;
+    block_table: (b, n_pages) int32; seq_lens: (b,) int32 per-slot fill
+    level (mixed lengths — the continuous-batching contract). The new
+    token is appended into each slot's current page, then attention runs
+    over the gathered logical view with a per-row validity mask, so the
+    math matches apply_gqa_decode row-for-row."""
+    from repro.serving.paged_cache import paged_append, paged_gather
+
+    b, s, _ = x.shape
+    positions = seq_lens[:, None].astype(jnp.int32)
+    q, k, v = _gqa_qkv(p, x, cfg, positions, use_pallas)
+    pk = paged_append(cache["k"], block_table, seq_lens, k[:, 0])
+    pv = paged_append(cache["v"], block_table, seq_lens, v[:, 0])
+    ck = paged_gather(pk, block_table)
+    cv = paged_gather(pv, block_table)
+    S = ck.shape[1]
+    valid = jnp.arange(S)[None, :] <= seq_lens[:, None]
+    o = _sdpa(q, ck.astype(q.dtype), cv.astype(q.dtype), causal=False, kv_len_mask=valid)
+    return apply_linear(p["wo"], o.reshape(b, s, -1), use_pallas=use_pallas), {"k": pk, "v": pv}
+
+
 # ---------------------------------------------------------------- MLA ----
 
 def init_mla(key, cfg, dtype=jnp.float32):
@@ -397,34 +421,61 @@ def _split_wukv(p, cfg):
     return w[:, :, :nope], w[:, :, nope:]               # (kv_lora,h,nope), (kv_lora,h,vd)
 
 
-def apply_mla_decode(p, x, cfg, *, cache, cache_len):
-    """Absorbed single-token decode: scores and values are computed
-    directly against the cached compressed latent — no full K/V is ever
-    materialized (the MLA idea, mirroring SCT's never-materialize rule).
-    """
+def _mla_absorbed_attend(p, x, cfg, q_nope, q_rope, cckv, ckr, valid):
+    """Shared absorbed-decode attention: scores and values computed
+    directly against the compressed latent view cckv (b, S, kv_lora) /
+    ckr (b, S, rope_d) under the (b, S) validity mask — no full K/V is
+    ever materialized (the MLA idea, mirroring SCT's never-materialize
+    rule)."""
     b, s, _ = x.shape
     h, nope, rope_d, vd = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    wuk, wuv = _split_wukv(p, cfg)
+    # absorb W_uk into q: q_lat (b,s,h,kv_lora)
+    q_lat = jnp.einsum("bshn,lhn->bshl", q_nope, wuk.astype(q_nope.dtype))
+    scores = (
+        jnp.einsum("bshl,bSl->bhsS", q_lat, cckv.astype(q_lat.dtype))
+        + jnp.einsum("bshr,bSr->bhsS", q_rope, ckr.astype(q_rope.dtype))
+    ).astype(jnp.float32) / jnp.sqrt(jnp.float32(nope + rope_d))
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    o_lat = jnp.einsum("bhsS,bSl->bshl", probs, cckv.astype(probs.dtype))   # (b,s,h,kv_lora)
+    o = jnp.einsum("bshl,lhv->bshv", o_lat, wuv.astype(o_lat.dtype))        # (b,s,h,vd)
+    return apply_linear(p["wo"], o.reshape(b, s, h * vd))
+
+
+def apply_mla_decode(p, x, cfg, *, cache, cache_len):
+    """Absorbed single-token decode against the static latent cache."""
+    b, s, _ = x.shape
     positions = jnp.broadcast_to(cache_len[None, None], (b, s)).astype(jnp.int32)
     q_nope, q_rope = _mla_q(p, x, cfg)
     q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
     ckv_new, krope_new = _mla_ckv(p, x, cfg, positions)
     cckv = jax.lax.dynamic_update_slice_in_dim(cache["ckv"], ckv_new.astype(cache["ckv"].dtype), cache_len, axis=1)
     ckr = jax.lax.dynamic_update_slice_in_dim(cache["krope"], krope_new.astype(cache["krope"].dtype), cache_len, axis=1)
-    wuk, wuv = _split_wukv(p, cfg)
-    # absorb W_uk into q: q_lat (b,s,h,kv_lora)
-    q_lat = jnp.einsum("bshn,lhn->bshl", q_nope, wuk.astype(q_nope.dtype))
     S = cckv.shape[1]
-    scores = (
-        jnp.einsum("bshl,bSl->bhsS", q_lat, cckv.astype(q_lat.dtype))
-        + jnp.einsum("bshr,bSr->bhsS", q_rope, ckr.astype(q_rope.dtype))
-    ).astype(jnp.float32) / jnp.sqrt(jnp.float32(nope + rope_d))
     valid = jnp.broadcast_to((jnp.arange(S)[None, :] <= cache_len), (b, S))
-    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
-    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
-    o_lat = jnp.einsum("bhsS,bSl->bshl", probs, cckv.astype(probs.dtype))   # (b,s,h,kv_lora)
-    o = jnp.einsum("bshl,lhv->bshv", o_lat, wuv.astype(o_lat.dtype))        # (b,s,h,vd)
-    out = apply_linear(p["wo"], o.reshape(b, s, h * vd))
+    out = _mla_absorbed_attend(p, x, cfg, q_nope, q_rope, cckv, ckr, valid)
     return out, {"ckv": cckv, "krope": ckr}
+
+
+def apply_mla_decode_paged(p, x, cfg, *, cache, block_table, seq_lens):
+    """Absorbed single-token decode against paged latent pools
+    cache = {"ckv"/"krope": (P+1, page, ...)}; per-slot seq_lens."""
+    from repro.serving.paged_cache import paged_append, paged_gather
+
+    b, s, _ = x.shape
+    positions = seq_lens[:, None].astype(jnp.int32)
+    q_nope, q_rope = _mla_q(p, x, cfg)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    ckv_new, krope_new = _mla_ckv(p, x, cfg, positions)
+    pckv = paged_append(cache["ckv"], block_table, seq_lens, ckv_new[:, 0])
+    pkr = paged_append(cache["krope"], block_table, seq_lens, krope_new[:, 0])
+    cckv = paged_gather(pckv, block_table)
+    ckr = paged_gather(pkr, block_table)
+    S = cckv.shape[1]
+    valid = jnp.arange(S)[None, :] <= seq_lens[:, None]
+    out = _mla_absorbed_attend(p, x, cfg, q_nope, q_rope, cckv, ckr, valid)
+    return out, {"ckv": pckv, "krope": pkr}
 
 
 # ----------------------------------------------------------- cross-attn --

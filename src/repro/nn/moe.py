@@ -16,6 +16,7 @@ vmaps over E for free (retraction broadcasting, core/retraction.py).
 """
 from __future__ import annotations
 
+import inspect
 from typing import Optional
 
 import jax
@@ -179,18 +180,17 @@ def apply_moe_sharded(p, x, cfg, *, capacity_factor: float = 1.25,
 
     shard_map = getattr(jax, "shard_map", None)
     if shard_map is None:  # pragma: no cover - older jax
-        from jax.experimental.shard_map import shard_map as _sm
+        from jax.experimental.shard_map import shard_map
 
-        def shard_map(f, **kw):
-            return _sm(f, **kw)
-
-    out, aux = shard_map(
-        f,
-        mesh=mesh,
-        in_specs=(re_specs, x_spec),
-        out_specs=(x_spec, P()),
-        check_vma=False,
-    )(router_experts, x)
+    kw = dict(mesh=mesh, in_specs=(re_specs, x_spec), out_specs=(x_spec, P()))
+    # replication-check kwarg was renamed check_rep -> check_vma across
+    # jax versions; pass whichever this jax understands
+    sm_params = inspect.signature(shard_map).parameters
+    if "check_vma" in sm_params:
+        kw["check_vma"] = False
+    elif "check_rep" in sm_params:
+        kw["check_rep"] = False
+    out, aux = shard_map(f, **kw)(router_experts, x)
 
     if cfg.n_shared_experts:
         from repro.nn.mlp import apply_mlp

@@ -1,0 +1,36 @@
+"""Serving runtime: paged KV cache + continuous batching.
+
+``engine`` is imported lazily: models/decode.py imports the paged-cache
+ops from this package, and the engine imports models — eager re-export
+here would close that cycle.
+"""
+from repro.serving.paged_cache import (
+    PagedCacheConfig,
+    PagePool,
+    paged_append,
+    paged_gather,
+    paged_write_pages,
+    slot_read,
+    slot_write,
+)
+from repro.serving.scheduler import ContinuousBatchingScheduler, Request
+
+__all__ = [
+    "PagedCacheConfig",
+    "PagePool",
+    "paged_append",
+    "paged_gather",
+    "paged_write_pages",
+    "slot_read",
+    "slot_write",
+    "ContinuousBatchingScheduler",
+    "Request",
+    "ServingEngine",
+]
+
+
+def __getattr__(name):
+    if name == "ServingEngine":
+        from repro.serving.engine import ServingEngine
+        return ServingEngine
+    raise AttributeError(name)

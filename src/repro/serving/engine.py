@@ -1,0 +1,152 @@
+"""Serving engine: continuous batching over jitted prefill/decode steps
+with paged caches.
+
+Shape discipline — the decode step compiles exactly once per engine:
+``(max_slots, 1)`` tokens against the shared pools, with block tables
+and per-slot fill levels as data. A mixed stream of request lengths
+never retriggers decode compilation. Prefill runs one request at a time
+at its exact prompt length (jax caches one executable per distinct
+length), writes the resulting cache into that sequence's pages, and
+scatters recurrent (mamba/xlstm) state into the sequence's slot — so
+every model family in models/decode.py serves through the same engine.
+
+The loop each engine step: admit waiting requests into free slots
+(FIFO, under the prefill token budget) -> prefill them -> one batched
+decode step for every active slot -> record tokens, evict finished
+sequences, free their pages.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.model_config import ModelConfig
+from repro.models.decode import ATTN_STATE_KEYS, recurrent_slot_axes
+from repro.models.model import (
+    decode_step_paged,
+    init_decode_state,
+    init_paged_state,
+    prefill,
+)
+from repro.serving.paged_cache import PagedCacheConfig, paged_write_pages, slot_write
+from repro.serving.scheduler import ContinuousBatchingScheduler, Request, SeqState
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params, pcfg: PagedCacheConfig, *,
+                 prefill_token_budget: Optional[int] = None):
+        if cfg.family == "encdec":
+            raise NotImplementedError("paged serving targets decoder-only families")
+        self.cfg = cfg
+        self.params = params
+        self.pcfg = pcfg
+        self.state = init_paged_state(cfg, pcfg)
+        self.sched = ContinuousBatchingScheduler(pcfg, prefill_token_budget)
+        self._next_input = np.zeros((pcfg.max_slots,), dtype=np.int32)
+
+        self._decode_fn = jax.jit(
+            lambda p, t, st, bt, sl: decode_step_paged(p, t, st, bt, sl, cfg),
+            donate_argnums=(2,),
+        )
+        self._prefill_fn = jax.jit(lambda p, t, st: prefill(p, t, cfg, st))
+        self._write_pages = jax.jit(
+            lambda pool, ids, v: paged_write_pages(pool, ids, jnp.squeeze(v, 1), n_stack=1),
+            donate_argnums=(0,),
+        )
+        self._scatter = {}
+        for key, ax in recurrent_slot_axes(cfg).items():
+            axes_tree = jax.tree.map(lambda _: ax, self.state[key])
+            self._scatter[key] = jax.jit(
+                lambda full, vals, slot, _axes=axes_tree: slot_write(full, _axes, slot, vals),
+                static_argnums=(2,), donate_argnums=(0,),
+            )
+
+        # stats
+        self.prefill_tokens = 0
+        self.decoded_tokens = 0
+        self.decode_steps = 0
+        self.wall_s = 0.0
+
+    # --------------------------------------------------------------- run --
+    def run(self, requests: Sequence[Request]) -> Dict[int, np.ndarray]:
+        """Serve a trace to completion. ``Request.arrival`` staggers
+        enqueueing in engine-step time (a request is invisible to the
+        scheduler before its arrival step). Returns rid -> generated
+        token ids (first token from prefill, rest from decode)."""
+        pending: List[Request] = sorted(requests, key=lambda r: r.arrival)
+        first_new = len(self.sched.finished)            # segment repeated run()s
+        t0 = time.time()
+        clock = 0
+        while pending or self.sched.has_work:
+            while pending and pending[0].arrival <= clock:
+                self.sched.submit(pending.pop(0))
+            for seq in self.sched.admit():
+                self._prefill_into(seq)
+            if self.sched.active:
+                self._decode_once()
+            clock += 1
+        jax.block_until_ready(jax.tree.leaves(self.state)[0])
+        self.wall_s += time.time() - t0
+        return {s.request.rid: np.asarray(s.generated, dtype=np.int32)
+                for s in self.sched.finished[first_new:]}
+
+    # ------------------------------------------------------------- steps --
+    def _prefill_into(self, seq: SeqState) -> None:
+        req = seq.request
+        tokens = jnp.asarray(req.prompt, dtype=jnp.int32)[None]
+        tmp = init_decode_state(self.cfg, 1, req.prompt_len)
+        logits, filled = self._prefill_fn(self.params, tokens, tmp)
+        page_ids = jnp.asarray(np.asarray(seq.pages, dtype=np.int32))
+        for key in ATTN_STATE_KEYS:
+            if key in self.state:
+                self.state[key] = jax.tree.map(
+                    lambda pool, v: self._write_pages(pool, page_ids, v),
+                    self.state[key], filled[key])
+        for key, scatter in self._scatter.items():
+            self.state[key] = scatter(self.state[key], filled[key], seq.slot)
+        tok = int(np.asarray(jnp.argmax(logits[0, -1])))
+        self._next_input[seq.slot] = tok
+        self.prefill_tokens += req.prompt_len
+        self.sched.on_prefill_token(seq.slot, tok)
+
+    def _decode_once(self) -> None:
+        self.sched.ensure_append_capacity()
+        bt = jnp.asarray(self.sched.block_table)
+        sl = jnp.asarray(self.sched.seq_lens)
+        toks = jnp.asarray(self._next_input)[:, None]
+        logits, self.state = self._decode_fn(self.params, toks, self.state, bt, sl)
+        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1)).astype(np.int32)
+        active_slots = list(self.sched.active)
+        for slot in active_slots:
+            tok = int(nxt[slot])
+            self._next_input[slot] = tok
+            self.sched.on_token(slot, tok)
+        self.decode_steps += 1
+        self.decoded_tokens += len(active_slots)
+
+    # ------------------------------------------------------------- stats --
+    def attn_cache_bytes(self) -> int:
+        """Bytes held by the paged attention pools (the memory the
+        static (batch, max_seq) layout pins at worst case instead)."""
+        total = 0
+        for key in ATTN_STATE_KEYS:
+            if key in self.state:
+                total += sum(leaf.size * leaf.dtype.itemsize
+                             for leaf in jax.tree.leaves(self.state[key]))
+        return total
+
+    def stats(self) -> Dict[str, float]:
+        gen = sum(len(s.generated) for s in self.sched.finished)
+        return {
+            "requests": float(len(self.sched.finished)),
+            "prefill_tokens": float(self.prefill_tokens),
+            "generated_tokens": float(gen),
+            "decode_steps": float(self.decode_steps),
+            "wall_s": self.wall_s,
+            "tokens_per_s": (self.prefill_tokens + gen) / self.wall_s if self.wall_s else 0.0,
+            "attn_cache_bytes": float(self.attn_cache_bytes()),
+        }

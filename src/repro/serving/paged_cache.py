@@ -1,0 +1,171 @@
+"""Paged KV cache: fixed-size pages allocated from a shared pool, with a
+per-sequence block table mapping logical token positions to physical
+pages (the vLLM/SHARK-Engine design).
+
+The static serving cache materializes ``(batch, max_seq)`` per layer —
+worst-case memory for every sequence, the exact materialize-the-maximum
+waste SCT's never-materialize rule rejects for weights. Here a sequence
+only holds the pages its tokens occupy, so a mixed stream of request
+lengths shares one small pool.
+
+Device side (pure, jit-friendly; leaves are per-layer pools):
+  * pool layout    — ``(num_pages + 1, page_size, *feature)``; the last
+    page is the *null page*: inactive decode slots point at it, so the
+    batched one-token append always has a harmless write target.
+  * ``paged_gather``      — block table -> contiguous ``(slots, S, ...)``
+    view for attention (masked positions may hold stale page data; the
+    attention mask makes them unreachable).
+  * ``paged_append``      — write one new token per slot at its fill
+    position.
+  * ``paged_write_pages`` — scatter a prefilled prompt cache into the
+    pages allocated for one sequence.
+
+Recurrent (mamba / xlstm) decode state is a fixed-size single "page" per
+sequence, so it pages trivially: ``slot_read`` / ``slot_write`` index the
+slot axis of the stacked state arrays.
+
+Host side: ``PagePool`` is the free-list allocator the continuous-
+batching scheduler draws from.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedCacheConfig:
+    """Geometry of the shared pool.
+
+    ``num_pages`` is the allocatable pool size (pool arrays carry one
+    extra null page). ``max_pages_per_seq`` bounds the block-table width;
+    the contiguous attention view is ``page_size * max_pages_per_seq``
+    tokens wide.
+    """
+    page_size: int = 16
+    num_pages: int = 64
+    max_slots: int = 4
+    max_pages_per_seq: int = 8
+
+    @property
+    def max_seq(self) -> int:
+        return self.page_size * self.max_pages_per_seq
+
+    @property
+    def null_page(self) -> int:
+        return self.num_pages
+
+    def pages_for(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.page_size)
+
+
+# ======================================================================
+# Device-side ops (single pool leaf; models stack a leading layer axis)
+# ======================================================================
+
+def paged_gather(pool: jax.Array, block_table: jax.Array) -> jax.Array:
+    """pool (P, page, *f) + block_table (b, n) -> (b, n*page, *f).
+
+    Pages land in logical order, so the result is positionally identical
+    to a static ``(b, S)`` cache for the first ``seq_len`` tokens of each
+    row; positions past ``seq_len`` may hold stale or null-page data and
+    must stay behind the attention validity mask.
+    """
+    b, n = block_table.shape
+    g = jnp.take(pool, block_table, axis=0)            # (b, n, page, *f)
+    return g.reshape(b, n * pool.shape[1], *pool.shape[2:])
+
+
+def paged_append(pool: jax.Array, block_table: jax.Array, seq_lens: jax.Array,
+                 vals: jax.Array) -> jax.Array:
+    """Write one token per slot: pool[bt[i, len_i // page], len_i % page]
+    = vals[i]. vals: (b, *f). Inactive slots (len 0, block table on the
+    null page) write harmlessly into the null page."""
+    page = pool.shape[1]
+    page_idx = jnp.minimum(seq_lens // page, block_table.shape[1] - 1)
+    phys = jnp.take_along_axis(block_table, page_idx[:, None], axis=1)[:, 0]
+    return pool.at[phys, seq_lens % page].set(vals.astype(pool.dtype))
+
+
+def paged_write_pages(pool: jax.Array, page_ids: jax.Array, vals: jax.Array,
+                      *, n_stack: int = 0) -> jax.Array:
+    """Scatter a contiguous per-sequence cache into its pages.
+
+    pool (*stack, P, page, *f) with ``n_stack`` leading stacked axes
+    (layer / period — block tables are shared across layers, so one call
+    writes every layer's pool); page_ids (n,); vals (*stack, s, *f) with
+    s <= n*page. The tail of the last page is zero-padded — those
+    positions are masked until a later append overwrites them.
+    """
+    page = pool.shape[n_stack + 1]
+    n = page_ids.shape[0]
+    s = vals.shape[n_stack]
+    pad = [(0, 0)] * vals.ndim
+    pad[n_stack] = (0, n * page - s)
+    vals = jnp.pad(vals, pad)
+    new_shape = vals.shape[:n_stack] + (n, page) + vals.shape[n_stack + 1:]
+    vals = vals.reshape(new_shape).astype(pool.dtype)
+    idx = (slice(None),) * n_stack + (page_ids,)
+    return pool.at[idx].set(vals)
+
+
+# ------------------------------------------------- recurrent slot state --
+
+def slot_write(state_tree, slot_axes, slot: int, values):
+    """Scatter one sequence's recurrent decode state (batch-1 leaves)
+    into the slot axis of the stacked serving state."""
+    def put(leaf, axis, val):
+        val = jnp.squeeze(val, axis=axis).astype(leaf.dtype)
+        idx = (slice(None),) * axis + (slot,)
+        return leaf.at[idx].set(val)
+
+    return jax.tree.map(put, state_tree, slot_axes, values)
+
+
+def slot_read(state_tree, slot_axes, slot: int):
+    """Gather one sequence's recurrent state back out (keeps a batch-1
+    axis so it round-trips with slot_write)."""
+    def take(leaf, axis):
+        idx = (slice(None),) * axis + (slice(slot, slot + 1),)
+        return leaf[idx]
+
+    return jax.tree.map(take, state_tree, slot_axes)
+
+
+# ======================================================================
+# Host-side allocator
+# ======================================================================
+
+class PagePool:
+    """Free-list page allocator. Pages are plain ints in
+    [0, num_pages); the null page is never handed out."""
+
+    def __init__(self, num_pages: int):
+        self.num_pages = num_pages
+        self._free: List[int] = list(range(num_pages - 1, -1, -1))
+        self._allocated: set[int] = set()
+
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    @property
+    def allocated_count(self) -> int:
+        return len(self._allocated)
+
+    def alloc(self, n: int) -> List[int]:
+        if n > len(self._free):
+            raise RuntimeError(f"page pool exhausted: want {n}, have {len(self._free)}")
+        out = [self._free.pop() for _ in range(n)]
+        self._allocated.update(out)
+        return out
+
+    def free(self, page_ids: Sequence[int]) -> None:
+        for p in page_ids:
+            if p not in self._allocated:
+                raise RuntimeError(f"double free of page {p}")
+            self._allocated.remove(p)
+            self._free.append(p)

@@ -1,0 +1,185 @@
+"""Continuous-batching scheduler: a FIFO request queue feeding a fixed
+set of decode slots, with page-pool accounting.
+
+Policy (host-side, cheap — the device only ever sees static shapes):
+
+  * **admission** — strictly FIFO: the head request is admitted when a
+    slot is free, its worst-case page need fits the *unreserved* pool,
+    and the per-step prefill token budget allows it. Later requests
+    never jump the head (no starvation under a full queue).
+  * **reservation** — pages for ``prompt + max_new_tokens`` are reserved
+    at admission but allocated lazily as the sequence crosses page
+    boundaries, so a running sequence can never hit pool OOM mid-flight
+    and reserved-but-unused pages show up in the accounting.
+  * **eviction** — finished sequences (max_new reached or EOS) free
+    their slot, pages, and reservation immediately; the freed capacity
+    admits the next waiting request on the same engine step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+import numpy as np
+
+from repro.serving.paged_cache import PagedCacheConfig, PagePool
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # (prompt_len,) int32 token ids
+    max_new_tokens: int
+    arrival: int = 0                   # engine step at which it enters the queue
+    eos_id: Optional[int] = None
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+    @property
+    def max_total_len(self) -> int:
+        return self.prompt_len + self.max_new_tokens
+
+
+@dataclasses.dataclass
+class SeqState:
+    request: Request
+    slot: int
+    seq_len: int                       # tokens whose KV/state is cached
+    pages: List[int]                   # allocated physical pages, logical order
+    reserved_pages: int                # worst-case commitment at admission
+    generated: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def finished(self) -> bool:
+        if len(self.generated) >= self.request.max_new_tokens:
+            return True
+        eos = self.request.eos_id
+        return eos is not None and len(self.generated) > 0 and self.generated[-1] == eos
+
+
+class ContinuousBatchingScheduler:
+    """Owns slots, block tables, and the page pool. The engine calls:
+    ``submit`` -> [``admit`` -> prefill]* -> ``ensure_append_capacity``
+    -> decode -> ``on_token`` (evicts finished) — once per step."""
+
+    def __init__(self, pcfg: PagedCacheConfig, prefill_token_budget: Optional[int] = None):
+        self.pcfg = pcfg
+        self.pool = PagePool(pcfg.num_pages)
+        self.prefill_token_budget = prefill_token_budget
+        self.waiting: Deque[Request] = deque()
+        self.active: Dict[int, SeqState] = {}          # slot -> seq
+        self._free_slots: List[int] = list(range(pcfg.max_slots - 1, -1, -1))
+        self._reserved_total = 0
+        self.block_table = np.full((pcfg.max_slots, pcfg.max_pages_per_seq),
+                                   pcfg.null_page, dtype=np.int32)
+        self.seq_lens = np.zeros((pcfg.max_slots,), dtype=np.int32)
+        self.finished: List[SeqState] = []
+
+    # ------------------------------------------------------------- api --
+    def submit(self, req: Request) -> None:
+        need = self.pcfg.pages_for(req.max_total_len)
+        if need > self.pcfg.max_pages_per_seq:
+            raise ValueError(
+                f"request {req.rid}: {req.max_total_len} tokens exceed "
+                f"max_pages_per_seq*page_size={self.pcfg.max_seq}")
+        if need > self.pcfg.num_pages:
+            raise ValueError(
+                f"request {req.rid}: needs {need} pages, pool has {self.pcfg.num_pages}")
+        self.waiting.append(req)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.active)
+
+    def admit(self) -> List[SeqState]:
+        """Admit from the queue head while slot/pages/budget allow.
+        Returns newly admitted sequences (engine prefills them)."""
+        admitted: List[SeqState] = []
+        budget = self.prefill_token_budget
+        spent = 0
+        while self.waiting and self._free_slots:
+            req = self.waiting[0]
+            need = self.pcfg.pages_for(req.max_total_len)
+            if self._reserved_total + need > self.pcfg.num_pages:
+                break                                   # head waits; no queue-jumping
+            if budget is not None and spent and spent + req.prompt_len > budget:
+                break                                   # budget bounds each step, but
+                                                        # never blocks the first admit
+                                                        # (progress guarantee)
+            self.waiting.popleft()
+            slot = self._free_slots.pop()
+            pages = self.pool.alloc(self.pcfg.pages_for(req.prompt_len))
+            self._reserved_total += need
+            seq = SeqState(request=req, slot=slot, seq_len=req.prompt_len,
+                           pages=pages, reserved_pages=need)
+            self.active[slot] = seq
+            self.block_table[slot, :len(pages)] = pages
+            self.seq_lens[slot] = req.prompt_len
+            spent += req.prompt_len
+            admitted.append(seq)
+        return admitted
+
+    def ensure_append_capacity(self) -> None:
+        """Before a decode step: every active slot must own the page its
+        next token lands in. Allocation cannot fail — the pages were
+        reserved at admission."""
+        for seq in self.active.values():
+            page_idx = seq.seq_len // self.pcfg.page_size
+            if page_idx >= len(seq.pages):
+                assert len(seq.pages) < seq.reserved_pages, (
+                    f"seq {seq.request.rid} outgrew its reservation")
+                (page,) = self.pool.alloc(1)
+                seq.pages.append(page)
+                self.block_table[seq.slot, page_idx] = page
+
+    def on_token(self, slot: int, token: int) -> Optional[SeqState]:
+        """Record one generated token for a slot (its KV was appended by
+        the decode step). Returns the SeqState if the sequence finished
+        (already evicted), else None."""
+        seq = self.active[slot]
+        seq.generated.append(int(token))
+        seq.seq_len += 1
+        self.seq_lens[slot] = seq.seq_len
+        if seq.finished:
+            self._evict(seq)
+            return seq
+        return None
+
+    def on_prefill_token(self, slot: int, token: int) -> Optional[SeqState]:
+        """Record the token produced by prefill (not yet in the cache —
+        the next decode step appends it)."""
+        seq = self.active[slot]
+        seq.generated.append(int(token))
+        if seq.finished:                                 # max_new_tokens == 1
+            self._evict(seq)
+            return seq
+        return None
+
+    # -------------------------------------------------------- internal --
+    def _evict(self, seq: SeqState) -> None:
+        del self.active[seq.slot]
+        self.pool.free(seq.pages)
+        self._reserved_total -= seq.reserved_pages
+        self.block_table[seq.slot, :] = self.pcfg.null_page
+        self.seq_lens[seq.slot] = 0
+        self._free_slots.append(seq.slot)
+        self.finished.append(seq)
+
+    # ------------------------------------------------------ invariants --
+    def check_invariants(self) -> None:
+        """Cheap structural invariants, asserted by tests after every
+        step: slots partition exactly, pages never leak, reservations
+        bound allocations."""
+        assert len(self.active) + len(self._free_slots) == self.pcfg.max_slots
+        assert set(self.active) | set(self._free_slots) == set(range(self.pcfg.max_slots))
+        held = [p for s in self.active.values() for p in s.pages]
+        assert len(held) == len(set(held)), "page double-booked"
+        assert len(held) == self.pool.allocated_count, "page leak"
+        assert self.pool.allocated_count <= self._reserved_total <= self.pcfg.num_pages
+        for seq in self.active.values():
+            assert len(seq.pages) <= seq.reserved_pages
+            used = self.block_table[seq.slot][self.block_table[seq.slot] != self.pcfg.null_page]
+            assert list(used) == seq.pages

@@ -1,0 +1,75 @@
+"""Minimal deterministic stand-in for the subset of hypothesis used by
+the property tests (``given``/``settings``/``strategies.integers``/
+``strategies.floats``), so the tier-1 suite collects and runs in
+environments where hypothesis is not installed (the paper-repro
+container bakes in only the jax toolchain).
+
+Real hypothesis — installed via ``pip install -e .[test]`` / CI — is
+always preferred; test modules fall back to this module only on
+``ModuleNotFoundError``. The fallback draws a fixed number of
+pseudo-random examples from a seeded RNG, so runs are reproducible but
+without shrinking or database replay.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def _integers(min_value, max_value):
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def _floats(min_value, max_value):
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+class st:  # noqa: N801 — mirrors `from hypothesis import strategies as st`
+    integers = staticmethod(_integers)
+    floats = staticmethod(_floats)
+
+
+def settings(max_examples: int = 10, deadline=None, **_ignored):
+    """Decorator-factory: records max_examples on the wrapped test."""
+
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strategies):
+    """Keyword-strategies form only (the form the suite uses). Runs the
+    test once per drawn example; remaining parameters stay visible to
+    pytest for fixture injection."""
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_fallback_max_examples", 10)
+            for i in range(n):
+                # string seed: hashed with sha512, stable across processes
+                # (a tuple seed would go through hash() and vary with
+                # PYTHONHASHSEED)
+                rng = random.Random(f"{fn.__name__}:{i}")
+                drawn = {k: s.draw(rng) for k, s in strategies.items()}
+                fn(*args, **kwargs, **drawn)
+
+        # hide strategy-bound params from pytest so it does not look for
+        # same-named fixtures
+        sig = inspect.signature(fn)
+        kept = [p for name, p in sig.parameters.items() if name not in strategies]
+        wrapper.__signature__ = sig.replace(parameters=kept)
+        return wrapper
+
+    return deco

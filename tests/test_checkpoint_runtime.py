@@ -89,6 +89,27 @@ def test_restart_is_bitwise_identical(tmp_path):
     assert int(straight["step"]) == int(resumed["step"]) == 12
 
 
+def test_restart_across_loop_instances(tmp_path):
+    """Failure-injection restart across *processes*: the first loop dies
+    mid-run past its restart budget, a fresh TrainLoop instance (new
+    process in production) resumes from its checkpoints and lands
+    bit-identical to an uninterrupted run."""
+    cfg = get_config("smollm2-1.7b", reduced=True)
+    straight = _make_loop(tmp_path / "a", cfg).run()
+
+    def bomb(step):
+        if step == 9:
+            raise RuntimeError("injected node failure")
+
+    first = _make_loop(tmp_path / "b", cfg, failure_hook=bomb)
+    first.cfg.max_restarts = 0                      # process actually dies
+    with pytest.raises(RuntimeError):
+        first.run()
+    resumed = _make_loop(tmp_path / "b", cfg).run()  # fresh instance, same dir
+    assert tree_equal(straight["params"], resumed["params"])
+    assert int(resumed["step"]) == 12
+
+
 def test_too_many_failures_raises(tmp_path):
     cfg = get_config("smollm2-1.7b", reduced=True)
 

@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # container without hypothesis: deterministic shim
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import (
     qr_retract,

@@ -80,6 +80,8 @@ shape = ShapeSpec("t", 64, 8, "{kind}")
 lowered = steps_mod.lower_step(cfg, shape, mesh)
 compiled = lowered.compile()
 cost = compiled.cost_analysis()
+if isinstance(cost, (list, tuple)):  # older jax returns [dict]
+    cost = cost[0] if cost else {{}}
 print(json.dumps({{"flops": cost.get("flops", 0.0)}}))
 """
 
