@@ -71,7 +71,7 @@ def _run_static(cfg, params, prompts):
     return n_tok / dt, _static_cache_bytes(cfg, SLOTS, max_total)
 
 
-def _run_paged(cfg, params, prompts):
+def _run_paged(cfg, params, prompts, quantize=None):
     from repro.serving import PagedCacheConfig, Request
     from repro.serving.engine import ServingEngine
 
@@ -79,12 +79,14 @@ def _run_paged(cfg, params, prompts):
     # global worst case — the paged memory win
     pcfg = PagedCacheConfig(page_size=8, num_pages=20, max_slots=SLOTS,
                             max_pages_per_seq=5)
-    engine = ServingEngine(cfg, params, pcfg, prefill_token_budget=64)
+    engine = ServingEngine(cfg, params, pcfg, prefill_token_budget=64,
+                           quantize=quantize)
     reqs = [Request(rid=i, prompt=p, max_new_tokens=GEN, arrival=(i // SLOTS) * 3)
             for i, p in enumerate(prompts)]
     engine.run(reqs)
     st = engine.stats()
-    return st["tokens_per_s"], int(st["attn_cache_bytes"])
+    return (st["tokens_per_s"], int(st["attn_cache_bytes"]),
+            int(st["weight_bytes"]))
 
 
 def run() -> list[str]:
@@ -97,16 +99,26 @@ def run() -> list[str]:
     prompts = _workload(cfg.vocab)
 
     tps_s, bytes_s = _run_static(cfg, params, prompts)
-    print(f"static: {tps_s:8.1f} tok/s   cache {bytes_s:8d} bytes "
+    print(f"static:     {tps_s:8.1f} tok/s   cache {bytes_s:8d} bytes "
           f"(batch x worst-case max_seq)")
     out.append(f"serving_static,{1e6 / max(tps_s, 1e-9):.1f},"
                f"tok_s={tps_s:.1f};cache_bytes={bytes_s}")
 
-    tps_p, bytes_p = _run_paged(cfg, params, prompts)
-    print(f"paged:  {tps_p:8.1f} tok/s   cache {bytes_p:8d} bytes "
-          f"(shared pool, {bytes_s / max(bytes_p, 1):.2f}x smaller)")
+    tps_p, bytes_p, wb_fp = _run_paged(cfg, params, prompts)
+    print(f"paged fp32: {tps_p:8.1f} tok/s   cache {bytes_p:8d} bytes "
+          f"(shared pool, {bytes_s / max(bytes_p, 1):.2f}x smaller)   "
+          f"weights {wb_fp:8d} bytes")
     out.append(f"serving_paged,{1e6 / max(tps_p, 1e-9):.1f},"
-               f"tok_s={tps_p:.1f};cache_bytes={bytes_p}")
+               f"tok_s={tps_p:.1f};cache_bytes={bytes_p};weight_bytes={wb_fp}")
+
+    # per-precision weight memory + throughput: int8 per-channel factors
+    # dequantized on the fly (serving/quantize.py)
+    tps_q, bytes_q, wb_q = _run_paged(cfg, params, prompts, quantize="int8")
+    print(f"paged int8: {tps_q:8.1f} tok/s   cache {bytes_q:8d} bytes   "
+          f"weights {wb_q:8d} bytes ({wb_fp / max(wb_q, 1):.2f}x smaller)")
+    out.append(f"serving_paged_int8,{1e6 / max(tps_q, 1e-9):.1f},"
+               f"tok_s={tps_q:.1f};cache_bytes={bytes_q};weight_bytes={wb_q};"
+               f"weight_reduction={wb_fp / max(wb_q, 1):.2f}x")
     return out
 
 

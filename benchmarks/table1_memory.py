@@ -5,6 +5,11 @@ This is exact integer arithmetic over the parameterization (the paper's
 own methodology), verified against the published ratios, plus an
 *instantiated* check at the smallest scale: we actually allocate a
 SpectralLinear + its AdamW state and count bytes.
+
+Extended (this repo's precision policy): per-precision *serving* weight
+bytes per layer — dense fp32 vs SCT fp32 vs SCT bf16 vs SCT int8
+(per-channel scales + fp32 singular values), with an instantiated
+quantize_tree check.
 """
 from __future__ import annotations
 
@@ -15,6 +20,19 @@ import jax.numpy as jnp
 
 from repro.core.spectral import spectral_param_count, dense_param_count, spectral_init
 from repro.optim import adamw_init
+
+
+def _sct_serving_bytes(m: int, n: int, k: int, precision: str) -> int:
+    """Exact serving footprint of one spectral layer per precision.
+    int8: k(m+n) int8 factor entries + 2k fp32 per-column scales + k
+    fp32 singular values."""
+    if precision == "fp32":
+        return 4 * spectral_param_count(m, n, k)
+    if precision == "bf16":
+        return 2 * spectral_param_count(m, n, k)
+    if precision == "int8":
+        return k * (m + n) + 4 * (2 * k) + 4 * k
+    raise ValueError(precision)
 
 ROWS = [
     ("SmolLM2-135M", 576, 1536, 13),
@@ -55,6 +73,32 @@ def run() -> list[str]:
     print(f"instantiated SCT state @135M-layer: {actual/1e6:.2f}MB "
           f"(analytic {expect/1e6:.2f}MB)")
     out.append(f"table1_instantiated,{us:.0f},{actual}B")
+
+    # ---- per-precision serving weight bytes per MLP layer -------------
+    print("\n# Serving weight bytes per MLP layer, by precision "
+          "(dense fp32 as baseline)")
+    print(f"{'model':14s} {'dense_fp32':>11s} {'sct_fp32':>10s} "
+          f"{'sct_bf16':>10s} {'sct_int8':>10s} {'int8_vs_dense':>13s}")
+    for name, m, n, _ in ROWS:
+        dense_b = 4 * dense_param_count(m, n)
+        row = {pr: _sct_serving_bytes(m, n, k, pr)
+               for pr in ("fp32", "bf16", "int8")}
+        print(f"{name:14s} {dense_b/1e6:9.2f}MB {row['fp32']/1e6:8.3f}MB "
+              f"{row['bf16']/1e6:8.3f}MB {row['int8']/1e6:8.3f}MB "
+              f"{dense_b/row['int8']:11.0f}x")
+        out.append(f"table1_serving_{name},0,"
+                   f"int8={row['int8']}B;ratio={dense_b/row['int8']:.0f}x")
+
+    # instantiated: quantize_tree over a real spectral layer must match
+    # the analytic int8 figure (q8 + 2 scale vectors + s)
+    from repro.serving.quantize import param_bytes, quantize_tree
+
+    qp = quantize_tree(p)
+    got = param_bytes(qp)
+    want = _sct_serving_bytes(576, 1536, k, "int8")
+    status = "OK" if got == want else f"MISMATCH (analytic {want})"
+    print(f"instantiated int8 @135M-layer: {got/1e6:.3f}MB  {status}")
+    out.append(f"table1_int8_instantiated,0,{got}B_{status}")
     return out
 
 

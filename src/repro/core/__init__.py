@@ -27,6 +27,17 @@ from repro.core.manifold import (
     orthogonality_error,
     project_tangent,
 )
+from repro.core.precision import (
+    PrecisionPolicy,
+    POLICIES,
+    precision_policy,
+    cast_tree,
+    loss_scale_init,
+    loss_scale_update,
+    scale_loss,
+    unscale_grads,
+    all_finite,
+)
 from repro.core.tree import retract_tree, spectral_leaf_mask
 
 __all__ = [
@@ -38,6 +49,15 @@ __all__ = [
     "dense_to_spectral",
     "spectral_to_dense",
     "rank_for_energy",
+    "PrecisionPolicy",
+    "POLICIES",
+    "precision_policy",
+    "cast_tree",
+    "loss_scale_init",
+    "loss_scale_update",
+    "scale_loss",
+    "unscale_grads",
+    "all_finite",
     "qr_retract",
     "cholesky_qr2_retract",
     "cayley_retract",

@@ -1,0 +1,141 @@
+"""Precision policy: param / compute / accum dtypes plus dynamic loss
+scaling with overflow skip.
+
+The paper's memory-wall argument (Table 1) is made entirely in fp32; a
+production system needs an explicit precision contract. Three presets:
+
+  fp32   — everything fp32 (the paper's setting; numerics baseline).
+  bf16   — bf16 factors AND bf16 compute: the memory-minimal, numerically
+           fragile mode. QR retraction on bf16-stored factors is exactly
+           the instability the property tests in tests/test_precision.py
+           pin down (orthogonality error is bounded by bf16 eps, ~8e-3).
+  mixed  — the production policy: *master* spectral factors U/s/V (and
+           all dense params + Adam moments) stay fp32; the forward casts
+           to bf16 at apply time; the loss is multiplied by a dynamic
+           scale and gradients are unscaled before the update. A step
+           whose unscaled gradients contain inf/nan is *skipped* (params,
+           moments and retraction untouched) and the scale backs off.
+
+Loss-scale state is a tiny pytree that lives inside the TrainState, so
+checkpointing, restart bit-exactness, and sharding (replicated) all come
+for free from the existing runtime.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPolicy:
+    name: str = "fp32"
+    param_dtype: str = "float32"      # storage dtype of params / masters
+    compute_dtype: str = "float32"    # forward/backward activation dtype
+    accum_dtype: str = "float32"      # gradient accumulation (microbatch)
+    loss_scaling: bool = False        # dynamic loss scale + overflow skip
+    init_scale: float = 2.0 ** 15
+    growth_factor: float = 2.0
+    backoff_factor: float = 0.5
+    growth_interval: int = 2000       # finite steps between scale doublings
+    min_scale: float = 1.0
+    max_scale: float = 2.0 ** 24
+
+    @property
+    def param_jnp(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def compute_jnp(self):
+        return jnp.dtype(self.compute_dtype)
+
+    @property
+    def accum_jnp(self):
+        return jnp.dtype(self.accum_dtype)
+
+
+POLICIES: Dict[str, PrecisionPolicy] = {
+    "fp32": PrecisionPolicy(),
+    "bf16": PrecisionPolicy(name="bf16", param_dtype="bfloat16",
+                            compute_dtype="bfloat16"),
+    "mixed": PrecisionPolicy(name="mixed", compute_dtype="bfloat16",
+                             loss_scaling=True),
+}
+
+
+def precision_policy(policy: Union[str, PrecisionPolicy, None]) -> Optional[PrecisionPolicy]:
+    """Resolve a policy by name ('fp32' | 'bf16' | 'mixed'), pass through
+    a PrecisionPolicy, or return None (legacy behaviour: compute dtype
+    from ModelConfig.dtype, no loss scaling)."""
+    if policy is None or isinstance(policy, PrecisionPolicy):
+        return policy
+    try:
+        return POLICIES[policy]
+    except KeyError:
+        raise ValueError(
+            f"unknown precision {policy!r}; options {list(POLICIES)}") from None
+
+
+def cast_tree(tree: Any, dtype) -> Any:
+    """Cast every floating-point leaf; integer leaves (step counters,
+    token ids) pass through untouched."""
+    def cast(x):
+        if hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+
+    return jax.tree.map(cast, tree)
+
+
+# ----------------------------------------------------------------- loss scale
+
+LossScaleState = Dict[str, jax.Array]   # {"scale", "good_steps", "skipped"}
+
+
+def loss_scale_init(policy: PrecisionPolicy) -> LossScaleState:
+    return {
+        "scale": jnp.float32(policy.init_scale),
+        "good_steps": jnp.zeros((), jnp.int32),
+        "skipped": jnp.zeros((), jnp.int32),
+    }
+
+
+def all_finite(tree: Any) -> jax.Array:
+    """Scalar bool: every float leaf of the tree is finite."""
+    checks = [jnp.all(jnp.isfinite(leaf)) for leaf in jax.tree.leaves(tree)
+              if jnp.issubdtype(jnp.asarray(leaf).dtype, jnp.floating)]
+    if not checks:
+        return jnp.bool_(True)
+    return functools.reduce(jnp.logical_and, checks)
+
+
+def loss_scale_update(state: LossScaleState, finite: jax.Array,
+                      policy: PrecisionPolicy) -> LossScaleState:
+    """Dynamic loss-scale schedule: after ``growth_interval`` consecutive
+    finite steps the scale doubles (capped at max_scale); an overflow
+    halves it (floored at min_scale) and resets the streak."""
+    good = state["good_steps"] + 1
+    grow = good >= policy.growth_interval
+    grown = jnp.minimum(state["scale"] * policy.growth_factor,
+                        jnp.float32(policy.max_scale))
+    scale_ok = jnp.where(grow, grown, state["scale"])
+    good_ok = jnp.where(grow, 0, good)
+    scale_bad = jnp.maximum(state["scale"] * policy.backoff_factor,
+                            jnp.float32(policy.min_scale))
+    return {
+        "scale": jnp.where(finite, scale_ok, scale_bad).astype(jnp.float32),
+        "good_steps": jnp.where(finite, good_ok, 0).astype(jnp.int32),
+        "skipped": (state["skipped"] + jnp.where(finite, 0, 1)).astype(jnp.int32),
+    }
+
+
+def scale_loss(loss: jax.Array, state: Optional[LossScaleState]) -> jax.Array:
+    return loss if state is None else loss * state["scale"].astype(loss.dtype)
+
+
+def unscale_grads(grads: Any, state: LossScaleState) -> Any:
+    inv = 1.0 / state["scale"]
+    return jax.tree.map(lambda g: g.astype(jnp.float32) * inv, grads)

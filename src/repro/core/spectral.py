@@ -63,6 +63,11 @@ def spectral_apply(params: SpectralParams, x: jax.Array) -> jax.Array:
 
     Three small matmuls, O(b*k*(m+n)) FLOPs. No (m, n) tensor exists;
     autograd through this function yields factor-shaped gradients only.
+
+    Mixed precision note: the factors cast to ``x.dtype`` at apply time,
+    so the compute dtype is whatever the embedding cast chose
+    (PrecisionPolicy.compute_dtype via cfg.dtype) while the stored
+    masters keep their own dtype — the apply-time-cast contract.
     """
     U, s, V = params["U"], params["s"], params["V"]
     h = x @ U.astype(x.dtype)        # (..., k)   cost O(b m k)

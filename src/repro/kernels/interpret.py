@@ -21,7 +21,9 @@ _FALSY = ("0", "false", "no", "off")
 
 def default_interpret() -> bool:
     env = os.environ.get("SCT_INTERPRET")
-    if env is not None:
+    # empty string == unset (lets CI matrix legs blank the var instead of
+    # conditionally exporting it)
+    if env is not None and env.strip():
         v = env.strip().lower()
         if v in _TRUTHY:
             return True

@@ -60,6 +60,25 @@ def spectral_matmul(x, U, s, V):
     return y.reshape(*lead, V.shape[0])
 
 
+def spectral_matmul_q8(x, U_qt, s, V_qt):
+    """Fused spectral matmul over int8-quantized factors
+    (serving/quantize.py): per-channel dequant on the fly, then the same
+    h-in-VMEM kernel. The int8 tensors are the *persistent* weight
+    storage; the dequantized fp factors are transient per-call
+    allocations (XLA does not fuse producers into a pallas_call, so a
+    full-size fp U/V does exist in HBM for the call's duration — the
+    steady-state weight footprint is still the int8 one).
+
+    Factors dequantize to fp32 — exactly what the ``--verify`` oracle
+    (dequantize_tree) feeds the same kernel — so the quantized and
+    oracle paths stay bit-identical regardless of x.dtype."""
+    from repro.serving.quantize import dequantize_int8
+
+    U = dequantize_int8(U_qt)
+    V = dequantize_int8(V_qt)
+    return spectral_matmul(x, U, s, V)
+
+
 def _vjp_fwd(x, U, s, V):
     return spectral_matmul(x, U, s, V), (x, U, s, V)
 

@@ -17,6 +17,15 @@ pool:
 
 ``--verify`` re-decodes every request through the static path and
 checks the greedy outputs match token for token.
+
+Int8 serving (``--quantize int8``, either mode): spectral factors and
+dense projections are quantized per-channel to int8
+(serving/quantize.py) and dequantized on the fly at apply time. With
+``--verify`` the oracle is the *fp32 static path over the dequantized
+weights* — the greedy outputs of the int8 runtime must match it token
+for token (same effective weights, so any divergence is a bug in the
+on-the-fly dequant path, not quantization noise). The greedy agreement
+against the original unquantized weights is reported as a diagnostic.
 """
 from __future__ import annotations
 
@@ -92,7 +101,7 @@ def static_greedy_reference(cfg, params, prompt, gen, max_seq):
 
 
 def run_stream(args, cfg, params) -> None:
-    from repro.serving import PagedCacheConfig
+    from repro.serving import PagedCacheConfig, dequantize_tree
     from repro.serving.engine import ServingEngine
 
     pcfg = PagedCacheConfig(
@@ -102,7 +111,8 @@ def run_stream(args, cfg, params) -> None:
         max_pages_per_seq=args.pages_per_seq,
     )
     engine = ServingEngine(cfg, params, pcfg,
-                           prefill_token_budget=args.prefill_budget)
+                           prefill_token_budget=args.prefill_budget,
+                           quantize=args.quantize)
     trace = build_trace(args, cfg.vocab, pcfg)
     print(f"streaming {len(trace)} requests, prompt lens "
           f"{sorted({r.prompt_len for r in trace})}, slots={pcfg.max_slots}, "
@@ -115,23 +125,40 @@ def run_stream(args, cfg, params) -> None:
           f"tokens in {st['wall_s']:.2f}s ({st['tokens_per_s']:.1f} tok/s)")
     print(f"paged attention cache: {int(st['attn_cache_bytes'])} bytes "
           f"({pcfg.num_pages}+1 pages x {pcfg.page_size} tokens)")
+    if args.quantize:
+        print(f"weights: {int(st['weight_bytes'])} bytes {args.quantize} "
+              f"(fp32 {int(st['weight_bytes_fp'])} bytes, "
+              f"{st['weight_bytes_fp'] / st['weight_bytes']:.2f}x smaller)")
     first = trace[0]
     print("generated token ids (request 0):", out[first.rid][:16], "...")
 
     if args.verify:
+        # oracle: fp32 static path over the engine's effective weights
+        # (dequantized when --quantize) — must match token for token
+        oracle_params = dequantize_tree(engine.params) if args.quantize else params
         bad = 0
         for r in trace:
-            ref = static_greedy_reference(cfg, params, r.prompt, r.max_new_tokens,
-                                          pcfg.max_seq)
+            ref = static_greedy_reference(cfg, oracle_params, r.prompt,
+                                          r.max_new_tokens, pcfg.max_seq)
             if not np.array_equal(ref, out[r.rid]):
                 bad += 1
                 print(f"request {r.rid}: MISMATCH\n  static {ref}\n  paged  {out[r.rid]}")
         if bad:
             raise SystemExit(f"{bad}/{len(trace)} requests diverged from the static path")
-        print(f"verify: all {len(trace)} requests match the static path token-for-token")
+        print(f"verify: all {len(trace)} requests match the fp32 static path "
+              f"token-for-token")
+        if args.quantize:
+            agree = total = 0
+            for r in trace:
+                ref = static_greedy_reference(cfg, params, r.prompt,
+                                              r.max_new_tokens, pcfg.max_seq)
+                agree += int(np.sum(ref == out[r.rid]))
+                total += ref.size
+            print(f"diagnostic: {agree}/{total} greedy tokens agree with the "
+                  f"unquantized fp32 weights")
 
 
-def run_static(args, cfg, params) -> None:
+def run_static(args, cfg, params) -> np.ndarray:
     key = jax.random.PRNGKey(args.seed)
     max_seq = args.prompt_len + args.gen
     prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0, cfg.vocab)
@@ -174,6 +201,7 @@ def run_static(args, cfg, params) -> None:
     print(f"decode:  {t_decode/max(args.gen-1,1)*1e3:.2f} ms/token "
           f"({args.batch} sequences)")
     print("generated token ids (first sequence):", gen[0][:16], "...")
+    return gen
 
 
 def main() -> None:
@@ -199,7 +227,13 @@ def main() -> None:
     ap.add_argument("--prefill-budget", type=int, default=64,
                     help="max prefill tokens admitted per engine step")
     ap.add_argument("--verify", action="store_true",
-                    help="check streaming outputs against the static path")
+                    help="check streaming outputs against the static path "
+                         "(with --quantize: int8 outputs against the fp32 "
+                         "static path over the dequantized weights)")
+    ap.add_argument("--quantize", choices=["int8"], default=None,
+                    help="serve with int8 per-channel quantized weights "
+                         "(spectral factors + dense projections; "
+                         "dequant-on-the-fly)")
     args = ap.parse_args()
 
     if args.paged != args.stream:
@@ -209,6 +243,27 @@ def main() -> None:
     params = init_model(jax.random.PRNGKey(args.seed), cfg)
     if args.paged:
         run_stream(args, cfg, params)
+        return
+
+    if args.quantize:
+        from repro.serving import dequantize_tree, param_bytes, quantize_tree
+
+        qparams = quantize_tree(params)
+        print(f"weights: {param_bytes(qparams)} bytes {args.quantize} "
+              f"(fp32 {param_bytes(params)} bytes, "
+              f"{param_bytes(params) / param_bytes(qparams):.2f}x smaller)")
+        gen_q = run_static(args, cfg, qparams)
+        if args.verify:
+            gen_ref = run_static(args, cfg, dequantize_tree(qparams))
+            if not np.array_equal(gen_q, gen_ref):
+                bad = int(np.sum(np.any(gen_q != gen_ref, axis=1)))
+                raise SystemExit(
+                    f"{bad}/{args.batch} sequences: int8 path diverged from "
+                    f"the fp32 static path over dequantized weights")
+            print(f"verify: all {args.batch} sequences match the fp32 static "
+                  f"path token-for-token")
+    elif args.verify:
+        raise SystemExit("--verify needs --paged --stream or --quantize int8")
     else:
         run_static(args, cfg, params)
 

@@ -15,6 +15,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.config.model_config import ModelConfig
 from repro.config.shapes import ShapeSpec, input_specs
+from repro.core.precision import scale_loss
 from repro.models.model import init_model, train_loss, prefill, decode_step
 from repro.optim import make_sct_optimizer, SCTOptimizer
 from repro.sharding.rules import param_pspecs, set_current_mesh, constrain, dp_axes
@@ -38,14 +39,33 @@ def make_train_step(cfg: ModelConfig, optimizer: Optional[SCTOptimizer] = None,
     activation memory drops by the microbatch count while the gradient
     accumulator is only params-sized fp32, which SCT makes k(m+n+1)
     instead of mn (gradient accumulation is disproportionately cheap for
-    spectral models — DESIGN.md S2)."""
-    opt = optimizer or make_sct_optimizer(cfg)
+    spectral models — DESIGN.md S2).
 
-    def loss_fn(params, batch):
-        return train_loss(params, batch, cfg)
+    If the optimizer carries a PrecisionPolicy, its compute dtype
+    overrides ``cfg.dtype`` for the forward (bf16 apply-time casts off
+    the fp32 masters), and with loss scaling on, the loss is multiplied
+    by the dynamic scale before differentiation — ``opt.apply`` unscales
+    and skips overflowed steps. Metrics then report the *unscaled* loss
+    plus ``loss_scale`` / ``overflow``."""
+    opt = optimizer or make_sct_optimizer(cfg)
+    pol = opt.precision
+    cfg_eff = cfg if pol is None else cfg.replace(dtype=pol.compute_dtype)
+    accum_dtype = jnp.float32 if pol is None else pol.accum_jnp
 
     def train_step(state, batch):
         params = state["params"]
+        # scaling requires BOTH the policy and the state entry (a state
+        # restored from a non-mixed checkpoint lacks it) — mirrored by
+        # SCTOptimizer.apply, so scale and unscale always agree
+        scaling = (pol is not None and pol.loss_scaling
+                   and "loss_scale" in state)
+        scale = state["loss_scale"]["scale"] if scaling else None
+
+        def loss_fn(params, batch):
+            total, metrics = train_loss(params, batch, cfg_eff)
+            total = scale_loss(total, state["loss_scale"] if scaling else None)
+            return total, metrics
+
         if microbatches == 1:
             (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
         else:
@@ -62,17 +82,25 @@ def make_train_step(cfg: ModelConfig, optimizer: Optional[SCTOptimizer] = None,
 
             def body(acc, mb):
                 (l, met), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
-                acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), acc, g)
+                acc = jax.tree.map(lambda a, b: a + b.astype(accum_dtype), acc, g)
                 return acc, (l, met)
 
-            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, accum_dtype), params)
             grads, (losses, mets) = jax.lax.scan(body, zeros, mbatch)
             grads = jax.tree.map(lambda g: g / microbatches, grads)
             loss = jnp.mean(losses)
             metrics = jax.tree.map(lambda m: jnp.mean(m), mets)
         new_state = opt.apply(state, grads)
         metrics = dict(metrics)
-        metrics["loss"] = loss
+        if scaling:
+            # report the unscaled loss (scale is a power of two: exact)
+            metrics["loss"] = loss / scale
+            metrics["loss_scale"] = scale
+            metrics["overflow"] = (
+                new_state["loss_scale"]["skipped"] > state["loss_scale"]["skipped"]
+            ).astype(jnp.float32)
+        else:
+            metrics["loss"] = loss
         return new_state, metrics
 
     return train_step

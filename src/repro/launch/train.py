@@ -35,6 +35,11 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--precision", choices=["fp32", "bf16", "mixed"], default=None,
+                    help="fp32: everything fp32; bf16: bf16 factors+compute; "
+                         "mixed: fp32 master factors, bf16 compute, dynamic "
+                         "loss scaling with overflow skip (default: legacy "
+                         "config dtype, no scaling)")
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=50)
@@ -43,7 +48,7 @@ def main() -> None:
 
     cfg = get_config(args.arch, reduced=args.reduced)
     opt = make_sct_optimizer(cfg, lr=args.lr, warmup=min(100, args.steps // 10 + 1),
-                             total_steps=args.steps)
+                             total_steps=args.steps, precision=args.precision)
 
     n_dev = jax.device_count()
     mesh = None
@@ -86,8 +91,10 @@ def main() -> None:
         return opt.init(params)
 
     def log(step, metrics):
-        print(f"step {step:6d}  loss {metrics['loss']:.4f}  ce {metrics['ce_loss']:.4f}",
-              flush=True)
+        line = f"step {step:6d}  loss {metrics['loss']:.4f}  ce {metrics['ce_loss']:.4f}"
+        if "loss_scale" in metrics:
+            line += f"  scale {metrics['loss_scale']:.0f}"
+        print(line, flush=True)
 
     loop = TrainLoop(
         step_fn=step_fn,
@@ -102,6 +109,10 @@ def main() -> None:
     from repro.core.tree import max_orthogonality_error
 
     print("final ortho error:", float(max_orthogonality_error(state["params"])))
+    if "loss_scale" in state:
+        print(f"loss scale: {float(state['loss_scale']['scale']):.0f}  "
+              f"overflow-skipped steps: {int(state['loss_scale']['skipped'])} "
+              f"(loop saw {loop.overflow_steps})")
 
 
 if __name__ == "__main__":

@@ -11,6 +11,25 @@ import jax.numpy as jnp
 from repro.core.spectral import spectral_init, spectral_apply, is_spectral
 
 
+def _is_q8_spectral(p) -> bool:
+    # lazy import: serving.quantize owns the single definition of
+    # "quantized"; a dict-valued U/w that is NOT a {"q8","scale"} tensor
+    # falls through to the dense branch instead of misrouting here
+    if not isinstance(p.get("U"), dict):
+        return False
+    from repro.serving.quantize import is_quantized_spectral
+
+    return is_quantized_spectral(p)
+
+
+def _is_q8_dense(p) -> bool:
+    if not isinstance(p.get("w"), dict):
+        return False
+    from repro.serving.quantize import is_quantized
+
+    return is_quantized(p["w"])
+
+
 def init_linear(
     key: jax.Array,
     in_dim: int,
@@ -37,7 +56,9 @@ def init_linear(
 
 def apply_linear(p, x: jax.Array, *, use_pallas: bool = False) -> jax.Array:
     """Dispatch on parameterization. The dense (m, n) matrix is never
-    built in the spectral branch."""
+    built in the spectral branch. Int8-quantized groups (serving path,
+    serving/quantize.py) dequantize on the fly: int8 lives in HBM, the
+    fp copy is a per-call transient."""
     if is_spectral(p):
         if use_pallas:
             from repro.kernels.ops import spectral_matmul
@@ -45,6 +66,21 @@ def apply_linear(p, x: jax.Array, *, use_pallas: bool = False) -> jax.Array:
             y = spectral_matmul(x, p["U"], p["s"], p["V"])
         else:
             y = spectral_apply(p, x)
+    elif _is_q8_spectral(p):                    # int8 spectral group
+        if use_pallas:
+            from repro.kernels.ops import spectral_matmul_q8
+
+            y = spectral_matmul_q8(x, p["U"], p["s"], p["V"])
+        else:
+            from repro.serving.quantize import dequantize_int8
+
+            y = spectral_apply(
+                {"U": dequantize_int8(p["U"], x.dtype), "s": p["s"],
+                 "V": dequantize_int8(p["V"], x.dtype)}, x)
+    elif _is_q8_dense(p):                       # int8 dense weight
+        from repro.serving.quantize import dequantize_int8
+
+        y = x @ dequantize_int8(p["w"], x.dtype)
     else:
         w = p["w"]
         y = x @ w.astype(x.dtype)

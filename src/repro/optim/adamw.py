@@ -25,10 +25,14 @@ class AdamWConfig:
     dense_lr_scale: float = 1.0       # everything else
     decay_spectral: bool = False      # weight decay fights orthonormality;
                                       # retraction would undo it anyway
+    moment_dtype: str = "float32"     # storage dtype of mu/nu (math is
+                                      # always fp32; bf16 halves state
+                                      # memory at some Adam fidelity cost)
 
 
-def adamw_init(params: Any) -> dict:
-    zeros = lambda p: jax.tree.map(lambda x: jnp.zeros_like(x, dtype=jnp.float32), p)
+def adamw_init(params: Any, moment_dtype: str = "float32") -> dict:
+    md = jnp.dtype(moment_dtype)
+    zeros = lambda p: jax.tree.map(lambda x: jnp.zeros_like(x, dtype=md), p)
     return {"mu": zeros(params), "nu": zeros(params), "count": jnp.zeros((), jnp.int32)}
 
 
@@ -58,10 +62,12 @@ def adamw_update(params: Any, grads: Any, state: dict, cfg: AdamWConfig,
     base_lr = cfg.lr if lr_t is None else lr_t
     kinds = _leaf_kind_tree(params)
 
+    md = jnp.dtype(cfg.moment_dtype)
+
     def upd(p, g, mu, nu, kind):
         g = g.astype(jnp.float32)
-        mu = cfg.b1 * mu + (1 - cfg.b1) * g
-        nu = cfg.b2 * nu + (1 - cfg.b2) * (g * g)
+        mu = cfg.b1 * mu.astype(jnp.float32) + (1 - cfg.b1) * g
+        nu = cfg.b2 * nu.astype(jnp.float32) + (1 - cfg.b2) * (g * g)
         mhat = mu / b1c
         nhat = nu / b2c
         scale = {0: cfg.dense_lr_scale, 1: cfg.spectral_lr_scale, 2: cfg.sv_lr_scale}[kind]
@@ -70,7 +76,7 @@ def adamw_update(params: Any, grads: Any, state: dict, cfg: AdamWConfig,
         if kind in (1, 2) and not cfg.decay_spectral:
             wd = 0.0
         new_p = p.astype(jnp.float32) - base_lr * scale * (step + wd * p.astype(jnp.float32))
-        return new_p.astype(p.dtype), mu, nu
+        return new_p.astype(p.dtype), mu.astype(md), nu.astype(md)
 
     flat_p, treedef = jax.tree.flatten(params)
     flat_g = jax.tree.leaves(grads)

@@ -5,21 +5,39 @@ then Stiefel retraction of every spectral U/V (paper Algorithm 1).
 drift per AdamW step is O(lr), so retracting every r steps keeps the
 error bounded at O(r*lr) while cutting the retraction cost (40-50% of
 the paper's 70B step time) by r. r=1 is the faithful default.
+
+Mixed precision (core/precision.py): with a loss-scaling policy the
+state carries a ``loss_scale`` entry, incoming gradients are *scaled*
+(the step builder multiplied the loss), and ``apply`` unscales them,
+checks finiteness, and wraps the AdamW-update + retraction in a
+``lax.cond`` so an overflowed step leaves params, moments, and the
+manifold untouched while the scale backs off. Master params are stored
+in ``policy.param_dtype`` (fp32 for 'mixed' — the master U/s/V the
+forward casts down from).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional
+from typing import Any, Optional, Union
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.precision import (
+    PrecisionPolicy,
+    all_finite,
+    cast_tree,
+    loss_scale_init,
+    loss_scale_update,
+    precision_policy,
+    unscale_grads,
+)
 from repro.core.tree import retract_tree
 from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
 from repro.optim.clip import clip_by_global_norm
 from repro.optim.schedule import ScheduleConfig, make_schedule
 
-TrainState = dict  # {"params", "opt", "step"}
+TrainState = dict  # {"params", "opt", "step"[, "loss_scale"]}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -30,30 +48,69 @@ class SCTOptimizer:
     retract_every: int = 1
     clip_norm: float = 1.0
     retract_axis_name: Optional[str] = None   # set inside shard_map
+    precision: Optional[PrecisionPolicy] = None  # None -> legacy fp32 path
 
     def init(self, params: Any) -> TrainState:
-        return {
+        if self.precision is not None:
+            params = cast_tree(params, self.precision.param_jnp)
+        state = {
             "params": params,
-            "opt": adamw_init(params),
+            "opt": adamw_init(params, self.adamw.moment_dtype),
             "step": jnp.zeros((), jnp.int32),
         }
+        if self.precision is not None and self.precision.loss_scaling:
+            state["loss_scale"] = loss_scale_init(self.precision)
+        return state
 
-    def apply(self, state: TrainState, grads: Any) -> TrainState:
-        lr_t = make_schedule(self.schedule)(state["step"])
+    # ------------------------------------------------------------------
+    def _update(self, params: Any, opt: Any, step: jax.Array, grads: Any):
+        """One AdamW step + (conditional) retraction. ``step`` is the
+        pre-increment counter: the schedule reads it, the retraction
+        cadence checks step+1 — both exactly as the fp32 path always did."""
+        lr_t = make_schedule(self.schedule)(step)
         if self.clip_norm:
             grads, _ = clip_by_global_norm(grads, self.clip_norm)
-        params, opt = adamw_update(state["params"], grads, state["opt"], self.adamw, lr_t)
-        step = state["step"] + 1
+        params, opt = adamw_update(params, grads, opt, self.adamw, lr_t)
         if self.retract_every == 1:
             params = retract_tree(params, self.retraction, self.retract_axis_name)
         else:
             params = jax.lax.cond(
-                step % self.retract_every == 0,
+                (step + 1) % self.retract_every == 0,
                 lambda p: retract_tree(p, self.retraction, self.retract_axis_name),
                 lambda p: p,
                 params,
             )
-        return {"params": params, "opt": opt, "step": step}
+        return params, opt
+
+    def apply(self, state: TrainState, grads: Any) -> TrainState:
+        pol = self.precision
+        # both the step builder (which scales the loss) and this unscale
+        # path key on policy AND state, so a checkpoint written under a
+        # different precision policy degrades to the unscaled path on
+        # both sides instead of scaling on one side only
+        if pol is None or not pol.loss_scaling or "loss_scale" not in state:
+            params, opt = self._update(state["params"], state["opt"],
+                                       state["step"], grads)
+            out = dict(state)
+            out.update(params=params, opt=opt, step=state["step"] + 1)
+            return out
+
+        # mixed path: grads arrive scaled by state["loss_scale"]["scale"]
+        ls = state["loss_scale"]
+        grads = unscale_grads(grads, ls)
+        finite = all_finite(grads)
+        params, opt = jax.lax.cond(
+            finite,
+            lambda p, o, g: self._update(p, o, state["step"], g),
+            lambda p, o, g: (p, o),
+            state["params"], state["opt"], grads,
+        )
+        # the step counter advances even on a skip: the data stream and
+        # LR schedule stay aligned with the global step
+        out = dict(state)   # preserve any extra TrainState entries
+        out.update(params=params, opt=opt, step=state["step"] + 1,
+                   loss_scale=loss_scale_update(ls, finite, pol))
+        return out
 
 
 def make_sct_optimizer(
@@ -66,6 +123,7 @@ def make_sct_optimizer(
     spectral_lr_scale: float = 1.0,
     dense_lr_scale: float = 1.0,
     weight_decay: float = 0.01,
+    precision: Union[str, PrecisionPolicy, None] = None,
 ) -> SCTOptimizer:
     retraction = model_cfg.sct.retraction if model_cfg is not None else "qr"
     retract_every = model_cfg.sct.retract_every if model_cfg is not None else 1
@@ -80,4 +138,5 @@ def make_sct_optimizer(
         retraction=retraction,
         retract_every=retract_every,
         clip_norm=clip_norm,
+        precision=precision_policy(precision),
     )

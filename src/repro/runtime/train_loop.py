@@ -60,6 +60,10 @@ class TrainLoop:
         self.failure_hook = failure_hook
         self.straggler_steps = 0
         self.restarts = 0
+        # mixed precision: overflow-skipped steps, mirrored from the
+        # authoritative checkpointed counter state["loss_scale"]["skipped"]
+        # when the run finishes
+        self.overflow_steps = 0
 
     # ------------------------------------------------------------------
     def _start_state(self):
@@ -99,6 +103,14 @@ class TrainLoop:
             if self.metrics_cb and step % self.cfg.log_every == 0:
                 self.metrics_cb(step, {k: float(np.asarray(v)) for k, v in metrics.items()})
             if step % self.cfg.checkpoint_every == 0 or step == self.cfg.total_steps:
-                self.mgr.save(step, state)
+                # fetch to host *before* handing off to the async writer:
+                # the next step donates these device buffers (train.py
+                # jits with donate_argnums), and a save thread reading
+                # them after donation sees deleted arrays
+                self.mgr.save(step, jax.device_get(state))
         self.mgr.wait()
+        if isinstance(state, dict) and "loss_scale" in state:
+            # derived once at the end, not per step — no extra host
+            # readback in the hot loop
+            self.overflow_steps = int(np.asarray(state["loss_scale"]["skipped"]))
         return state

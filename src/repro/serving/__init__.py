@@ -13,9 +13,25 @@ from repro.serving.paged_cache import (
     slot_read,
     slot_write,
 )
+from repro.serving.quantize import (
+    dequantize_int8,
+    dequantize_tree,
+    is_quantized,
+    is_quantized_spectral,
+    param_bytes,
+    quantize_int8,
+    quantize_tree,
+)
 from repro.serving.scheduler import ContinuousBatchingScheduler, Request
 
 __all__ = [
+    "quantize_int8",
+    "dequantize_int8",
+    "quantize_tree",
+    "dequantize_tree",
+    "is_quantized",
+    "is_quantized_spectral",
+    "param_bytes",
     "PagedCacheConfig",
     "PagePool",
     "paged_append",

@@ -38,10 +38,20 @@ from repro.serving.scheduler import ContinuousBatchingScheduler, Request, SeqSta
 
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, pcfg: PagedCacheConfig, *,
-                 prefill_token_budget: Optional[int] = None):
+                 prefill_token_budget: Optional[int] = None,
+                 quantize: Optional[str] = None):
         if cfg.family == "encdec":
             raise NotImplementedError("paged serving targets decoder-only families")
         self.cfg = cfg
+        from repro.serving.quantize import param_bytes, quantize_tree
+
+        self.weight_bytes_fp = param_bytes(params)
+        if quantize == "int8":
+            params = quantize_tree(params)
+        elif quantize is not None:
+            raise ValueError(f"unknown quantization {quantize!r}; options: int8")
+        self.quantize = quantize
+        self.weight_bytes = param_bytes(params)
         self.params = params
         self.pcfg = pcfg
         self.state = init_paged_state(cfg, pcfg)
@@ -149,4 +159,6 @@ class ServingEngine:
             "wall_s": self.wall_s,
             "tokens_per_s": (self.prefill_tokens + gen) / self.wall_s if self.wall_s else 0.0,
             "attn_cache_bytes": float(self.attn_cache_bytes()),
+            "weight_bytes": float(self.weight_bytes),
+            "weight_bytes_fp": float(self.weight_bytes_fp),
         }

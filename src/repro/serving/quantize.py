@@ -1,0 +1,123 @@
+"""Int8 per-channel post-training quantization of serving weights.
+
+SCT's spectral factors are ideal int8 targets: U and V have orthonormal
+columns (every column has unit norm and entries O(1/sqrt(m))), so a
+per-column symmetric scale loses ~0.2-0.4% relative — while the k
+singular values in ``s``, which carry the entire dynamic range of the
+layer, stay fp32 at negligible cost (k floats). Dense projections
+quantize per output channel. Embeddings / LM head stay fp32: the tied
+head computes the logits whose argmax greedy decoding compares, the one
+place quantization noise turns into token flips.
+
+A quantized tensor is the dict ``{"q8": int8, "scale": fp32}`` with the
+scale indexed by the last (channel) axis; a quantized spectral group
+keeps its {"U","s","V"} shape with U/V replaced by quantized tensors, so
+the pytree routes through jit/engine code unchanged. Dequantization
+happens on the fly at apply time (``nn/linear.py`` /
+``kernels/ops.spectral_matmul_q8``): int8 is what lives in HBM, the fp
+copy is a transient.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.spectral import SPECTRAL_KEYS, is_spectral
+
+# Subtrees never quantized (keyed by name in the parameter tree):
+#   embed   — the tied LM head computes the logits greedy decoding argmaxes;
+#   moe     — routers and expert banks are consumed by raw einsums in
+#             nn/moe.py, not through apply_linear's quantized dispatch;
+#   wukv    — the MLA up-projection is split raw by _split_wukv for the
+#             absorbed decode path (and is already a low-rank factor);
+#   enc_pos / dec_pos — encdec positional tables are sliced raw
+#             (models/encdec.py ``params["dec_pos"]["w"][:s]``).
+SKIP_KEYS = ("embed", "moe", "wukv", "enc_pos", "dec_pos")
+
+
+def quantize_int8(w: jax.Array) -> dict:
+    """Symmetric per-channel int8: channels = last axis, amax taken over
+    axis -2 (the m/in axis for (..., m, k) factors and (..., in, out)
+    dense weights — the one layout every quantized leaf uses, matching
+    dequantize_int8's broadcast). Leading stacked layer axes broadcast."""
+    wf = jnp.asarray(w, jnp.float32)
+    amax = jnp.max(jnp.abs(wf), axis=-2)                     # (..., channels)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(wf / jnp.expand_dims(scale, -2)), -127, 127)
+    return {"q8": q.astype(jnp.int8), "scale": scale.astype(jnp.float32)}
+
+
+def dequantize_int8(qt: dict, dtype: Any = jnp.float32) -> jax.Array:
+    return (qt["q8"].astype(jnp.float32)
+            * jnp.expand_dims(qt["scale"], -2)).astype(dtype)
+
+
+def is_quantized(x: Any) -> bool:
+    return isinstance(x, dict) and "q8" in x and "scale" in x
+
+
+def is_quantized_spectral(p: Any) -> bool:
+    """A spectral group whose U/V were replaced by quantized tensors."""
+    return (
+        isinstance(p, dict)
+        and set(p.keys()) >= set(SPECTRAL_KEYS)
+        and is_quantized(p["U"])
+        and is_quantized(p["V"])
+    )
+
+
+def quantize_tree(params: Any, include_dense: bool = True) -> Any:
+    """Walk a parameter tree: spectral groups get int8 U/V (s and bias
+    stay fp32); dense 2D+ ``w`` leaves get per-output-channel int8 when
+    ``include_dense``; everything else (norms, biases, SKIP_KEYS
+    subtrees) passes through untouched."""
+
+    def walk(tree):
+        if is_spectral(tree):
+            out = dict(tree)
+            out["U"] = quantize_int8(tree["U"])
+            out["V"] = quantize_int8(tree["V"])
+            return out
+        if isinstance(tree, dict):
+            out = {}
+            for key, val in tree.items():
+                if key in SKIP_KEYS:
+                    out[key] = val
+                elif (include_dense and key == "w"
+                      and hasattr(val, "ndim") and val.ndim >= 2):
+                    out[key] = quantize_int8(val)
+                else:
+                    out[key] = walk(val)
+            return out
+        if isinstance(tree, (list, tuple)):
+            return type(tree)(walk(v) for v in tree)
+        return tree
+
+    return walk(params)
+
+
+def dequantize_tree(params: Any, dtype: Any = jnp.float32) -> Any:
+    """Materialize every quantized tensor back to floating point — the
+    fp32 oracle for ``--verify`` (the on-the-fly dequant runtime path
+    must match this token-for-token under greedy decoding)."""
+
+    def walk(tree):
+        if is_quantized(tree):
+            return dequantize_int8(tree, dtype)
+        if isinstance(tree, dict):
+            return {k: walk(v) for k, v in tree.items()}
+        if isinstance(tree, (list, tuple)):
+            return type(tree)(walk(v) for v in tree)
+        return tree
+
+    return walk(params)
+
+
+def param_bytes(params: Any) -> int:
+    """Bytes held by a parameter tree (int8 leaves count 1 byte/elem —
+    the serving weight-memory figure bench_serving reports)."""
+    return sum(leaf.size * leaf.dtype.itemsize
+               for leaf in jax.tree.leaves(params)
+               if hasattr(leaf, "dtype"))

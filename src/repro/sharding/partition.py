@@ -14,9 +14,11 @@ from repro.sharding.rules import param_pspecs, dp_axes, MODEL
 
 def state_pspecs(state_like: Any, n_model: int, n_data: int = 16) -> Any:
     """TrainState {'params','opt':{'mu','nu','count'},'step'} specs:
-    optimizer moments mirror the parameter sharding exactly."""
+    optimizer moments mirror the parameter sharding exactly. Any extra
+    state entries (e.g. the mixed-precision ``loss_scale`` scalars) are
+    replicated."""
     pspec = param_pspecs(state_like["params"], n_model, n_data)
-    return {
+    out = {
         "params": pspec,
         "opt": {
             "mu": param_pspecs(state_like["opt"]["mu"], n_model, n_data),
@@ -25,6 +27,10 @@ def state_pspecs(state_like: Any, n_model: int, n_data: int = 16) -> Any:
         },
         "step": P(),
     }
+    for key in state_like:
+        if key not in out:
+            out[key] = jax.tree.map(lambda _: P(), state_like[key])
+    return out
 
 
 def batch_axes(global_batch: int, mesh):

@@ -121,6 +121,37 @@ def test_too_many_failures_raises(tmp_path):
         loop.run()
 
 
+def test_async_checkpoint_with_donated_state(tmp_path):
+    """Async checkpointing must not race with buffer donation (the
+    production launcher jits with donate_argnums=(0,)): the loop fetches
+    state to host before the next step deletes the donated buffers, so
+    every periodic checkpoint lands complete."""
+    cfg = get_config("smollm2-1.7b", reduced=True)
+    total = 6
+    opt = make_sct_optimizer(cfg, lr=1e-3, warmup=2, total_steps=total)
+    step_fn = jax.jit(make_train_step(cfg, opt), donate_argnums=(0,))
+    ds = SyntheticLMDataset(vocab=cfg.vocab, seq_len=16, seed=0)
+
+    def batches(start):
+        step = start
+        while True:
+            t, l = ds.batch(step, 4)
+            yield {"tokens": jnp.asarray(t), "labels": jnp.asarray(l)}
+            step += 1
+
+    loop = TrainLoop(
+        step_fn=step_fn,
+        batch_iter_factory=batches,
+        ckpt_dir=str(tmp_path),
+        cfg=TrainLoopConfig(total_steps=total, checkpoint_every=2),
+        init_state_fn=lambda: opt.init(init_model(jax.random.PRNGKey(0), cfg)),
+    )
+    loop.run()
+    assert loop.mgr.list_steps() == [2, 4, 6]   # no save lost to the race
+    step, state = loop.mgr.restore_latest()
+    assert step == 6 and int(state["step"]) == 6
+
+
 def test_straggler_detection(tmp_path):
     cfg = get_config("smollm2-1.7b", reduced=True)
     loop = _make_loop(tmp_path, cfg, total=4, deadline=1e-9)

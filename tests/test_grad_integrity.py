@@ -1,0 +1,111 @@
+"""Gradient integrity of the fused spectral matmul: the custom_vjp in
+kernels/ops.py against (a) autodiff through the pure-jnp
+core.spectral.spectral_apply and (b) numerical finite differences via
+jax.test_util.check_grads — on shapes that are NOT multiples of the
+kernel tiles (bm/cm/cn), so every _pad_to edge in ops.py is exercised
+in both forward and backward."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.test_util import check_grads
+
+from repro.core.spectral import spectral_apply
+from repro.kernels.ops import spectral_matmul
+
+# (M, m, n, k): none of M/m/n a multiple of the tile sizes ops.py picks.
+# M=9/17/33 pad up to the bm power of two; m=520 exceeds cm=512 so the
+# m axis pads 520->1024; n=700 exceeds cn=512 so the n axis pads
+# 700->1024 (the only cases where the inner _pad_to calls are not no-ops).
+NON_TILE_SHAPES = [
+    (9, 24, 40, 5),
+    (17, 33, 21, 7),
+    (70, 520, 132, 9),
+    (33, 100, 700, 11),
+]
+
+
+def _operands(key, M, m, n, k, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    x = jax.random.normal(ks[0], (M, m), dtype)
+    U = (jax.random.normal(ks[1], (m, k)) / np.sqrt(m)).astype(dtype)
+    s = jax.random.uniform(ks[2], (k,), dtype, 0.5, 1.5)
+    V = (jax.random.normal(ks[3], (n, k)) / np.sqrt(n)).astype(dtype)
+    return x, U, s, V
+
+
+def _assert_grads_close(ga, gb, tol=1e-4):
+    for a, b in zip(ga, gb):
+        scale = max(1.0, float(jnp.max(jnp.abs(b))))
+        np.testing.assert_allclose(np.asarray(a, np.float32) / scale,
+                                   np.asarray(b, np.float32) / scale,
+                                   rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("shape", NON_TILE_SHAPES)
+def test_custom_vjp_matches_spectral_apply_autodiff(shape, key):
+    """Same loss through the kernel custom_vjp and through autodiff of
+    the paper's 3-matmul reference: forward and all four gradients agree
+    on pad-exercising shapes."""
+    M, m, n, k = shape
+    x, U, s, V = _operands(key, M, m, n, k)
+    cot = jax.random.normal(jax.random.PRNGKey(99), (M, n))
+
+    f_kernel = lambda x, U, s, V: jnp.sum(spectral_matmul(x, U, s, V) * cot)
+    f_ref = lambda x, U, s, V: jnp.sum(
+        spectral_apply({"U": U, "s": s, "V": V}, x) * cot)
+
+    np.testing.assert_allclose(
+        np.asarray(spectral_matmul(x, U, s, V)),
+        np.asarray(spectral_apply({"U": U, "s": s, "V": V}, x)),
+        rtol=2e-5, atol=2e-5)
+    g_kernel = jax.grad(f_kernel, argnums=(0, 1, 2, 3))(x, U, s, V)
+    g_ref = jax.grad(f_ref, argnums=(0, 1, 2, 3))(x, U, s, V)
+    _assert_grads_close(g_kernel, g_ref)
+
+
+@pytest.mark.parametrize("shape", [(9, 24, 40, 5), (17, 33, 21, 7)])
+def test_check_grads_numerical_rev(shape, key):
+    """jax.test_util.check_grads: the custom VJP against numerical
+    differences (small shapes — finite differencing is O(inputs))."""
+    M, m, n, k = shape
+    x, U, s, V = _operands(key, M, m, n, k)
+    f = lambda x, U, s, V: spectral_matmul(x, U, s, V)
+    check_grads(f, (x, U, s, V), order=1, modes=["rev"], atol=5e-2, rtol=5e-2)
+
+
+def test_vjp_batched_non_tile_leading_dims(key):
+    """Leading batch dims that flatten to a non-tile-multiple M."""
+    x = jax.random.normal(key, (3, 5, 24))       # M = 15 after reshape
+    U = jax.random.normal(jax.random.PRNGKey(1), (24, 6)) / 5.0
+    s = jnp.linspace(1.5, 0.5, 6)
+    V = jax.random.normal(jax.random.PRNGKey(2), (31, 6)) / 6.0
+    cot = jax.random.normal(jax.random.PRNGKey(3), (3, 5, 31))
+
+    f_kernel = lambda x, U, s, V: jnp.sum(spectral_matmul(x, U, s, V) * cot)
+    f_ref = lambda x, U, s, V: jnp.sum(
+        spectral_apply({"U": U, "s": s, "V": V}, x) * cot)
+    g_kernel = jax.grad(f_kernel, argnums=(0, 1, 2, 3))(x, U, s, V)
+    g_ref = jax.grad(f_ref, argnums=(0, 1, 2, 3))(x, U, s, V)
+    _assert_grads_close(g_kernel, g_ref)
+
+
+def test_vjp_bf16_inputs_fp32_grad_accumulation(key):
+    """bf16 operands: the backward accumulates in fp32 (the mixed
+    policy's accum contract) — grads match the fp32 reference to bf16
+    input tolerance."""
+    M, m, n, k = 17, 40, 24, 5
+    x, U, s, V = _operands(key, M, m, n, k)
+    xb, Ub, sb, Vb = (a.astype(jnp.bfloat16) for a in (x, U, s, V))
+    f = lambda *a: jnp.sum(spectral_matmul(*a) ** 2)
+    g_b = jax.grad(f, argnums=(0, 1, 2, 3))(xb, Ub, sb, Vb)
+    # reference in fp32 over the bf16-rounded values
+    fr = lambda *a: jnp.sum(spectral_apply({"U": a[1], "s": a[2], "V": a[3]}, a[0]) ** 2)
+    g_f = jax.grad(fr, argnums=(0, 1, 2, 3))(
+        *(a.astype(jnp.float32) for a in (xb, Ub, sb, Vb)))
+    for a, b in zip(g_b, g_f):
+        assert a.dtype == b.dtype or a.dtype == jnp.bfloat16
+        scale = max(1.0, float(jnp.max(jnp.abs(b))))
+        np.testing.assert_allclose(np.asarray(a, np.float32) / scale,
+                                   np.asarray(b, np.float32) / scale,
+                                   rtol=3e-2, atol=3e-2)

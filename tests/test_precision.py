@@ -1,0 +1,306 @@
+"""Mixed-precision tests: PrecisionPolicy presets, dynamic loss scaling
+(growth / backoff / overflow skip), property-based retraction
+orthonormality across dtypes, sign-fix determinism, and the 30-step
+bf16-mixed vs fp32 regression with checkpoint-restart bit-exactness of
+the loss-scale state."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # container without hypothesis: deterministic shim
+    from _hypothesis_fallback import given, settings, st
+
+from repro.checkpoint import tree_equal
+from repro.config import get_config
+from repro.core import (
+    POLICIES,
+    PrecisionPolicy,
+    all_finite,
+    cast_tree,
+    loss_scale_init,
+    loss_scale_update,
+    orthogonality_error,
+    precision_policy,
+    qr_retract,
+    retract,
+)
+from repro.data.synthetic import SyntheticLMDataset
+from repro.launch.steps import make_train_step
+from repro.models.model import init_model
+from repro.optim import make_sct_optimizer
+from repro.runtime.train_loop import TrainLoop, TrainLoopConfig
+
+# dtype-appropriate orthonormality tolerance: fp32 QR is ~1e-6; a
+# bf16-stored factor re-rounds every entry to 2^-8 relative, so
+# |U^T U - I| is bounded by ~sqrt(m) * bf16_eps
+ORTHO_TOL = {jnp.float32: 5e-5, jnp.bfloat16: 0.08}
+
+
+def _noisy_stiefel(key, m, k, noise):
+    U0, _ = jnp.linalg.qr(jax.random.normal(key, (m, k)))
+    return U0 + noise * jax.random.normal(jax.random.PRNGKey(1), (m, k))
+
+
+# ------------------------------------------------------------ policies --
+
+def test_policy_presets():
+    assert POLICIES["fp32"].compute_dtype == "float32"
+    assert not POLICIES["fp32"].loss_scaling
+    assert POLICIES["bf16"].param_dtype == "bfloat16"
+    assert POLICIES["bf16"].compute_dtype == "bfloat16"
+    mixed = POLICIES["mixed"]
+    assert mixed.param_dtype == "float32"       # fp32 master factors
+    assert mixed.compute_dtype == "bfloat16"    # bf16 apply-time casts
+    assert mixed.accum_dtype == "float32"
+    assert mixed.loss_scaling
+
+
+def test_precision_policy_resolution():
+    assert precision_policy(None) is None
+    assert precision_policy("mixed") is POLICIES["mixed"]
+    pol = PrecisionPolicy(name="custom")
+    assert precision_policy(pol) is pol
+    with pytest.raises(ValueError):
+        precision_policy("fp64")
+
+
+def test_cast_tree_floats_only(key):
+    tree = {"w": jnp.ones((2, 2)), "step": jnp.zeros((), jnp.int32)}
+    out = cast_tree(tree, jnp.bfloat16)
+    assert out["w"].dtype == jnp.bfloat16
+    assert out["step"].dtype == jnp.int32
+
+
+# ----------------------------------------------------------- loss scale --
+
+def test_all_finite_detects_inf_nan(key):
+    g = {"a": jnp.ones((3,)), "n": jnp.zeros((), jnp.int32)}
+    assert bool(all_finite(g))
+    assert not bool(all_finite({"a": jnp.array([1.0, jnp.inf])}))
+    assert not bool(all_finite({"a": jnp.array([jnp.nan])}))
+
+
+def test_loss_scale_growth_backoff_floor():
+    pol = PrecisionPolicy(name="t", loss_scaling=True, init_scale=8.0,
+                          growth_interval=2, min_scale=1.0, max_scale=32.0)
+    ls = loss_scale_init(pol)
+    ls = loss_scale_update(ls, jnp.bool_(True), pol)
+    assert float(ls["scale"]) == 8.0 and int(ls["good_steps"]) == 1
+    ls = loss_scale_update(ls, jnp.bool_(True), pol)   # interval hit: double
+    assert float(ls["scale"]) == 16.0 and int(ls["good_steps"]) == 0
+    ls = loss_scale_update(ls, jnp.bool_(False), pol)  # overflow: halve
+    assert float(ls["scale"]) == 8.0
+    assert int(ls["skipped"]) == 1 and int(ls["good_steps"]) == 0
+    for _ in range(10):                                # floor at min_scale
+        ls = loss_scale_update(ls, jnp.bool_(False), pol)
+    assert float(ls["scale"]) == 1.0
+    for _ in range(20):                                # cap at max_scale
+        ls = loss_scale_update(ls, jnp.bool_(True), pol)
+    assert float(ls["scale"]) == 32.0
+
+
+# --------------------------------------- retraction properties by dtype --
+
+@settings(max_examples=12, deadline=None)
+@given(
+    m=st.integers(8, 96),
+    kfrac=st.floats(0.1, 0.9),
+    noise=st.floats(0.0, 0.08),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_retraction_orthonormal_across_dtypes(m, kfrac, noise, seed):
+    """U^T U ~ I to dtype-appropriate tolerance over random ranks/shapes
+    in fp32 and bf16, for both retractions the optimizer dispatches."""
+    k = max(1, int(kfrac * m))
+    U0 = _noisy_stiefel(jax.random.PRNGKey(seed), m, k, noise)
+    for dtype, tol in ORTHO_TOL.items():
+        U = U0.astype(dtype)
+        for method in ("qr", "cholesky_qr2"):
+            R = retract(U, method)
+            assert R.dtype == dtype
+            assert float(orthogonality_error(R)) < tol, (m, k, method, dtype)
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.integers(8, 64), k=st.integers(1, 8), seed=st.integers(0, 2**31 - 1))
+def test_sign_fix_determinism(m, k, seed):
+    """The sign-fixed QR picks one deterministic branch: repeated calls
+    are bit-identical, diag(Q^T U) >= 0 (the positive-diagonal-R branch),
+    and flipping input column signs flips the output the same way."""
+    k = min(k, m)
+    U = _noisy_stiefel(jax.random.PRNGKey(seed), m, k, 0.05)
+    R1 = qr_retract(U)
+    R2 = qr_retract(U)
+    np.testing.assert_array_equal(np.asarray(R1), np.asarray(R2))
+    diag = np.diag(np.asarray(R1.T @ U))
+    assert (diag >= -1e-5).all()
+    flips = jnp.array([(-1.0) ** i for i in range(k)])
+    np.testing.assert_allclose(np.asarray(qr_retract(U * flips)),
+                               np.asarray(R1 * flips), atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 5e-6), (jnp.bfloat16, 0.05)])
+def test_retraction_idempotent_on_orthonormal(key, dtype, tol):
+    """Retracting an already-orthonormal factor is the identity up to the
+    storage dtype's rounding (sign-fix continuity, paper Eq. 5)."""
+    U, _ = jnp.linalg.qr(jax.random.normal(key, (48, 12)))
+    U = U.astype(dtype)
+    for method in ("qr", "cholesky_qr2"):
+        R = retract(U, method)
+        assert float(jnp.max(jnp.abs(
+            R.astype(jnp.float32) - U.astype(jnp.float32)))) < tol, method
+
+
+# --------------------------------------------- training-level regression --
+
+def _train(precision, steps=30, lr=3e-3, seed=0):
+    cfg = get_config("smollm2-135m", reduced=True)
+    opt = make_sct_optimizer(cfg, lr=lr, warmup=4, total_steps=steps,
+                             precision=precision)
+    step_fn = jax.jit(make_train_step(cfg, opt))
+    state = opt.init(init_model(jax.random.PRNGKey(seed), cfg))
+    ds = SyntheticLMDataset(vocab=cfg.vocab, seq_len=32, seed=0)
+    losses = []
+    for i in range(steps):
+        t, l = ds.batch(i, 8)
+        state, m = step_fn(state, {"tokens": jnp.asarray(t), "labels": jnp.asarray(l)})
+        losses.append(float(m["loss"]))
+    return state, losses
+
+
+def test_mixed_tracks_fp32_30_steps():
+    """30-step smollm2-135m: bf16-mixed loss tracks fp32 within
+    tolerance, no spurious overflow skips, masters stay fp32, and the
+    factors stay orthonormal to bf16-compute-appropriate tolerance."""
+    state_m, loss_m = _train("mixed")
+    state_f, loss_f = _train("fp32")
+    assert np.isfinite(loss_m).all() and np.isfinite(loss_f).all()
+    assert loss_m[-1] < loss_m[0] - 0.1          # actually learning
+    assert abs(loss_m[-1] - loss_f[-1]) < 0.25   # tracks fp32
+    assert np.max(np.abs(np.asarray(loss_m) - np.asarray(loss_f))) < 0.5
+    assert int(state_m["loss_scale"]["skipped"]) == 0
+    for leaf in jax.tree.leaves(state_m["params"]):
+        if jnp.issubdtype(leaf.dtype, jnp.floating):
+            assert leaf.dtype == jnp.float32     # fp32 master factors
+    from repro.core.tree import max_orthogonality_error
+
+    assert float(max_orthogonality_error(state_m["params"])) < 5e-5
+
+
+def test_bf16_params_stay_bf16():
+    state, losses = _train("bf16", steps=6)
+    assert np.isfinite(losses).all()
+    for leaf in jax.tree.leaves(state["params"]):
+        if jnp.issubdtype(leaf.dtype, jnp.floating):
+            assert leaf.dtype == jnp.bfloat16
+    # bf16-stored factors after retraction: orthonormal to bf16 tolerance
+    from repro.core.tree import max_orthogonality_error
+
+    assert float(max_orthogonality_error(state["params"])) < ORTHO_TOL[jnp.bfloat16]
+
+
+def test_overflow_skips_step_and_halves_scale(key):
+    """Injected overflow: params and moments untouched, loss scale
+    halves, the skip is counted, the global step still advances."""
+    cfg = get_config("smollm2-135m", reduced=True)
+    opt = make_sct_optimizer(cfg, lr=3e-3, precision="mixed")
+    state = opt.init(init_model(jax.random.PRNGKey(0), cfg))
+    scale0 = float(state["loss_scale"]["scale"])
+    bad = jax.tree.map(lambda p: jnp.full(p.shape, jnp.inf, jnp.float32),
+                       state["params"])
+    new = opt.apply(state, bad)
+    assert tree_equal(state["params"], new["params"])
+    assert tree_equal(state["opt"]["mu"], new["opt"]["mu"])
+    assert float(new["loss_scale"]["scale"]) == scale0 / 2
+    assert int(new["loss_scale"]["skipped"]) == 1
+    assert int(new["step"]) == 1
+    # a finite step afterwards updates params again
+    good = jax.tree.map(lambda p: jnp.ones(p.shape, jnp.float32) * float(
+        new["loss_scale"]["scale"]), state["params"])
+    after = opt.apply(new, good)
+    assert not tree_equal(new["params"], after["params"])
+    assert int(after["loss_scale"]["skipped"]) == 1
+
+
+def test_precision_mismatched_checkpoint_degrades_gracefully():
+    """A state written under one precision policy must train under
+    another: fp32 state + mixed optimizer falls back to the unscaled
+    path (no KeyError); mixed state + legacy optimizer carries the
+    loss_scale entry inertly and never applies still-scaled grads."""
+    cfg = get_config("smollm2-135m", reduced=True)
+    ds = SyntheticLMDataset(vocab=cfg.vocab, seq_len=16, seed=0)
+    t, l = ds.batch(0, 4)
+    batch = {"tokens": jnp.asarray(t), "labels": jnp.asarray(l)}
+    params = init_model(jax.random.PRNGKey(0), cfg)
+
+    opt_f = make_sct_optimizer(cfg, lr=1e-3, precision="fp32")
+    opt_m = make_sct_optimizer(cfg, lr=1e-3, precision="mixed")
+    opt_legacy = make_sct_optimizer(cfg, lr=1e-3)
+
+    state_f = opt_f.init(params)                    # no loss_scale key
+    s, m = jax.jit(make_train_step(cfg, opt_m))(state_f, batch)
+    assert "loss_scale" not in s and np.isfinite(float(m["loss"]))
+
+    state_m = opt_m.init(params)                    # has loss_scale
+    s, m = jax.jit(make_train_step(cfg, opt_legacy))(state_m, batch)
+    assert np.isfinite(float(m["loss"]))
+    assert float(s["loss_scale"]["scale"]) == float(state_m["loss_scale"]["scale"])
+    # the applied update must be the unscaled one: equal to the pure
+    # legacy step from the same params
+    s_ref, _ = jax.jit(make_train_step(cfg, opt_legacy))(opt_legacy.init(params), batch)
+    np.testing.assert_allclose(
+        np.asarray(jax.tree.leaves(s["params"])[0]),
+        np.asarray(jax.tree.leaves(s_ref["params"])[0]), rtol=0, atol=0)
+
+
+def test_mixed_restart_restores_loss_scale_bit_exact(tmp_path):
+    """Crash/restart under mixed precision: the full state — including a
+    loss scale that grew mid-run — restores bit-exactly."""
+    cfg = get_config("smollm2-135m", reduced=True)
+    pol = PrecisionPolicy(name="mixed-fastgrow", compute_dtype="bfloat16",
+                          loss_scaling=True, init_scale=2.0 ** 10,
+                          growth_interval=3)
+    total = 12
+
+    def make_loop(d, failure_hook=None):
+        opt = make_sct_optimizer(cfg, lr=1e-3, warmup=2, total_steps=total,
+                                 precision=pol)
+        step_fn = jax.jit(make_train_step(cfg, opt))
+        ds = SyntheticLMDataset(vocab=cfg.vocab, seq_len=16, seed=0)
+
+        def batches(start):
+            step = start
+            while True:
+                t, l = ds.batch(step, 4)
+                yield {"tokens": jnp.asarray(t), "labels": jnp.asarray(l)}
+                step += 1
+
+        return TrainLoop(
+            step_fn=step_fn,
+            batch_iter_factory=batches,
+            ckpt_dir=str(d),
+            cfg=TrainLoopConfig(total_steps=total, checkpoint_every=4,
+                                max_restarts=3),
+            init_state_fn=lambda: opt.init(init_model(jax.random.PRNGKey(0), cfg)),
+            failure_hook=failure_hook,
+        )
+
+    straight = make_loop(tmp_path / "a").run()
+    # the scale must actually have moved (growth_interval=3 over 12 steps)
+    assert float(straight["loss_scale"]["scale"]) > 2.0 ** 10
+
+    crashed = {"done": False}
+
+    def bomb(step):
+        if step == 8 and not crashed["done"]:
+            crashed["done"] = True
+            raise RuntimeError("injected node failure")
+
+    loop = make_loop(tmp_path / "b", failure_hook=bomb)
+    resumed = loop.run()
+    assert loop.restarts == 1
+    assert tree_equal(straight, resumed)        # full state incl. loss_scale
+    assert (np.asarray(straight["loss_scale"]["scale"]).tobytes()
+            == np.asarray(resumed["loss_scale"]["scale"]).tobytes())

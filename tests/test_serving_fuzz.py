@@ -1,0 +1,141 @@
+"""Fuzzed continuous-batching invariants: random
+admit/append/finish/evict schedules driven through the real scheduler
+API, asserting after every transition that pages never double-book,
+free-list + held pages always partition the pool exactly, and no page
+is aliased across sequences. Plus direct PagePool allocator fuzzing."""
+import random as pyrandom
+
+import numpy as np
+import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # container without hypothesis: deterministic shim
+    from _hypothesis_fallback import given, settings, st
+
+from repro.serving import PagedCacheConfig, PagePool, Request
+from repro.serving.scheduler import ContinuousBatchingScheduler
+
+EOS = 7
+
+
+def _full_invariants(sched: ContinuousBatchingScheduler, pcfg: PagedCacheConfig):
+    sched.check_invariants()
+    held = [p for s in sched.active.values() for p in s.pages]
+    # free-list + held pages partition the pool exactly (no leak, no
+    # double-count)
+    assert sched.pool.free_count + len(held) == pcfg.num_pages
+    # no cross-sequence page aliasing, null page never handed out
+    owner = {}
+    for slot, seq in sched.active.items():
+        for p in seq.pages:
+            assert p != pcfg.null_page
+            assert p not in owner, f"page {p} aliased by slots {owner[p]} and {slot}"
+            owner[p] = slot
+    # block-table rows of *free* slots hold only the null page
+    for slot in sched._free_slots:
+        assert (sched.block_table[slot] == pcfg.null_page).all()
+        assert sched.seq_lens[slot] == 0
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    page_size=st.integers(2, 8),
+    slots=st.integers(1, 6),
+    pool_pages=st.integers(8, 40),
+)
+def test_scheduler_random_schedule_invariants(seed, page_size, slots, pool_pages):
+    rng = pyrandom.Random(seed)
+    mpps = max(2, min(8, pool_pages // 2))
+    pcfg = PagedCacheConfig(page_size=page_size, num_pages=pool_pages,
+                            max_slots=slots, max_pages_per_seq=mpps)
+    budget = rng.choice([None, 2 * page_size, 6 * page_size])
+    sched = ContinuousBatchingScheduler(pcfg, prefill_token_budget=budget)
+
+    cap = mpps * page_size
+    reqs = []
+    for i in range(rng.randint(1, 16)):
+        max_new = rng.randint(1, cap - 1)
+        plen = rng.randint(1, cap - max_new)
+        reqs.append(Request(
+            rid=i,
+            prompt=np.zeros((plen,), dtype=np.int32),
+            max_new_tokens=max_new,
+            arrival=rng.randint(0, 8),
+            eos_id=EOS if rng.random() < 0.5 else None,
+        ))
+    reqs = [r for r in reqs if pcfg.pages_for(r.max_total_len) <= pcfg.num_pages]
+    pending = sorted(reqs, key=lambda r: r.arrival)
+
+    clock = 0
+    guard = 0
+    while pending or sched.has_work:
+        guard += 1
+        assert guard < 5000, "scheduler failed to drain (live/deadlock)"
+        while pending and pending[0].arrival <= clock:
+            sched.submit(pending.pop(0))
+        admitted = sched.admit()
+        _full_invariants(sched, pcfg)
+        for seq in admitted:                       # simulated prefill token
+            tok = EOS if (seq.request.eos_id and rng.random() < 0.15) else 1
+            sched.on_prefill_token(seq.slot, tok)
+            _full_invariants(sched, pcfg)
+        if sched.active:
+            sched.ensure_append_capacity()         # page-boundary appends
+            _full_invariants(sched, pcfg)
+            for slot in list(sched.active):        # decode + random finishes
+                seq = sched.active[slot]
+                tok = EOS if (seq.request.eos_id and rng.random() < 0.2) else 1
+                sched.on_token(slot, tok)
+                _full_invariants(sched, pcfg)
+        clock += 1
+
+    # fully drained: every page back on the free list, every slot free
+    assert sched.pool.allocated_count == 0
+    assert sched.pool.free_count == pcfg.num_pages
+    assert len(sched.finished) == len(reqs)
+    assert not sched.active and len(sched._free_slots) == slots
+    # every finished sequence respected its bounds
+    for seq in sched.finished:
+        assert len(seq.generated) <= seq.request.max_new_tokens
+        if seq.request.eos_id is None:
+            assert len(seq.generated) == seq.request.max_new_tokens
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), pool_pages=st.integers(1, 32))
+def test_pagepool_random_alloc_free(seed, pool_pages):
+    """Direct allocator fuzz against a model: counts always sum to pool
+    size, no page handed out twice, double-free always raises."""
+    rng = pyrandom.Random(seed)
+    pool = PagePool(pool_pages)
+    held = []
+    for _ in range(200):
+        assert pool.free_count + pool.allocated_count == pool_pages
+        assert len(set(held)) == len(held)
+        if held and rng.random() < 0.45:
+            n = rng.randint(1, len(held))
+            back, held = held[:n], held[n:]
+            pool.free(back)
+            with pytest.raises(RuntimeError):
+                pool.free([back[0]])               # double free always raises
+            # the failed double-free must not have changed state
+            assert pool.free_count + pool.allocated_count == pool_pages
+        else:
+            want = rng.randint(1, max(1, pool_pages // 2))
+            if want > pool.free_count:
+                with pytest.raises(RuntimeError):
+                    pool.alloc(want)               # exhaustion raises cleanly
+            else:
+                held += pool.alloc(want)
+    pool.free(held)
+    assert pool.free_count == pool_pages and pool.allocated_count == 0
+
+
+def test_pagepool_null_page_never_allocated():
+    pcfg = PagedCacheConfig(page_size=4, num_pages=6, max_slots=2,
+                            max_pages_per_seq=3)
+    pool = PagePool(pcfg.num_pages)
+    pages = pool.alloc(pcfg.num_pages)
+    assert pcfg.null_page not in pages
+    assert sorted(pages) == list(range(pcfg.num_pages))
