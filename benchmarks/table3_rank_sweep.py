@@ -1,5 +1,16 @@
 """Paper Table 3 / Figure 2: rank sweep (dense vs SCT r in {32..256})
-on the SmolLM2-1.7B family.
+on the SmolLM2-1.7B family — now a one-command sweep driver.
+
+  PYTHONPATH=src python -m benchmarks.table3_rank_sweep \\
+      --ranks 8,16,32,64 --steps 300 --json-out table3.json
+
+One warm process runs the whole sweep: the synthetic dataset, the
+config, and jax's compilation cache are shared across ranks (each rank
+still compiles its own step — the shapes differ — but process startup,
+backend init, and data generation are paid once). Alongside the printed
+table it emits machine-readable JSON (``--json-out``, default
+``table3_rank_sweep.json``): per-rank loss *curve*, train-state bytes,
+process peak RSS, and step time — the BENCH_* trajectory format.
 
 Reduced scale for CPU (same family config, smaller dims, synthetic
 structured data, fewer steps), reproducing the paper's QUALITATIVE
@@ -13,6 +24,10 @@ claims, which we assert programmatically:
 """
 from __future__ import annotations
 
+import argparse
+import json
+import resource
+import sys
 import time
 
 import jax
@@ -31,15 +46,27 @@ SEQ = 64
 RANKS = (8, 16, 32, 64)  # scaled to the reduced model (d_ff=256)
 
 
-def _run_one(cfg, lr, label):
-    opt = make_sct_optimizer(cfg, lr=lr, warmup=10, total_steps=STEPS)
+def _state_bytes(state) -> int:
+    """Bytes pinned by the train state (params + Adam moments + scalars)
+    — the deterministic, per-rank memory metric (peak RSS is process-
+    wide and only monotone across the whole sweep)."""
+    return sum(leaf.size * leaf.dtype.itemsize for leaf in jax.tree.leaves(state))
+
+
+def _peak_rss_mb() -> float:
+    ru = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    # linux reports KiB, darwin reports bytes
+    return ru / (1024.0 ** 2) if sys.platform == "darwin" else ru / 1024.0
+
+
+def _run_one(cfg, lr, label, steps, batch, seq, ds):
+    opt = make_sct_optimizer(cfg, lr=lr, warmup=10, total_steps=steps)
     step_fn = jax.jit(make_train_step(cfg, opt))
     state = opt.init(init_model(jax.random.PRNGKey(0), cfg))
-    ds = SyntheticLMDataset(vocab=cfg.vocab, seq_len=SEQ, seed=0)
     losses = []
     t_steps = []
-    for i in range(STEPS):
-        t, l = ds.batch(i, BATCH)
+    for i in range(steps):
+        t, l = ds.batch(i, batch)
         t0 = time.time()
         state, m = step_fn(state, {"tokens": jnp.asarray(t), "labels": jnp.asarray(l)})
         jax.block_until_ready(m["loss"])
@@ -52,17 +79,23 @@ def _run_one(cfg, lr, label):
     print(f"{label:12s} params={n/1e3:8.0f}K loss={smooth:6.3f} ppl={ppl:8.1f} "
           f"step={step_ms:6.1f}ms first_loss={losses[0]:.3f}")
     return {"label": label, "params": n, "loss": smooth, "ppl": ppl,
-            "step_ms": step_ms, "first": losses[0]}
+            "step_ms": step_ms, "first": losses[0],
+            "loss_curve": losses, "state_bytes": _state_bytes(state),
+            "peak_rss_mb": _peak_rss_mb()}
 
 
-def run() -> list[str]:
+def run(ranks=RANKS, steps=STEPS, batch=BATCH, seq=SEQ,
+        json_out=None) -> list[str]:
     print("# Paper Table 3 — rank sweep (reduced SmolLM2-1.7B family, "
-          f"{STEPS} steps, synthetic data)")
+          f"{steps} steps, synthetic data)")
     base = get_config("smollm2-1.7b", reduced=True)
+    ds = SyntheticLMDataset(vocab=base.vocab, seq_len=seq, seed=0)
     results = []
-    dense = _run_one(base.replace_sct(spectral_mlp=False), lr=1e-3, label="dense")
-    for r in RANKS:
-        results.append(_run_one(base.replace_sct(rank=r), lr=3e-3, label=f"SCT r={r}"))
+    dense = _run_one(base.replace_sct(spectral_mlp=False), lr=1e-3, label="dense",
+                     steps=steps, batch=batch, seq=seq, ds=ds)
+    for r in ranks:
+        results.append(_run_one(base.replace_sct(rank=r), lr=3e-3, label=f"SCT r={r}",
+                                steps=steps, batch=batch, seq=seq, ds=ds))
 
     floors = [x["loss"] for x in results]
     spread = max(floors) - min(floors)
@@ -87,6 +120,20 @@ def run() -> list[str]:
           f"of dense or better -> {'OK' if claim3 else 'FAIL'} "
           f"(best SCT {min(floors):.3f} vs dense {dense['loss']:.3f})")
 
+    if json_out:
+        payload = {
+            "bench": "table3_rank_sweep",
+            "config": {"arch": base.name, "reduced": True, "steps": steps,
+                       "batch": batch, "seq": seq, "ranks": list(ranks)},
+            "dense": dense,
+            "sct": results,
+            "claims": {"converge": claim1, "params_monotone": claim2,
+                       "lr_fix_competitive": claim3},
+        }
+        with open(json_out, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"wrote {json_out} (per-rank loss curves + memory)")
+
     out = [f"table3_dense,{dense['step_ms']*1e3:.0f},loss={dense['loss']:.3f}"]
     for x in results:
         out.append(f"table3_{x['label'].replace(' ', '')},"
@@ -97,5 +144,20 @@ def run() -> list[str]:
     return out
 
 
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n\n")[0])
+    ap.add_argument("--ranks", default=",".join(str(r) for r in RANKS),
+                    help="comma-separated SCT ranks to sweep")
+    ap.add_argument("--steps", type=int, default=STEPS)
+    ap.add_argument("--batch", type=int, default=BATCH)
+    ap.add_argument("--seq", type=int, default=SEQ)
+    ap.add_argument("--json-out", default="table3_rank_sweep.json",
+                    help="machine-readable results path ('' to skip)")
+    args = ap.parse_args()
+    ranks = tuple(int(r) for r in args.ranks.split(",") if r)
+    run(ranks=ranks, steps=args.steps, batch=args.batch, seq=args.seq,
+        json_out=args.json_out or None)
+
+
 if __name__ == "__main__":
-    run()
+    main()

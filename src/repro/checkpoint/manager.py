@@ -6,13 +6,22 @@ newest complete checkpoint. Writes happen on a background thread
 (overlap with the next training steps); rotation keeps ``keep`` newest.
 A checkpoint is only visible after its atomic rename, so a crash
 mid-write can never corrupt the restore path.
+
+Cross-rank restore: every save records the per-layer retained ranks of
+the spectral groups in a ``.meta.json`` sidecar (readable without
+loading the arrays — serving uses it to pick a snapshot). Passing
+``target_rank`` to a restore resizes the loaded state on the host
+(rank/resize.py: params and Adam moments together) before any device
+placement, so a run checkpointed at rank 128 can resume — or serve —
+at rank 64, and vice versa.
 """
 from __future__ import annotations
 
+import json
 import os
 import re
 import threading
-from typing import Any, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 from repro.checkpoint.store import save_pytree, load_pytree
 
@@ -31,6 +40,9 @@ class CheckpointManager:
     def _path(self, step: int) -> str:
         return os.path.join(self.directory, f"step_{step:08d}.npz")
 
+    def _meta_path(self, step: int) -> str:
+        return self._path(step) + ".meta.json"
+
     def list_steps(self):
         steps = []
         for name in os.listdir(self.directory):
@@ -45,6 +57,7 @@ class CheckpointManager:
 
         def _do():
             save_pytree(state, self._path(step))
+            self._write_meta(step, state)
             self._rotate()
 
         if self.async_save and not block:
@@ -58,23 +71,80 @@ class CheckpointManager:
             self._thread.join()
             self._thread = None
 
+    def _write_meta(self, step: int, state: Any) -> None:
+        """Per-layer spectral rank sidecar (atomic, like the arrays)."""
+        from repro.rank.resize import rank_metadata
+
+        params = state.get("params", state) if isinstance(state, dict) else state
+        ranks = rank_metadata(params)
+        meta = {"step": step, "ranks": ranks}
+        tmp = self._meta_path(step) + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(meta, f, indent=1, sort_keys=True)
+        os.replace(tmp, self._meta_path(step))
+
+    def rank_metadata_for(self, step: int) -> Optional[Dict[str, int]]:
+        """The ``{group_path: rank}`` record of a checkpoint, read from
+        the sidecar without loading any arrays — the cheap way for
+        tooling to inspect what rank a snapshot holds before deciding
+        to restore/resize it. None for pre-sidecar checkpoints (older
+        runs restore fine; they just can't be inspected cheaply)."""
+        try:
+            with open(self._meta_path(step)) as f:
+                return dict(json.load(f)["ranks"])
+        except (FileNotFoundError, KeyError, json.JSONDecodeError):
+            return None
+
     def _rotate(self) -> None:
         steps = self.list_steps()
         for s in steps[: -self.keep] if self.keep else []:
-            try:
-                os.remove(self._path(s))
-            except FileNotFoundError:
-                pass
+            for path in (self._path(s), self._meta_path(s)):
+                try:
+                    os.remove(path)
+                except FileNotFoundError:
+                    pass
 
     # ------------------------------------------------------------------
-    def restore_latest(self, shardings: Any = None) -> Tuple[Optional[int], Any]:
-        """(step, state) of the newest checkpoint, or (None, None)."""
+    def restore_latest(self, shardings: Any = None,
+                       target_rank: Optional[int] = None,
+                       retraction: str = "qr") -> Tuple[Optional[int], Any]:
+        """(step, state) of the newest checkpoint, or (None, None).
+        ``target_rank`` resizes the spectral groups on restore (see
+        :meth:`restore`)."""
         self.wait()
         steps = self.list_steps()
         if not steps:
             return None, None
         step = steps[-1]
-        return step, load_pytree(self._path(step), shardings)
+        return step, self.restore(step, shardings, target_rank, retraction)
 
-    def restore(self, step: int, shardings: Any = None) -> Any:
-        return load_pytree(self._path(step), shardings)
+    def restore(self, step: int, shardings: Any = None,
+                target_rank: Optional[int] = None,
+                retraction: str = "qr") -> Any:
+        """Load the checkpoint at ``step``. With ``target_rank``, every
+        spectral group (and its Adam moments, when the tree is a full
+        TrainState) is resized to that rank on the host *before* device
+        placement — the resize-on-restore path. ``retraction`` only
+        matters for a grow (pass the run's configured method to match
+        in-run resizes; shrinks never retract). The resize key derives
+        from the checkpoint step, so a given (checkpoint, target_rank)
+        pair restores deterministically on every process."""
+        if target_rank is None:
+            return load_pytree(self._path(step), shardings)
+
+        import jax
+
+        from repro.checkpoint.store import place_tree
+        from repro.rank.resize import clamp_target, resize_train_state, resize_tree
+
+        state = load_pytree(self._path(step), shardings=None)
+        key = jax.random.PRNGKey(step)
+        if isinstance(state, dict) and "opt" in state and "params" in state:
+            target = clamp_target(state["params"], int(target_rank))
+            state = resize_train_state(key, state, target, retraction=retraction)
+        else:
+            state = resize_tree(key, state, clamp_target(state, int(target_rank)),
+                                retraction=retraction)
+        if shardings is not None:
+            state = place_tree(state, shardings)
+        return state

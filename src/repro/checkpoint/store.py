@@ -66,6 +66,17 @@ def save_pytree(tree: Any, path: str) -> None:
     os.replace(tmp, path)
 
 
+def place_tree(tree: Any, shardings: Any) -> Any:
+    """Device-place a host pytree onto a matching NamedSharding tree
+    (None entries get default placement). The one placement path shared
+    by plain restores and resize-on-restore (checkpoint/manager.py)."""
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, s) if s is not None else jax.device_put(x),
+        tree, shardings,
+        is_leaf=lambda x: isinstance(x, np.ndarray),
+    )
+
+
 def load_pytree(path: str, shardings: Any = None) -> Any:
     """Load a checkpoint; if ``shardings`` (a pytree of NamedSharding
     matching the checkpoint structure) is given, leaves are placed
@@ -75,11 +86,7 @@ def load_pytree(path: str, shardings: Any = None) -> Any:
         leaves = {k: z[k] for k in z.files if k != "__struct__"}
     tree = _rebuild(struct, leaves)
     if shardings is not None:
-        tree = jax.tree.map(
-            lambda x, s: jax.device_put(x, s) if s is not None else jax.device_put(x),
-            tree, shardings,
-            is_leaf=lambda x: isinstance(x, np.ndarray),
-        )
+        tree = place_tree(tree, shardings)
     return tree
 
 

@@ -32,6 +32,13 @@ import jax.numpy as jnp
 
 @dataclasses.dataclass(frozen=True)
 class PrecisionPolicy:
+    """The precision contract for one training run: storage dtype of
+    params/masters (``param_dtype``), forward/backward activation dtype
+    (``compute_dtype``), microbatch gradient-accumulation dtype
+    (``accum_dtype``), and the dynamic loss-scaling constants used when
+    ``loss_scaling`` is on. Use the ``POLICIES`` presets ('fp32',
+    'bf16', 'mixed') via :func:`precision_policy` rather than building
+    one by hand; ``*_jnp`` properties expose the resolved jnp dtypes."""
     name: str = "fp32"
     param_dtype: str = "float32"      # storage dtype of params / masters
     compute_dtype: str = "float32"    # forward/backward activation dtype
@@ -96,6 +103,11 @@ LossScaleState = Dict[str, jax.Array]   # {"scale", "good_steps", "skipped"}
 
 
 def loss_scale_init(policy: PrecisionPolicy) -> LossScaleState:
+    """Fresh loss-scale state: ``{"scale": f32 (init_scale),
+    "good_steps": i32, "skipped": i32}`` — all 0-d, living inside the
+    TrainState so checkpoints restore the schedule bit-exactly.
+    ``skipped`` is the lifetime overflow-skip counter the train loop
+    surfaces as ``overflow_steps``."""
     return {
         "scale": jnp.float32(policy.init_scale),
         "good_steps": jnp.zeros((), jnp.int32),
@@ -104,7 +116,11 @@ def loss_scale_init(policy: PrecisionPolicy) -> LossScaleState:
 
 
 def all_finite(tree: Any) -> jax.Array:
-    """Scalar bool: every float leaf of the tree is finite."""
+    """Scalar bool: every floating-point leaf of the pytree is finite
+    (no inf/nan anywhere). The overflow check the mixed-precision
+    optimizer runs on unscaled gradients to decide whether to apply or
+    skip the step; integer leaves are ignored, an all-integer tree is
+    vacuously True."""
     checks = [jnp.all(jnp.isfinite(leaf)) for leaf in jax.tree.leaves(tree)
               if jnp.issubdtype(jnp.asarray(leaf).dtype, jnp.floating)]
     if not checks:
@@ -133,9 +149,18 @@ def loss_scale_update(state: LossScaleState, finite: jax.Array,
 
 
 def scale_loss(loss: jax.Array, state: Optional[LossScaleState]) -> jax.Array:
+    """Multiply a scalar loss by the current dynamic scale before
+    differentiation (so small bf16 gradients don't flush to zero);
+    identity when ``state`` is None — the degrade-gracefully path for
+    states restored from a non-scaling checkpoint. The scale is a power
+    of two, so dividing the reported loss back out is exact."""
     return loss if state is None else loss * state["scale"].astype(loss.dtype)
 
 
 def unscale_grads(grads: Any, state: LossScaleState) -> Any:
+    """Divide scaled gradients back down (and promote to fp32 — the
+    dtype AdamW's moment math runs in) before the finiteness check and
+    the update. Mirrors :func:`scale_loss`: whatever the step builder
+    multiplied in, the optimizer divides out."""
     inv = 1.0 / state["scale"]
     return jax.tree.map(lambda g: g.astype(jnp.float32) * inv, grads)

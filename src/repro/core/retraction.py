@@ -34,7 +34,11 @@ def _sign_fix(Q: jax.Array, R: jax.Array) -> jax.Array:
 
 
 def qr_retract(U: jax.Array) -> jax.Array:
-    """Paper-faithful QR retraction with sign correction (Eq. 5)."""
+    """Paper-faithful QR retraction with sign correction (Eq. 5):
+    ``U (..., m, k) -> Q * sign(diag(R))`` where ``Q, R = qr(U)``. Maps
+    a factor drifted off the Stiefel manifold by an optimizer step back
+    to orthonormal columns; computed in fp32 regardless of storage
+    dtype, broadcast over leading stacked axes."""
     orig_dtype = U.dtype
     Q, R = jnp.linalg.qr(U.astype(jnp.float32))
     return _sign_fix(Q, R).astype(orig_dtype)

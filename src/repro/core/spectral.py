@@ -21,6 +21,10 @@ import jax.numpy as jnp
 # recognizes spectral leaves by this structure.
 SPECTRAL_KEYS = ("U", "s", "V")
 
+# The spectral group type: {"U": (..., m, k), "s": (..., k),
+# "V": (..., n, k)} with U, V column-orthonormal and an optional
+# vmap-stacked layer/expert prefix "...". W = U @ diag(s) @ V.T is
+# implied, never materialized.
 SpectralParams = Dict[str, jax.Array]
 
 
@@ -76,11 +80,17 @@ def spectral_apply(params: SpectralParams, x: jax.Array) -> jax.Array:
 
 
 def spectral_param_count(m: int, n: int, k: int) -> int:
-    """k(m + n + 1) numbers — paper §3 storage analysis."""
+    """Stored numbers for one rank-k spectral layer: ``k(m + n + 1)``
+    (U is (m, k), V is (n, k), s is (k,)) — the paper's §3 storage
+    analysis. Compare :func:`dense_param_count` for the ``m·n`` matrix
+    the factors replace; the ratio is the layer's compression factor."""
     return k * (m + n + 1)
 
 
 def dense_param_count(m: int, n: int) -> int:
+    """Stored numbers for the dense ``(m, n)`` weight the spectral
+    parameterization never materializes: ``m·n``. The denominator of
+    every compression claim in the paper's Table 1."""
     return m * n
 
 

@@ -234,13 +234,36 @@ def main() -> None:
                     help="serve with int8 per-channel quantized weights "
                          "(spectral factors + dense projections; "
                          "dequant-on-the-fly)")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="serve the newest training checkpoint under this "
+                         "directory instead of a random init")
+    ap.add_argument("--serve-rank", type=int, default=None,
+                    help="resize spectral groups to this rank at load time "
+                         "(cheap serving from a higher-rank training "
+                         "snapshot; requires --ckpt-dir)")
     args = ap.parse_args()
 
     if args.paged != args.stream:
         raise SystemExit("--paged and --stream go together (static mode: neither)")
+    if args.serve_rank is not None and args.ckpt_dir is None:
+        raise SystemExit("--serve-rank needs --ckpt-dir")
 
     cfg = get_config(args.arch, reduced=args.reduced)
-    params = init_model(jax.random.PRNGKey(args.seed), cfg)
+    if args.ckpt_dir:
+        from repro.serving.engine import params_from_checkpoint
+
+        try:
+            step, params = params_from_checkpoint(args.ckpt_dir,
+                                                  rank=args.serve_rank)
+        except FileNotFoundError as e:
+            raise SystemExit(str(e))
+        from repro.rank import current_ranks
+
+        ranks = current_ranks(params)
+        print(f"loaded checkpoint step {step} from {args.ckpt_dir}"
+              + (f", spectral rank(s) {list(ranks)}" if ranks else ""))
+    else:
+        params = init_model(jax.random.PRNGKey(args.seed), cfg)
     if args.paged:
         run_stream(args, cfg, params)
         return

@@ -20,7 +20,6 @@ from repro.models.model import init_model, train_loss, prefill, decode_step
 from repro.optim import make_sct_optimizer, SCTOptimizer
 from repro.sharding.rules import param_pspecs, set_current_mesh, constrain, dp_axes
 from repro.sharding.partition import (
-    state_pspecs,
     batch_pspecs,
     named_shardings,
     batch_axes,
@@ -32,7 +31,7 @@ from repro.sharding.partition import (
 # ----------------------------------------------------------------------
 
 def make_train_step(cfg: ModelConfig, optimizer: Optional[SCTOptimizer] = None,
-                    microbatches: int = 1):
+                    microbatches: int = 1, telemetry: bool = False):
     """(state, batch) -> (state, metrics). Pure; jit elsewhere.
 
     microbatches > 1 scans over batch slices accumulating gradients —
@@ -46,7 +45,12 @@ def make_train_step(cfg: ModelConfig, optimizer: Optional[SCTOptimizer] = None,
     the fp32 masters), and with loss scaling on, the loss is multiplied
     by the dynamic scale before differentiation — ``opt.apply`` unscales
     and skips overflowed steps. Metrics then report the *unscaled* loss
-    plus ``loss_scale`` / ``overflow``."""
+    plus ``loss_scale`` / ``overflow``.
+
+    ``telemetry=True`` folds the spectral-rank summary (rank/telemetry.py:
+    effective rank, energy capture, tail mass, Stiefel drift — all
+    computed on the post-update factors inside the same jit) into the
+    metrics dict under ``rank/*`` keys; dense models emit nothing."""
     opt = optimizer or make_sct_optimizer(cfg)
     pol = opt.precision
     cfg_eff = cfg if pol is None else cfg.replace(dtype=pol.compute_dtype)
@@ -101,6 +105,10 @@ def make_train_step(cfg: ModelConfig, optimizer: Optional[SCTOptimizer] = None,
             ).astype(jnp.float32)
         else:
             metrics["loss"] = loss
+        if telemetry:
+            from repro.rank.telemetry import telemetry_summary
+
+            metrics.update(telemetry_summary(new_state["params"]))
         return new_state, metrics
 
     return train_step
@@ -137,14 +145,15 @@ def abstract_train_state(cfg: ModelConfig, optimizer: Optional[SCTOptimizer] = N
 
 
 def train_shardings(cfg: ModelConfig, shape: ShapeSpec, mesh, state_like=None):
-    """(state_shardings, batch_shardings) as NamedSharding trees."""
+    """(state_shardings, batch_shardings) as NamedSharding trees.
+    ``state_like`` may be abstract (dry-run) or a live resized state
+    (rank/controller.py) — shardings key on structure, not values."""
+    from repro.sharding.partition import state_shardings_for
+
     if state_like is None:
         state_like = abstract_train_state(cfg)
-    n_model = mesh.shape.get("model", 1)
-    n_data = mesh.shape.get("data", 1)
-    sspec = state_pspecs(state_like, n_model, n_data)
     bspec = batch_pspecs(cfg, shape, mesh)
-    return named_shardings(sspec, mesh), named_shardings(bspec, mesh)
+    return state_shardings_for(state_like, mesh), named_shardings(bspec, mesh)
 
 
 def lower_train_step(cfg: ModelConfig, shape: ShapeSpec, mesh,

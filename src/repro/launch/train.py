@@ -22,6 +22,7 @@ from repro.data.synthetic import SyntheticLMDataset
 from repro.launch import steps as steps_mod
 from repro.optim import make_sct_optimizer
 from repro.models.model import init_model
+from repro.rank import RankController, parse_rank_schedule
 from repro.runtime.train_loop import TrainLoop, TrainLoopConfig
 from repro.sharding.rules import set_current_mesh
 
@@ -41,6 +42,16 @@ def main() -> None:
                          "loss scaling with overflow skip (default: legacy "
                          "config dtype, no scaling)")
     ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--rank-schedule", default=None,
+                    help="adaptive spectral rank schedule: 'static:K' "
+                         "(resize once, incl. on restore), "
+                         "'step:S1=K1[,S2=K2...]' (step-triggered), or "
+                         "'energy:T[,min=..][,max=..][,every=..][,factor=..]"
+                         "[,grow_below=..]' (telemetry-triggered on the "
+                         "rank/energy_top metric). See src/repro/rank/.")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="emit spectral telemetry (rank/* metrics) in the "
+                         "train log even without a rank schedule")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--seed", type=int, default=0)
@@ -61,9 +72,13 @@ def main() -> None:
         mesh = jax.make_mesh((n_dev // n_model, n_model), ("data", "model"))
         set_current_mesh(mesh)
 
-    step_fn = steps_mod.make_train_step(cfg, opt, microbatches=args.microbatches)
+    rank_schedule = parse_rank_schedule(args.rank_schedule)
+    telemetry = args.telemetry or rank_schedule is not None
+
+    step_fn = steps_mod.make_train_step(cfg, opt, microbatches=args.microbatches,
+                                        telemetry=telemetry)
+    shape = ShapeSpec("cli", args.seq, args.batch, "train")
     if mesh is not None:
-        shape = ShapeSpec("cli", args.seq, args.batch, "train")
         state_sh, batch_sh = steps_mod.train_shardings(cfg, shape, mesh)
         step_fn = jax.jit(step_fn, in_shardings=(state_sh, batch_sh),
                           out_shardings=(state_sh, None), donate_argnums=(0,))
@@ -71,6 +86,12 @@ def main() -> None:
     else:
         step_fn = jax.jit(step_fn, donate_argnums=(0,))
         state_shardings = None
+
+    controller = None
+    if rank_schedule is not None:
+        controller = RankController(cfg, opt, rank_schedule, mesh=mesh,
+                                    shape=shape, microbatches=args.microbatches,
+                                    seed=args.seed)
 
     ds = SyntheticLMDataset(vocab=cfg.vocab, seq_len=args.seq, seed=args.seed)
 
@@ -94,6 +115,11 @@ def main() -> None:
         line = f"step {step:6d}  loss {metrics['loss']:.4f}  ce {metrics['ce_loss']:.4f}"
         if "loss_scale" in metrics:
             line += f"  scale {metrics['loss_scale']:.0f}"
+        if "rank/mean" in metrics:
+            line += (f"  rank {metrics['rank/mean']:.0f}"
+                     f" (eff {metrics['rank/eff_mean']:.1f},"
+                     f" energy {metrics['rank/energy_top']:.3f},"
+                     f" ortho {metrics['rank/ortho_max']:.1e})")
         print(line, flush=True)
 
     loop = TrainLoop(
@@ -104,8 +130,12 @@ def main() -> None:
         init_state_fn=init_state,
         state_shardings=state_shardings,
         metrics_cb=log,
+        rank_controller=controller,
     )
     state = loop.run()
+    if controller is not None:
+        for at, old, new in controller.resizes:
+            print(f"rank resize @ step {at}: {old} -> {new}")
     from repro.core.tree import max_orthogonality_error
 
     print("final ortho error:", float(max_orthogonality_error(state["params"])))

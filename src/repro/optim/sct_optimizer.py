@@ -82,6 +82,17 @@ class SCTOptimizer:
             )
         return params, opt
 
+    def resize(self, key: jax.Array, state: TrainState, target) -> TrainState:
+        """Resize every spectral group in the TrainState to ``target``
+        (uniform int or ``{group_path: rank}`` mapping) — params and the
+        Adam moments together, Stiefel feasibility preserved via this
+        optimizer's own retraction (rank/resize.py). Host-side: the
+        returned state has new shapes, so the caller must re-jit its
+        step function (rank/controller.py owns that in the train loop)."""
+        from repro.rank.resize import resize_train_state
+
+        return resize_train_state(key, state, target, retraction=self.retraction)
+
     def apply(self, state: TrainState, grads: Any) -> TrainState:
         pol = self.precision
         # both the step builder (which scales the loss) and this unscale

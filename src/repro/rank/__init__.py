@@ -1,0 +1,73 @@
+"""Adaptive rank subsystem.
+
+The paper's central empirical finding (Table 3 / Figure 2) is that all
+tested MLP ranks converge to the same loss floor — rank is a *runtime*
+resource, not an architectural constant. This package operationalizes
+that:
+
+  * ``telemetry``  — cheap per-layer spectral health metrics computed
+    from the live ``U/s/V`` factors (effective rank, energy capture,
+    tail mass, Stiefel orthogonality drift), emitted through the
+    train-loop metrics path.
+  * ``resize``     — grow/shrink spectral parameter groups *and* their
+    Adam moments between steps, preserving Stiefel feasibility.
+  * ``schedule``   — static / step-triggered / telemetry-triggered
+    policies that decide the target rank at each step boundary.
+  * ``controller`` — glue that applies a schedule inside the training
+    loop: resize the train state, regenerate shardings, re-jit the step.
+"""
+from repro.rank.telemetry import (
+    effective_rank,
+    energy_capture,
+    tail_mass,
+    spectral_group_telemetry,
+    spectral_telemetry,
+    telemetry_summary,
+)
+from repro.rank.resize import (
+    grow_group,
+    shrink_group,
+    resize_group,
+    resize_tree,
+    resize_train_state,
+    rank_metadata,
+    current_ranks,
+)
+from repro.rank.schedule import (
+    RankSchedule,
+    StaticRankSchedule,
+    StepRankSchedule,
+    EnergyRankSchedule,
+    parse_rank_schedule,
+)
+
+__all__ = [
+    "effective_rank",
+    "energy_capture",
+    "tail_mass",
+    "spectral_group_telemetry",
+    "spectral_telemetry",
+    "telemetry_summary",
+    "grow_group",
+    "shrink_group",
+    "resize_group",
+    "resize_tree",
+    "resize_train_state",
+    "rank_metadata",
+    "current_ranks",
+    "RankSchedule",
+    "StaticRankSchedule",
+    "StepRankSchedule",
+    "EnergyRankSchedule",
+    "parse_rank_schedule",
+    "RankController",
+]
+
+
+def __getattr__(name):
+    # controller imports launch/sharding machinery; keep it lazy so the
+    # core rank ops stay importable from low-level modules without cycles
+    if name == "RankController":
+        from repro.rank.controller import RankController
+        return RankController
+    raise AttributeError(name)

@@ -1,0 +1,117 @@
+"""RankController: applies a rank schedule inside the training loop.
+
+A resize changes every spectral factor's shape, which invalidates the
+compiled train step and (on a mesh) the NamedSharding tree the loop
+restores checkpoints against. The controller owns that lifecycle:
+
+  1. consult the schedule at each step boundary (host-side, O(1));
+  2. on a decision: resize the TrainState (params + Adam moments,
+     rank/resize.py), clamping the uniform target per-group to
+     ``min(m, n)``;
+  3. regenerate sharding specs from the *resized* state
+     (sharding/partition.py — partition specs name axes, not sizes, so
+     the same rules re-apply at the new shapes);
+  4. re-jit the train step with the fresh shardings and hand the
+     (state, step_fn, shardings) triple back to the loop.
+
+The loop (runtime/train_loop.py) treats the controller as an opaque
+hook, so runtime/ stays import-clean of launch/.
+"""
+from __future__ import annotations
+
+from typing import Any, Mapping, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.rank.resize import clamp_target, rank_metadata, resize_train_state
+from repro.rank.schedule import RankSchedule
+
+
+class RankController:
+    """Drives one schedule for one (cfg, optimizer, mesh) training run.
+
+    ``maybe_resize(step, state, metrics)`` returns None (keep going) or
+    ``(new_state, new_step_fn, new_state_shardings)``. ``resizes``
+    records ``(step, old_rank, new_rank)`` events for logs and tests.
+    """
+
+    def __init__(self, cfg, optimizer, schedule: RankSchedule, *,
+                 mesh=None, shape=None, microbatches: int = 1, seed: int = 0,
+                 telemetry: bool = True):
+        self.cfg = cfg
+        self.optimizer = optimizer
+        self.schedule = schedule
+        self.mesh = mesh
+        self.shape = shape
+        self.microbatches = microbatches
+        # telemetry defaults on: the rank/* metrics are the observable
+        # record of a resize (and what energy schedules consume); pass
+        # False to trade that visibility for the per-step O(m k^2)
+        # orthogonality checks
+        self.telemetry = telemetry
+        self.key = jax.random.PRNGKey(np.uint32(seed ^ 0x5C7A11))
+        self.resizes: list[Tuple[int, int, int]] = []
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def uniform_rank(params: Any) -> Optional[int]:
+        """The single retained rank when the model is uniform, else the
+        max over groups (the schedule reasons about one number; clamped
+        per-group targets handle the rest)."""
+        ranks = rank_metadata(params)
+        return max(ranks.values()) if ranks else None
+
+    def _host_metrics(self, metrics) -> Optional[Mapping[str, float]]:
+        if metrics is None:
+            return None
+        return {k: float(np.asarray(v)) for k, v in metrics.items()
+                if k.startswith("rank/")}
+
+    # ------------------------------------------------------------------
+    def build_step(self, state: Any):
+        """(jitted step_fn, state_shardings) for the state's current
+        shapes. Single-device runs jit without explicit shardings; mesh
+        runs regenerate the NamedSharding tree from the resized state."""
+        from repro.launch import steps as steps_mod
+        from repro.sharding.rules import set_current_mesh
+
+        step_fn = steps_mod.make_train_step(self.cfg, self.optimizer,
+                                            microbatches=self.microbatches,
+                                            telemetry=self.telemetry)
+        if self.mesh is None:
+            return jax.jit(step_fn, donate_argnums=(0,)), None
+        set_current_mesh(self.mesh)
+        state_sh, batch_sh = steps_mod.train_shardings(
+            self.cfg, self.shape, self.mesh, state_like=state)
+        jitted = jax.jit(step_fn, in_shardings=(state_sh, batch_sh),
+                         out_shardings=(state_sh, None), donate_argnums=(0,))
+        return jitted, state_sh
+
+    def maybe_resize(self, step: int, state: Any, metrics=None):
+        current = self.uniform_rank(state["params"])
+        if current is None:
+            return None
+        target = self.schedule.decide(step, current, self._host_metrics(metrics))
+        if target is None:
+            return None
+        per_group = clamp_target(state["params"], int(target))
+        meta = rank_metadata(state["params"])
+        if all(per_group[p] == meta[p] for p in per_group):
+            return None
+        key = jax.random.fold_in(self.key, step)
+        state = resize_train_state(key, state, per_group,
+                                   retraction=self.optimizer.retraction)
+        step_fn, shardings = self.build_step(state)
+        if shardings is not None:
+            # the resize ran outside jit, so its outputs carry default
+            # placement — commit them to the regenerated sharding tree
+            # before the re-jitted step (explicit in_shardings) sees them
+            state = jax.device_put(state, shardings)
+        # record the *achieved* rank (clamping may cap the schedule's
+        # ask). A checkpoint-restart replaying past a trigger re-applies
+        # the same deterministic resize — log the event once.
+        event = (step, current, max(per_group.values()))
+        if event not in self.resizes:
+            self.resizes.append(event)
+        return state, step_fn, shardings

@@ -1,0 +1,247 @@
+"""Rank resize ops: grow/shrink live spectral factors between steps.
+
+Shrink keeps the columns of ``U``/``V`` belonging to the ``new_k``
+largest singular values — by Eckart–Young the best rank-``new_k``
+approximation of the represented matrix, with error exactly the
+discarded tail mass (telemetry's ``tail_mass``). Grow pads ``U``/``V``
+with random columns orthogonal-completed against the existing basis
+(project-then-QR, applied twice for fp32-grade orthogonality) and pads
+``s`` with zeros, so the represented matrix is *unchanged* by a grow:
+the new directions start contributing nothing and are recruited by the
+optimizer through the gradient of ``s``.
+
+Both operations also resize the Adam moments: shrink gathers the same
+column indices chosen for the params (a moment must follow its
+parameter), grow zero-pads (fresh optimizer state for fresh columns).
+
+Everything runs host-side between steps — a resize changes array shapes
+and therefore forces a re-jit of the train step and regeneration of the
+sharding specs anyway (rank/controller.py owns that), so there is
+nothing to win by tracing these ops.
+
+Shape conventions: spectral groups are ``{"U": (..., m, k),
+"s": (..., k), "V": (..., n, k)}`` with an optional stacked layer/expert
+prefix ``...``; all ops broadcast over the prefix, and stacked layers
+each select their own top-k columns on shrink.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Any, Dict, Mapping, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.retraction import retract
+from repro.core.spectral import is_spectral
+
+RankTarget = Union[int, Mapping[str, int]]
+
+
+def _fold_path(key: jax.Array, path: str) -> jax.Array:
+    """Deterministic per-group key: fold a stable hash of the group path
+    into the base key so resize is reproducible across processes."""
+    h = int.from_bytes(hashlib.sha256(path.encode()).digest()[:4], "big")
+    return jax.random.fold_in(key, h)
+
+
+def shrink_indices(s: jax.Array, new_k: int) -> jax.Array:
+    """Column indices of the ``new_k`` largest-|s| singular values,
+    kept in original column order (stable: minimizes the permutation a
+    shrink applies). ``s (..., k)`` -> int32 ``(..., new_k)``."""
+    order = jnp.argsort(-jnp.abs(s.astype(jnp.float32)), axis=-1)
+    return jnp.sort(order[..., :new_k], axis=-1).astype(jnp.int32)
+
+
+def _take_cols(M: jax.Array, idx: jax.Array) -> jax.Array:
+    """Gather columns of ``M (..., m, k)`` per stacked entry using
+    ``idx (..., new_k)`` -> ``(..., m, new_k)``."""
+    return jnp.take_along_axis(M, idx[..., None, :], axis=-1)
+
+
+def shrink_group(group: Dict[str, jax.Array], new_k: int,
+                 idx: Optional[jax.Array] = None) -> Tuple[Dict[str, jax.Array], jax.Array]:
+    """Truncate a spectral group to its top-``new_k`` singular
+    directions. Returns ``(new_group, idx)`` where ``idx`` is the
+    column-selection tensor — pass it back in to shrink the matching
+    Adam-moment group consistently. No retraction needed: a column
+    subset of an orthonormal basis is orthonormal."""
+    k = group["s"].shape[-1]
+    if not 1 <= new_k <= k:
+        raise ValueError(f"shrink target {new_k} outside [1, {k}]")
+    if idx is None:
+        idx = shrink_indices(group["s"], new_k)
+    out = dict(group)
+    out["U"] = _take_cols(group["U"], idx)
+    out["V"] = _take_cols(group["V"], idx)
+    out["s"] = jnp.take_along_axis(group["s"], idx, axis=-1)
+    return out, idx
+
+
+def _orthogonal_complement_cols(key: jax.Array, U: jax.Array, add: int) -> jax.Array:
+    """``add`` new orthonormal columns orthogonal to the columns of
+    ``U (..., m, k)``. Gaussian draw, project out span(U), QR, and a
+    second projection pass (classical Gram-Schmidt loses orthogonality
+    at fp32 when the random draw leans into span(U); twice is enough)."""
+    m = U.shape[-2]
+    Uf = U.astype(jnp.float32)
+    E = jax.random.normal(key, U.shape[:-1] + (add,), dtype=jnp.float32)
+    for _ in range(2):
+        E = E - jnp.einsum("...mk,...kl->...ml", Uf,
+                           jnp.einsum("...mk,...ml->...kl", Uf, E))
+        Q, R = jnp.linalg.qr(E)
+        d = jnp.diagonal(R, axis1=-2, axis2=-1)
+        E = Q * jnp.where(d >= 0, 1.0, -1.0).astype(Q.dtype)[..., None, :]
+    return E
+
+
+def grow_group(key: jax.Array, group: Dict[str, jax.Array], new_k: int, *,
+               retraction: str = "qr", s_init: float = 0.0) -> Dict[str, jax.Array]:
+    """Grow a spectral group to rank ``new_k``: pad ``U`` and ``V`` with
+    orthogonal-completed random columns, pad ``s`` with ``s_init``
+    (default 0.0 — the represented matrix is bit-unchanged and the new
+    directions are recruited via the gradient of ``s``), then re-retract
+    the padded factors so the group lands exactly on the Stiefel
+    manifold in its storage dtype."""
+    k = group["s"].shape[-1]
+    m, n = group["U"].shape[-2], group["V"].shape[-2]
+    if new_k < k:
+        raise ValueError(f"grow target {new_k} < current rank {k}")
+    if new_k > min(m, n):
+        raise ValueError(f"grow target {new_k} exceeds min(m={m}, n={n})")
+    if new_k == k:
+        return dict(group)
+    add = new_k - k
+    ku, kv = jax.random.split(_fold_path(key, "grow"))
+    out = dict(group)
+    for name, kk in (("U", ku), ("V", kv)):
+        M = group[name]
+        new_cols = _orthogonal_complement_cols(kk, M, add)
+        padded = jnp.concatenate([M.astype(jnp.float32), new_cols], axis=-1)
+        out[name] = retract(padded, method=retraction).astype(M.dtype)
+    pad = jnp.full(group["s"].shape[:-1] + (add,), s_init, group["s"].dtype)
+    out["s"] = jnp.concatenate([group["s"], pad], axis=-1)
+    return out
+
+
+def resize_group(key: jax.Array, group: Dict[str, jax.Array], new_k: int, *,
+                 retraction: str = "qr") -> Dict[str, jax.Array]:
+    """Dispatch: shrink when ``new_k`` is below the current rank, grow
+    when above, identity (copy) when equal."""
+    k = group["s"].shape[-1]
+    if new_k < k:
+        return shrink_group(group, new_k)[0]
+    return grow_group(key, group, new_k, retraction=retraction)
+
+
+# ----------------------------------------------------------------- trees --
+
+def _walk_resize(key, params, moments, target, retraction, path=""):
+    """Joint walk over params and an optional tuple of moment trees with
+    identical structure; spectral groups resize together."""
+    if is_spectral(params):
+        new_k = target.get(path) if isinstance(target, Mapping) else target
+        if new_k is None:
+            return params, moments
+        k = params["s"].shape[-1]
+        new_k = int(new_k)
+        if new_k == k:
+            return params, moments
+        gkey = _fold_path(key, path)
+        if new_k < k:
+            new_p, idx = shrink_group(params, new_k)
+            new_m = tuple(shrink_group(m, new_k, idx)[0] for m in moments)
+        else:
+            new_p = grow_group(gkey, params, new_k, retraction=retraction)
+            add = new_k - k
+
+            def pad_moment(g):
+                out = dict(g)
+                for name in ("U", "V"):
+                    M = g[name]
+                    z = jnp.zeros(M.shape[:-1] + (add,), M.dtype)
+                    out[name] = jnp.concatenate([M, z], axis=-1)
+                z = jnp.zeros(g["s"].shape[:-1] + (add,), g["s"].dtype)
+                out["s"] = jnp.concatenate([g["s"], z], axis=-1)
+                return out
+
+            new_m = tuple(pad_moment(m) for m in moments)
+        return new_p, new_m
+    if isinstance(params, dict):
+        outs = {}
+        mouts = [dict(m) for m in moments]
+        for k in params:
+            sub = tuple(m[k] for m in moments)
+            p2, m2 = _walk_resize(key, params[k], sub, target, retraction,
+                                  f"{path}/{k}" if path else k)
+            outs[k] = p2
+            for mo, v in zip(mouts, m2):
+                mo[k] = v
+        return outs, tuple(mouts)
+    if isinstance(params, (list, tuple)):
+        items = []
+        mitems = [[] for _ in moments]
+        for i, v in enumerate(params):
+            sub = tuple(m[i] for m in moments)
+            p2, m2 = _walk_resize(key, v, sub, target, retraction, f"{path}/[{i}]")
+            items.append(p2)
+            for li, x in zip(mitems, m2):
+                li.append(x)
+        ctor = type(params)
+        return ctor(items), tuple(ctor(li) for li in mitems)
+    return params, moments
+
+
+def resize_tree(key: jax.Array, params: Any, target: RankTarget, *,
+                retraction: str = "qr") -> Any:
+    """Resize every spectral group in a parameter tree to ``target``
+    (an int applied uniformly, or a ``{group_path: rank}`` mapping as
+    produced by :func:`rank_metadata`; groups absent from the mapping
+    keep their rank). Non-spectral leaves pass through untouched."""
+    out, _ = _walk_resize(key, params, (), target, retraction)
+    return out
+
+
+def resize_train_state(key: jax.Array, state: Dict[str, Any], target: RankTarget, *,
+                       retraction: str = "qr") -> Dict[str, Any]:
+    """Resize a full TrainState — params and the Adam moments ``mu``/
+    ``nu`` in one joint walk, so a shrink gathers identical column
+    indices in all three trees and a grow zero-pads the moments (fresh
+    optimizer state for the fresh directions). ``step``, ``count``,
+    ``loss_scale`` and any other scalar entries carry over unchanged."""
+    moments = (state["opt"]["mu"], state["opt"]["nu"])
+    new_params, (new_mu, new_nu) = _walk_resize(key, state["params"], moments,
+                                                target, retraction)
+    out = dict(state)
+    out["params"] = new_params
+    out["opt"] = dict(state["opt"], mu=new_mu, nu=new_nu)
+    return out
+
+
+def clamp_target(params: Any, target: int) -> Dict[str, int]:
+    """Expand a uniform rank target into a per-group ``{path: rank}``
+    mapping with each entry clamped to that group's ``min(m, n)``, so a
+    grow can never overshoot a small projection's full rank. Used by
+    the controller and the checkpoint resize-on-restore path."""
+    from repro.rank.telemetry import _walk_groups
+
+    out = {}
+    for path, g in _walk_groups(params):
+        lim = min(g["U"].shape[-2], g["V"].shape[-2])
+        out[path] = min(int(target), lim)
+    return out
+
+
+def rank_metadata(params: Any) -> Dict[str, int]:
+    """``{group_path: retained_rank}`` for every spectral group — the
+    per-layer rank record a checkpoint stores so a restore can detect a
+    rank mismatch and resize-on-restore (checkpoint/manager.py)."""
+    from repro.rank.telemetry import _walk_groups
+
+    return {path: int(g["s"].shape[-1]) for path, g in _walk_groups(params)}
+
+
+def current_ranks(params: Any) -> Tuple[int, ...]:
+    """Sorted unique retained ranks across the tree (a uniform-rank
+    model reports a single value)."""
+    return tuple(sorted(set(rank_metadata(params).values())))

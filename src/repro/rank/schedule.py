@@ -1,0 +1,141 @@
+"""Rank schedules: who decides the target rank, and when.
+
+A schedule is consulted at step *boundaries* (after the optimizer step,
+before the next batch) with the global step, the current uniform rank,
+and the latest host-side telemetry summary. It returns the new target
+rank — or None, meaning keep training at the current shapes. The
+controller (rank/controller.py) turns a non-None decision into an
+actual resize + re-jit.
+
+Three policies, selectable from the CLI (``--rank-schedule``):
+
+  static:K                   resize to K once, at the first boundary
+                             (override a checkpoint's rank at resume)
+  step:S1=K1[,S2=K2...]      step-triggered: at step Si, resize to Ki
+  energy:T[,kv...]           telemetry-triggered: when the mean top-half
+                             energy capture exceeds T the model is
+                             over-ranked -> shrink by ``factor``; when
+                             it falls below ``grow_below`` the spectrum
+                             is saturated -> grow by 1/``factor``.
+                             kv options: min=8, max=1024, every=25,
+                             factor=0.75, grow_below=0.0 (off)
+
+``parse_rank_schedule`` maps those strings to instances.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Mapping, Optional, Tuple
+
+
+class RankSchedule:
+    """Base policy. ``decide`` returns the target uniform rank for the
+    next step, or None to keep the current shapes. Implementations must
+    be idempotent across repeated calls at the same step (the loop may
+    consult more than once around a restart)."""
+
+    def decide(self, step: int, current_rank: int,
+               metrics: Optional[Mapping[str, float]] = None) -> Optional[int]:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass
+class StaticRankSchedule(RankSchedule):
+    """Resize to ``rank`` at the first boundary, then never again —
+    the resize-on-restore policy expressed as a schedule."""
+    rank: int
+
+    def decide(self, step, current_rank, metrics=None):
+        return self.rank if current_rank != self.rank else None
+
+
+@dataclasses.dataclass
+class StepRankSchedule(RankSchedule):
+    """``triggers`` is a sorted tuple of (step, rank): at each boundary
+    the latest trigger at or before ``step`` wins. Restart-safe: the
+    decision is a pure function of the global step, so a run resumed
+    from a checkpoint lands on the same rank trajectory."""
+    triggers: Tuple[Tuple[int, int], ...]
+
+    def decide(self, step, current_rank, metrics=None):
+        target = None
+        for at, rank in self.triggers:
+            if step >= at:
+                target = rank
+        if target is not None and target != current_rank:
+            return target
+        return None
+
+
+@dataclasses.dataclass
+class EnergyRankSchedule(RankSchedule):
+    """Telemetry-triggered policy on the ``rank/energy_top`` metric
+    (mean fraction of spectral energy in the top half of the retained
+    spectrum, telemetry.py). Checked every ``every`` steps:
+
+      energy_top >= shrink_above  -> the tail is dead weight; shrink to
+                                     max(min_rank, round(k * factor))
+      energy_top <= grow_below    -> the spectrum is flat to the edge;
+                                     grow to min(max_rank, round(k / factor))
+
+    ``grow_below=0.0`` disables growth. A flat-spectrum *random init*
+    scores energy_top ~0.5, so grow_below should stay well under 0.5.
+    """
+    shrink_above: float = 0.98
+    grow_below: float = 0.0
+    factor: float = 0.75
+    min_rank: int = 8
+    max_rank: int = 1024
+    every: int = 25
+
+    def decide(self, step, current_rank, metrics=None):
+        if metrics is None or step == 0 or step % self.every:
+            return None
+        energy = metrics.get("rank/energy_top")
+        if energy is None:
+            return None
+        if energy >= self.shrink_above:
+            target = max(self.min_rank, int(round(current_rank * self.factor)))
+        elif self.grow_below and energy <= self.grow_below:
+            target = min(self.max_rank, int(round(current_rank / self.factor)))
+        else:
+            return None
+        return target if target != current_rank else None
+
+
+def parse_rank_schedule(spec: Optional[str]) -> Optional[RankSchedule]:
+    """Parse a ``--rank-schedule`` CLI string (module docstring grammar)
+    into a schedule, or None for None/""/"none"."""
+    if spec is None or not spec.strip() or spec.strip().lower() == "none":
+        return None
+    kind, _, rest = spec.strip().partition(":")
+    kind = kind.lower()
+    if kind == "static":
+        return StaticRankSchedule(rank=int(rest))
+    if kind == "step":
+        triggers = []
+        for part in rest.split(","):
+            at, _, rank = part.partition("=")
+            if not rank:
+                raise ValueError(f"step trigger {part!r}: expected STEP=RANK")
+            triggers.append((int(at), int(rank)))
+        if not triggers:
+            raise ValueError("step schedule needs at least one STEP=RANK trigger")
+        return StepRankSchedule(triggers=tuple(sorted(triggers)))
+    if kind == "energy":
+        parts = [p for p in rest.split(",") if p]
+        if not parts or "=" in parts[0]:
+            raise ValueError("energy schedule: first field is the shrink threshold")
+        kw: Dict[str, float] = {"shrink_above": float(parts[0])}
+        names = {"min": "min_rank", "max": "max_rank", "every": "every",
+                 "factor": "factor", "grow_below": "grow_below"}
+        for part in parts[1:]:
+            k, _, v = part.partition("=")
+            if k not in names:
+                raise ValueError(f"energy schedule: unknown option {k!r} "
+                                 f"(options: {sorted(names)})")
+            field = names[k]
+            kw[field] = float(v) if field in ("factor", "grow_below") else int(v)
+        return EnergyRankSchedule(**kw)
+    raise ValueError(f"unknown rank schedule kind {kind!r} "
+                     "(options: static, step, energy)")

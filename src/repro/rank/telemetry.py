@@ -1,0 +1,141 @@
+"""Spectral telemetry: cheap per-layer health metrics from live factors.
+
+Everything here is O(k) or O(m k^2) on the *factors* — no dense (m, n)
+matrix, no SVD of anything bigger than the k singular values we already
+store. All functions are pure jnp and jit-safe, so the train step can
+fold them into its metrics dict with no extra host round-trip.
+
+Shape conventions: a spectral group is ``{"U": (..., m, k), "s": (..., k),
+"V": (..., n, k)}`` where ``...`` is an optional stacked layer/expert
+prefix (our models vmap-stack homogeneous layers for lax.scan).
+Per-group metrics reduce over the stacked prefix; tree-level summaries
+reduce over groups.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.manifold import orthogonality_error
+from repro.core.spectral import is_spectral
+
+
+def effective_rank(s: jax.Array) -> jax.Array:
+    """Entropy-based effective rank ``exp(H(p))`` of a singular-value
+    vector ``s (..., k)``, with ``p_i = s_i^2 / sum_j s_j^2``.
+
+    Returns a float in ``[1, k]`` per stacked entry: k when the spectrum
+    is flat, ~1 when one direction dominates. This is the standard
+    erank of Roy & Vetterli and what AdaSVD-style importance allocation
+    keys on. Reduces nothing — output shape is ``s.shape[:-1]``.
+    """
+    p = s.astype(jnp.float32) ** 2
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    h = -jnp.sum(p * jnp.log(jnp.maximum(p, 1e-30)), axis=-1)
+    return jnp.exp(h)
+
+
+def energy_capture(s: jax.Array, frac: float = 0.5) -> jax.Array:
+    """Fraction of spectral energy ``sum s_i^2`` captured by the top
+    ``ceil(frac * k)`` singular values (sorted by magnitude).
+
+    Near 1.0 means the trailing columns carry almost nothing — the layer
+    is over-ranked and a shrink is nearly free; near ``frac`` means the
+    spectrum is flat and every retained direction is earning its keep.
+    Output shape ``s.shape[:-1]``.
+    """
+    k = s.shape[-1]
+    top = max(1, math.ceil(frac * k))
+    s2 = jnp.sort(s.astype(jnp.float32) ** 2, axis=-1)[..., ::-1]
+    total = jnp.maximum(jnp.sum(s2, axis=-1), 1e-30)
+    return jnp.sum(s2[..., :top], axis=-1) / total
+
+
+def tail_mass(s: jax.Array, tail: int = 1) -> jax.Array:
+    """Relative Frobenius mass ``sqrt(sum_{i in tail} s_i^2 / sum s_i^2)``
+    of the ``tail`` smallest singular values — the normalized
+    Eckart-Young error a shrink by ``tail`` columns would introduce.
+    Output shape ``s.shape[:-1]``.
+    """
+    k = s.shape[-1]
+    tail = min(max(tail, 0), k)
+    s2 = jnp.sort(s.astype(jnp.float32) ** 2, axis=-1)  # ascending
+    total = jnp.maximum(jnp.sum(s2, axis=-1), 1e-30)
+    return jnp.sqrt(jnp.sum(s2[..., :tail], axis=-1) / total)
+
+
+def spectral_group_telemetry(group: Dict[str, jax.Array],
+                             energy_frac: float = 0.5) -> Dict[str, jax.Array]:
+    """Scalar telemetry for one spectral group (stacked prefix reduced).
+
+    Returns ``{"rank", "eff_rank", "energy_top", "tail_mass",
+    "ortho_err"}`` — all 0-d float32. ``rank`` is the static k (emitted
+    so metrics streams record resize events), ``ortho_err`` is the max
+    Stiefel drift ``max(|U^T U - I|, |V^T V - I|)`` over the stack.
+    """
+    s = group["s"]
+    return {
+        "rank": jnp.float32(s.shape[-1]),
+        "eff_rank": jnp.mean(effective_rank(s)),
+        "energy_top": jnp.mean(energy_capture(s, energy_frac)),
+        "tail_mass": jnp.max(tail_mass(s)),
+        "ortho_err": jnp.maximum(
+            orthogonality_error(group["U"]), orthogonality_error(group["V"])
+        ),
+    }
+
+
+def _walk_groups(tree: Any, path: str = "") -> List[Tuple[str, Dict[str, jax.Array]]]:
+    if is_spectral(tree):
+        return [(path, tree)]
+    out: List[Tuple[str, Dict[str, jax.Array]]] = []
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.extend(_walk_groups(tree[k], f"{path}/{k}" if path else k))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.extend(_walk_groups(v, f"{path}/[{i}]"))
+    return out
+
+
+def spectral_telemetry(params: Any, energy_frac: float = 0.5) -> Dict[str, Dict[str, jax.Array]]:
+    """Per-group telemetry for every spectral group in a parameter tree:
+    ``{"path/to/group": {metric: scalar}}``. Paths match the checkpoint
+    store's flattened naming, so a telemetry stream lines up with the
+    per-layer rank metadata a checkpoint records.
+    """
+    return {path: spectral_group_telemetry(g, energy_frac)
+            for path, g in _walk_groups(params)}
+
+
+def telemetry_summary(params: Any, energy_frac: float = 0.5,
+                      prefix: str = "rank/") -> Dict[str, jax.Array]:
+    """Flat scalar summary for the train-loop metrics dict.
+
+    Reduces per-group telemetry across groups (mean for the rank-shape
+    statistics, max for the drift/tail safety metrics) and prefixes keys
+    so they sit next to loss/ce_loss without collisions:
+
+      rank/mean        mean retained k over spectral groups
+      rank/eff_mean    mean effective rank
+      rank/energy_top  mean top-half energy capture
+      rank/tail_max    max single-column tail mass (worst layer)
+      rank/ortho_max   max Stiefel orthogonality drift (worst factor)
+
+    jit-safe; returns an empty dict when the model has no spectral
+    groups (dense baselines emit nothing rather than zeros).
+    """
+    per = spectral_telemetry(params, energy_frac)
+    if not per:
+        return {}
+    stack = lambda name: jnp.stack([m[name] for m in per.values()])
+    return {
+        prefix + "mean": jnp.mean(stack("rank")),
+        prefix + "eff_mean": jnp.mean(stack("eff_rank")),
+        prefix + "energy_top": jnp.mean(stack("energy_top")),
+        prefix + "tail_max": jnp.max(stack("tail_mass")),
+        prefix + "ortho_max": jnp.max(stack("ortho_err")),
+    }

@@ -15,6 +15,11 @@ Production behaviours, all exercised by tests on CPU:
   * elastic scaling: ``CheckpointManager`` stores host arrays, so a
     restart may use a different mesh/DP width — resharding happens at
     load via the new mesh's NamedShardings.
+  * adaptive rank: an optional ``rank_controller`` (rank/controller.py)
+    is consulted at every step boundary; when its schedule fires, the
+    loop swaps in the resized state, the re-jitted step function, and
+    the regenerated sharding tree mid-run. Resize events are recorded
+    in ``controller.resizes`` and counted here in ``rank_resizes``.
 """
 from __future__ import annotations
 
@@ -49,6 +54,7 @@ class TrainLoop:
         state_shardings: Any = None,
         metrics_cb: Optional[Callable[[int, Dict], None]] = None,
         failure_hook: Optional[Callable[[int], None]] = None,
+        rank_controller: Optional[Any] = None,
     ):
         self.step_fn = step_fn
         self.batch_iter_factory = batch_iter_factory
@@ -58,8 +64,10 @@ class TrainLoop:
         self.state_shardings = state_shardings
         self.metrics_cb = metrics_cb
         self.failure_hook = failure_hook
+        self.rank_controller = rank_controller
         self.straggler_steps = 0
         self.restarts = 0
+        self.rank_resizes = 0
         # mixed precision: overflow-skipped steps, mirrored from the
         # authoritative checkpointed counter state["loss_scale"]["skipped"]
         # when the run finishes
@@ -84,8 +92,26 @@ class TrainLoop:
                     raise
                 # fall through: restart from the latest checkpoint
 
+    def _apply_rank_decision(self, step: int, state, metrics=None):
+        """Consult the rank controller at a step boundary; on a resize,
+        swap in the new state, the re-jitted step_fn, and the
+        regenerated shardings (stale old-shape executables are simply
+        abandoned — jit keeps them cached but they are never called)."""
+        if self.rank_controller is None:
+            return state
+        result = self.rank_controller.maybe_resize(step, state, metrics)
+        if result is None:
+            return state
+        state, self.step_fn, self.state_shardings = result
+        self.rank_resizes += 1
+        return state
+
     def _run_once(self) -> Any:
         start_step, state = self._start_state()
+        # resize-on-restore: a restored checkpoint may carry a different
+        # rank than the schedule dictates at this step (the schedule is
+        # a pure function of the global step, so replay is consistent)
+        state = self._apply_rank_decision(start_step, state)
         batches = self.batch_iter_factory(start_step)
         step = start_step
         while step < self.cfg.total_steps:
@@ -100,6 +126,7 @@ class TrainLoop:
             if self.cfg.step_deadline_s and dt > self.cfg.step_deadline_s:
                 self.straggler_steps += 1
             step += 1
+            state = self._apply_rank_decision(step, state, metrics)
             if self.metrics_cb and step % self.cfg.log_every == 0:
                 self.metrics_cb(step, {k: float(np.asarray(v)) for k, v in metrics.items()})
             if step % self.cfg.checkpoint_every == 0 or step == self.cfg.total_steps:

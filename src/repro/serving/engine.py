@@ -36,7 +36,38 @@ from repro.serving.paged_cache import PagedCacheConfig, paged_write_pages, slot_
 from repro.serving.scheduler import ContinuousBatchingScheduler, Request, SeqState
 
 
+def params_from_checkpoint(ckpt_dir: str, *, rank: Optional[int] = None,
+                           step: Optional[int] = None):
+    """(step, params) from a training checkpoint directory, optionally
+    resized to ``rank`` via the manager's resize-on-restore path. The
+    one serving-side loader — the engine classmethod and the serve CLI
+    both route through here, so checkpoint-layout or resize-semantics
+    changes have a single call site. Full TrainStates are stripped to
+    their ``params``; a bare params tree passes through."""
+    from repro.checkpoint.manager import CheckpointManager
+
+    mgr = CheckpointManager(ckpt_dir)
+    if step is None:
+        step, state = mgr.restore_latest(target_rank=rank)
+        if state is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir!r}")
+    else:
+        state = mgr.restore(step, target_rank=rank)
+    params = state["params"] if isinstance(state, dict) and "params" in state \
+        else state
+    return step, params
+
+
 class ServingEngine:
+    """Continuous-batching serving runtime over one model + one paged
+    cache pool. Construct with live ``params`` (optionally
+    ``quantize="int8"``) or via :meth:`from_checkpoint` (optionally at
+    a different spectral rank), submit ``Request`` traces through
+    :meth:`run`, read throughput/memory from :meth:`stats`. The decode
+    step compiles once per engine — ``(max_slots, 1)`` tokens against
+    the shared pools with block tables as data — so mixed-length
+    request streams never retrigger compilation."""
+
     def __init__(self, cfg: ModelConfig, params, pcfg: PagedCacheConfig, *,
                  prefill_token_budget: Optional[int] = None,
                  quantize: Optional[str] = None):
@@ -80,6 +111,27 @@ class ServingEngine:
         self.decoded_tokens = 0
         self.decode_steps = 0
         self.wall_s = 0.0
+
+    # -------------------------------------------------------------- load --
+    @classmethod
+    def from_checkpoint(cls, cfg: ModelConfig, ckpt_dir: str,
+                        pcfg: PagedCacheConfig, *,
+                        rank: Optional[int] = None,
+                        step: Optional[int] = None,
+                        **kw) -> "ServingEngine":
+        """Build an engine straight from a training checkpoint directory.
+
+        ``rank`` shrinks (or grows) every spectral group to that rank at
+        load time via the checkpoint manager's resize-on-restore path —
+        the cheap-serving story: a run trained at rank 128 serves from
+        the same snapshot at rank 64 with ~2x smaller spectral factors,
+        keeping the top-64 singular directions (Eckart–Young optimal for
+        the represented weights). The Adam moments in the checkpoint are
+        dropped; only ``params`` board the engine. Composes with
+        ``quantize="int8"`` (shrink first, then quantize).
+        """
+        _, params = params_from_checkpoint(ckpt_dir, rank=rank, step=step)
+        return cls(cfg, params, pcfg, **kw)
 
     # --------------------------------------------------------------- run --
     def run(self, requests: Sequence[Request]) -> Dict[int, np.ndarray]:

@@ -50,16 +50,28 @@ def quantize_int8(w: jax.Array) -> dict:
 
 
 def dequantize_int8(qt: dict, dtype: Any = jnp.float32) -> jax.Array:
+    """Inverse of :func:`quantize_int8`: ``{"q8": int8 (..., m, c),
+    "scale": f32 (..., c)}`` -> float ``(..., m, c)`` with the scale
+    broadcast over the -2 axis. This is the transient apply-time
+    expansion (nn/linear.py, kernels/ops.spectral_matmul_q8) — int8 is
+    what lives in HBM; the float copy exists only inside the op."""
     return (qt["q8"].astype(jnp.float32)
             * jnp.expand_dims(qt["scale"], -2)).astype(dtype)
 
 
 def is_quantized(x: Any) -> bool:
+    """Structural check for one quantized tensor: a dict carrying
+    ``q8``/``scale``. Tree walkers (apply dispatch, param_bytes,
+    dequantize_tree) key on this the way core code keys on
+    ``is_spectral`` — by shape of the pytree, not by type."""
     return isinstance(x, dict) and "q8" in x and "scale" in x
 
 
 def is_quantized_spectral(p: Any) -> bool:
-    """A spectral group whose U/V were replaced by quantized tensors."""
+    """A spectral group whose ``U (m, k)`` / ``V (n, k)`` were replaced
+    by quantized tensors while ``s (k,)`` stayed float (the k singular
+    values carry the layer's whole dynamic range at negligible cost).
+    nn/linear.py routes such groups to the q8 spectral matmul."""
     return (
         isinstance(p, dict)
         and set(p.keys()) >= set(SPECTRAL_KEYS)

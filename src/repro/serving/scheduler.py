@@ -28,6 +28,12 @@ from repro.serving.paged_cache import PagedCacheConfig, PagePool
 
 @dataclasses.dataclass
 class Request:
+    """One serving request: ``prompt`` is a 1-D int32 token array of
+    shape ``(prompt_len,)``; generation runs until ``max_new_tokens``
+    (or ``eos_id``, when set). ``arrival`` is the engine step at which
+    the request becomes visible to the scheduler — traces with
+    staggered arrivals exercise mid-flight slot joins. ``rid`` keys the
+    result dict ``ServingEngine.run`` returns."""
     rid: int
     prompt: np.ndarray                 # (prompt_len,) int32 token ids
     max_new_tokens: int

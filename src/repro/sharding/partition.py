@@ -33,6 +33,20 @@ def state_pspecs(state_like: Any, n_model: int, n_data: int = 16) -> Any:
     return out
 
 
+def state_shardings_for(state_like: Any, mesh) -> Any:
+    """NamedSharding tree for a TrainState (live arrays or
+    ShapeDtypeStructs), regenerated from the mesh's axis sizes.
+
+    This is the rank-resize path (rank/controller.py): a resize changes
+    the spectral factors' k dimension, so the sharding tree must be
+    rebuilt against the *new* shapes — the partition rules name mesh
+    axes, not sizes, so the same rules re-apply and divisibility guards
+    in rules.py drop any axis the new shape no longer divides."""
+    n_model = mesh.shape.get("model", 1)
+    n_data = mesh.shape.get("data", 1)
+    return named_shardings(state_pspecs(state_like, n_model, n_data), mesh)
+
+
 def batch_axes(global_batch: int, mesh):
     """The mesh axes the batch dim shards over: all DP axes when the
     batch divides them, 'data' alone as a fallback, else unsharded."""

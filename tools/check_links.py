@@ -1,0 +1,103 @@
+#!/usr/bin/env python3
+"""Markdown link checker for the docs tree — stdlib only, no network.
+
+  python tools/check_links.py README.md docs/
+
+Checks every inline link/image ``[text](target)`` in the given markdown
+files (directories are scanned for ``*.md``):
+
+  * relative file targets must exist (resolved against the source file);
+  * ``#anchors`` — bare or after a relative .md target — must match a
+    heading in the target file, using GitHub's slug rules (lowercase,
+    punctuation stripped, spaces to hyphens, ``-N`` suffix for dups);
+  * absolute URLs (http/https/mailto) are skipped: CI must not flake on
+    the outside world, and the README badge is a placeholder.
+
+Exit 0 when clean, 1 with a per-link report otherwise.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$")
+CODE_FENCE_RE = re.compile(r"^(```|~~~)")
+EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def github_slug(heading: str, seen: dict) -> str:
+    """GitHub's anchor slug: strip markdown emphasis/code, lowercase,
+    drop everything but word chars/spaces/hyphens, spaces -> hyphens."""
+    text = re.sub(r"[*_`]", "", heading.strip())
+    text = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", text)  # linked headings
+    slug = re.sub(r"[^\w\- ]", "", text.lower(), flags=re.UNICODE)
+    slug = slug.replace(" ", "-")
+    n = seen.get(slug, 0)
+    seen[slug] = n + 1
+    return slug if n == 0 else f"{slug}-{n}"
+
+
+def markdown_lines(path: Path):
+    """Lines with fenced code blocks blanked (links in code are examples,
+    not navigation)."""
+    in_fence = False
+    for line in path.read_text(encoding="utf-8").splitlines():
+        if CODE_FENCE_RE.match(line.strip()):
+            in_fence = not in_fence
+            yield ""
+            continue
+        yield "" if in_fence else line
+
+
+def anchors_of(path: Path) -> set:
+    seen: dict = {}
+    out = set()
+    for line in markdown_lines(path):
+        m = HEADING_RE.match(line)
+        if m:
+            out.add(github_slug(m.group(1), seen))
+    return out
+
+
+def check_file(path: Path, repo_root: Path) -> list:
+    errors = []
+    for lineno, line in enumerate(markdown_lines(path), 1):
+        for m in LINK_RE.finditer(line):
+            target = m.group(1)
+            if target.startswith(EXTERNAL):
+                continue
+            ref, _, anchor = target.partition("#")
+            dest = path if not ref else (path.parent / ref).resolve()
+            if ref and not dest.exists():
+                errors.append(f"{path}:{lineno}: broken link -> {target}")
+                continue
+            if anchor and dest.suffix == ".md":
+                if anchor not in anchors_of(dest):
+                    errors.append(f"{path}:{lineno}: missing anchor -> {target}")
+            if ref and repo_root not in dest.parents and dest != repo_root:
+                errors.append(f"{path}:{lineno}: link escapes the repo -> {target}")
+    return errors
+
+
+def main(argv) -> int:
+    if not argv:
+        argv = ["README.md", "docs"]
+    repo_root = Path(__file__).resolve().parent.parent
+    files = []
+    for arg in argv:
+        p = Path(arg)
+        files.extend(sorted(p.rglob("*.md")) if p.is_dir() else [p])
+    errors = []
+    for f in files:
+        errors.extend(check_file(f.resolve(), repo_root))
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"checked {len(files)} markdown files: "
+          f"{'OK' if not errors else f'{len(errors)} broken links'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
