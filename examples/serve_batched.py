@@ -33,6 +33,12 @@ def main():
         ["--paged", "--stream", "--requests", "6", "--slots", "3",
          "--prompt-len", "12", "--gen", "12", "--page-size", "8",
          "--num-pages", "32", "--pages-per-seq", "4", "--verify"])
+    run("streaming (shared system prompt, prefix cache + chunked prefill)",
+        ["--paged", "--stream", "--requests", "6", "--slots", "3",
+         "--prompt-len", "8", "--gen", "10", "--page-size", "8",
+         "--num-pages", "48", "--pages-per-seq", "8",
+         "--shared-prefix", "24", "--prefix-cache", "--chunked-prefill",
+         "--prefill-budget", "16", "--verify"])
 
 
 if __name__ == "__main__":

@@ -114,12 +114,26 @@ RETRACTIONS: Dict[str, Callable[..., jax.Array]] = {
 }
 
 
-def retract(U: jax.Array, method: str = "qr", axis_name: str | None = None) -> jax.Array:
-    """Dispatch a retraction by name. ``axis_name`` only affects
-    cholesky_qr2 (the only method that distributes without a gather)."""
+def retract(U: jax.Array, method: str = "qr", axis_name: str | None = None,
+            **kwargs) -> jax.Array:
+    """Dispatch a retraction by name.
+
+    ``axis_name`` marks U as row-sharded along that mapped axis (inside
+    shard_map). Only cholesky_qr2 can honour it (the Gram matrix is
+    psum'd; communication is k x k). ``qr``/``cayley`` operate on the
+    local shard only — silently accepting ``axis_name`` would QR each
+    shard independently and return a factor that is *not* orthonormal
+    globally, so those combinations raise instead of corrupting the
+    manifold. Extra kwargs go to the method (e.g. ``tangent_scale`` for
+    cayley)."""
     if method == "cholesky_qr2":
-        return cholesky_qr2_retract(U, axis_name=axis_name)
+        return cholesky_qr2_retract(U, axis_name=axis_name, **kwargs)
     fn = RETRACTIONS.get(method)
     if fn is None:
         raise ValueError(f"unknown retraction {method!r}; options {list(RETRACTIONS)}")
-    return fn(U)
+    if axis_name is not None:
+        raise ValueError(
+            f"retraction {method!r} cannot distribute over axis_name="
+            f"{axis_name!r}: per-shard QR/Cayley of a row-sharded factor is "
+            f"not globally orthonormal; use method='cholesky_qr2'")
+    return fn(U, **kwargs)

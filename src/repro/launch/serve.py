@@ -18,6 +18,16 @@ pool:
 ``--verify`` re-decodes every request through the static path and
 checks the greedy outputs match token for token.
 
+Production traffic shape (streaming mode): ``--shared-prefix N`` opens
+every prompt with the same N-token system prefix, ``--prefix-cache``
+serves repeated page-aligned prefixes from the refcounted prefix index
+(only prompt tails are prefilled), ``--chunked-prefill`` splits prompt
+tails into ``--prefill-budget``-sized chunks interleaved with decode
+steps, and ``--request-timeout`` bounds per-request service time in
+engine steps (expired requests are evicted with their partial output).
+Recurrent families opt out of prefix sharing/chunking — see
+docs/serving.md.
+
 Int8 serving (``--quantize int8``, either mode): spectral factors and
 dense projections are quantized per-channel to int8
 (serving/quantize.py) and dequantized on the fly at apply time. With
@@ -53,26 +63,32 @@ def sample_greedy(logits):
 def build_trace(args, vocab, pcfg):
     """Staggered mixed-length request trace: lengths cycle through a
     spread around --prompt-len, arrivals step every --arrive-every
-    engine steps."""
+    engine steps. With --shared-prefix, every prompt starts with the
+    same system-prompt prefix (the prefix-cache workload); with
+    --request-timeout, each request carries that deadline."""
     from repro.serving import Request
 
     rng = np.random.default_rng(args.seed)
+    shared = rng.integers(0, vocab, size=(args.shared_prefix,)).astype(np.int32) \
+        if args.shared_prefix else np.zeros((0,), np.int32)
     lens = [max(2, args.prompt_len + d) for d in (-7, 0, 5, -3, 9, 2, -5, 12)]
     reqs = []
     for i in range(args.requests):
         plen = lens[i % len(lens)]
         gen = max(1, args.gen + (i % 3) * 4 - 4)
-        if gen + 2 > pcfg.max_seq:
+        if gen + 2 + args.shared_prefix > pcfg.max_seq:
             raise SystemExit(
                 f"request {i}: gen={gen} (spread from --gen {args.gen}) plus a "
-                f">=2-token prompt exceeds page-size x pages-per-seq = "
-                f"{pcfg.max_seq} tokens")
-        plen = min(plen, pcfg.max_seq - gen)
+                f">=2-token prompt (+{args.shared_prefix} shared prefix) exceeds "
+                f"page-size x pages-per-seq = {pcfg.max_seq} tokens")
+        plen = min(plen, pcfg.max_seq - gen - args.shared_prefix)
+        tail = rng.integers(0, vocab, size=(plen,)).astype(np.int32)
         reqs.append(Request(
             rid=i,
-            prompt=rng.integers(0, vocab, size=(plen,)).astype(np.int32),
+            prompt=np.concatenate([shared, tail]),
             max_new_tokens=gen,
             arrival=i // max(1, args.slots) * args.arrive_every,
+            deadline=args.request_timeout,
         ))
     return reqs
 
@@ -112,7 +128,9 @@ def run_stream(args, cfg, params) -> None:
     )
     engine = ServingEngine(cfg, params, pcfg,
                            prefill_token_budget=args.prefill_budget,
-                           quantize=args.quantize)
+                           quantize=args.quantize,
+                           prefix_cache=args.prefix_cache,
+                           chunked_prefill=args.chunked_prefill)
     trace = build_trace(args, cfg.vocab, pcfg)
     print(f"streaming {len(trace)} requests, prompt lens "
           f"{sorted({r.prompt_len for r in trace})}, slots={pcfg.max_slots}, "
@@ -125,6 +143,21 @@ def run_stream(args, cfg, params) -> None:
           f"tokens in {st['wall_s']:.2f}s ({st['tokens_per_s']:.1f} tok/s)")
     print(f"paged attention cache: {int(st['attn_cache_bytes'])} bytes "
           f"({pcfg.num_pages}+1 pages x {pcfg.page_size} tokens)")
+    if args.prefix_cache:
+        saved = int(st["prefix_shared_tokens"])
+        total = int(st["prompt_tokens"])
+        hit = st.get("prefix_hit_pages", 0.0)
+        look = max(st.get("prefix_lookup_pages", 0.0), 1.0)
+        print(f"prefix cache: {saved}/{total} prompt tokens served from cache "
+              f"({100.0 * saved / max(total, 1):.0f}% prefill saved), "
+              f"page hit-rate {100.0 * hit / look:.0f}%"
+              + ("" if engine.prefix_cache else
+                 " [family opted out: recurrent state, exact-match only]"))
+    print(f"inter-token latency: p50 {st['itl_p50_s'] * 1e3:.1f} ms, "
+          f"p99 {st['itl_p99_s'] * 1e3:.1f} ms")
+    if args.request_timeout is not None:
+        print(f"deadlines: {int(st['timed_out'])} timed out, "
+              f"{int(st['cancelled'])} cancelled")
     if args.quantize:
         print(f"weights: {int(st['weight_bytes'])} bytes {args.quantize} "
               f"(fp32 {int(st['weight_bytes_fp'])} bytes, "
@@ -140,9 +173,16 @@ def run_stream(args, cfg, params) -> None:
         for r in trace:
             ref = static_greedy_reference(cfg, oracle_params, r.prompt,
                                           r.max_new_tokens, pcfg.max_seq)
-            if not np.array_equal(ref, out[r.rid]):
+            got = out[r.rid]
+            if engine.last_statuses.get(r.rid) != "finished":
+                # timed-out/cancelled: partial output must still be a
+                # prefix of the oracle's tokens
+                ok = np.array_equal(ref[:len(got)], got)
+            else:
+                ok = np.array_equal(ref, got)
+            if not ok:
                 bad += 1
-                print(f"request {r.rid}: MISMATCH\n  static {ref}\n  paged  {out[r.rid]}")
+                print(f"request {r.rid}: MISMATCH\n  static {ref}\n  paged  {got}")
         if bad:
             raise SystemExit(f"{bad}/{len(trace)} requests diverged from the static path")
         print(f"verify: all {len(trace)} requests match the fp32 static path "
@@ -225,7 +265,23 @@ def main() -> None:
     ap.add_argument("--arrive-every", type=int, default=4,
                     help="engine steps between arrival waves")
     ap.add_argument("--prefill-budget", type=int, default=64,
-                    help="max prefill tokens admitted per engine step")
+                    help="max prefill tokens admitted per engine step "
+                         "(with --chunked-prefill, also the chunk size)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="share page-aligned prompt prefixes across requests "
+                         "(refcounted copy-on-write pages; recurrent families "
+                         "opt out — see docs/serving.md)")
+    ap.add_argument("--chunked-prefill", action="store_true",
+                    help="split prompt prefill into budget-sized chunks "
+                         "interleaved with decode steps (tail-latency control "
+                         "for long prompts)")
+    ap.add_argument("--request-timeout", type=int, default=None,
+                    help="per-request deadline in engine steps; expired "
+                         "requests are evicted with their partial output")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend this many shared system-prompt tokens to "
+                         "every request in the trace (the prefix-cache "
+                         "workload)")
     ap.add_argument("--verify", action="store_true",
                     help="check streaming outputs against the static path "
                          "(with --quantize: int8 outputs against the fp32 "

@@ -32,6 +32,34 @@ Params = Dict[str, Any]
 # layer stacking — the serving engine scatters prefill state with these
 ATTN_STATE_KEYS = ("cache", "dense_cache", "moe_cache", "attn_cache")
 
+# Families whose *entire* decode state is paged attention KV. Only these
+# support shared-prefix reuse and chunked (offset) prefill: a cached
+# page fully determines the contribution of its tokens to any later
+# query. Recurrent families (hybrid mamba, xlstm) carry slot-local
+# recurrent state that a mid-prompt restart cannot reconstruct from
+# pages, so they opt out — their prompts always prefill in one shot
+# from position 0 and never share prefix pages (the only reuse that
+# could be exact for them is a full-prompt state snapshot, which we
+# deliberately do not cache). The serving engine consults this policy;
+# tests assert the opt-out families still serve token-identically.
+#
+# moe_lm caveat: expert capacity is sized per forward (capacity_factor
+# * tokens_in_this_forward / n_experts, nn/moe.py), so when capacity
+# actually *binds*, a prompt prefilled as chunks can drop a different
+# token set than the one-shot oracle prefill. That dependence on the
+# forward's token count is pre-existing (batched decode already drops
+# differently than the batch-1 oracle at tight capacity — see the
+# fp32/capacity_factor pins in tests); the token-identity guarantee for
+# MoE therefore holds in the capacity-unbound regime, same as for every
+# other MoE serving path in this repo.
+PREFIX_SHARING_FAMILIES = ("dense_lm", "moe_lm")
+
+
+def supports_prefix_sharing(cfg: ModelConfig) -> bool:
+    """Whether this family can prefill from an offset against paged KV
+    (and therefore share prefix pages / chunk its prefill)."""
+    return cfg.family in PREFIX_SHARING_FAMILIES
+
 
 def recurrent_slot_axes(cfg: ModelConfig) -> Dict[str, int]:
     """state key -> axis of the serving slot (batch) in stacked leaves."""
@@ -336,6 +364,35 @@ def decode_step_lm_paged(params: Params, tokens: jax.Array, state,
             use_pallas=cfg.use_pallas)
 
     return _decode_step_body(params, tokens, state, cfg, attn_decode)
+
+
+def prefill_chunk_lm_paged(params: Params, tokens: jax.Array, state,
+                           block_table: jax.Array, start: jax.Array,
+                           cfg: ModelConfig):
+    """Chunked/offset prefill against the paged pools: tokens (1, c)
+    occupy absolute positions [start, start+c) of one sequence whose
+    pages are mapped in block_table (1, n_pages). Positions < start are
+    already cached (a shared prefix, or earlier chunks of this prompt);
+    the chunk's KV is written through the block table and attention
+    runs causally at absolute positions. Returns (logits (1, c, vocab),
+    new state). ``start`` is data — one executable per chunk length.
+
+    Only :data:`PREFIX_SHARING_FAMILIES`; recurrent families raise (see
+    the policy note on that constant)."""
+    if cfg.family not in PREFIX_SHARING_FAMILIES:
+        raise NotImplementedError(
+            f"chunked/offset prefill needs pure paged-attention state; "
+            f"family {cfg.family!r} carries recurrent state and opts out")
+
+    def attn_chunk(p, h, cache):
+        if cfg.attention == "mla":
+            return attn.apply_mla_prefill_paged(
+                p, h, cfg, cache=cache, block_table=block_table, start=start)
+        return attn.apply_gqa_prefill_paged(
+            p, h, cfg, cache=cache, block_table=block_table, start=start,
+            use_pallas=cfg.use_pallas)
+
+    return _decode_step_body(params, tokens, state, cfg, attn_chunk)
 
 
 def _decode_step_body(params: Params, tokens: jax.Array, state, cfg: ModelConfig,

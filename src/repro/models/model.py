@@ -85,6 +85,15 @@ def decode_step_paged(params, tokens, state, block_table, seq_lens, cfg: ModelCo
                                            seq_lens, cfg)
 
 
+def prefill_chunk_paged(params, tokens, state, block_table, start, cfg: ModelConfig):
+    """Offset/chunked prefill for one sequence against the paged pools
+    (decode.prefill_chunk_lm_paged); attention-only families."""
+    if cfg.family == "encdec":
+        raise NotImplementedError("paged serving targets decoder-only families")
+    return decode_mod.prefill_chunk_lm_paged(params, tokens, state, block_table,
+                                             start, cfg)
+
+
 def param_count(params) -> int:
     return sum(int(jnp.size(x)) for x in jax.tree.leaves(params))
 

@@ -216,7 +216,8 @@ def _sdpa(q, k, v, *, causal: bool, q_offset=0, kv_len_mask=None):
         and sq > FLASH_THRESHOLD
         and sq % min(FLASH_Q_CHUNK, sq) == 0
         and skv % min(FLASH_KV_CHUNK, skv) == 0
-        and q_offset == 0
+        and isinstance(q_offset, int)   # traced offset (chunked prefill)
+        and q_offset == 0               # => direct path, mask handles it
     )
     if use_flash:
         # PALLAS_EQ marker: on TPU this region runs as the fused
@@ -305,6 +306,31 @@ def apply_gqa_decode(p, x, cfg, *, cache, cache_len, use_pallas=False):
     valid = jnp.broadcast_to(valid, (b, S))
     o = _sdpa(q, ck.astype(q.dtype), cv.astype(q.dtype), causal=False, kv_len_mask=valid)
     return apply_linear(p["wo"], o.reshape(b, s, -1), use_pallas=use_pallas), {"k": ck, "v": cv}
+
+
+def apply_gqa_prefill_paged(p, x, cfg, *, cache, block_table, start, use_pallas=False):
+    """Chunked prefill from a logical offset against a paged pool.
+
+    x: (1, c, d) — one sequence's prompt tokens for absolute positions
+    [start, start+c); cache: {"k"/"v": (P+1, page, kvh, hd)} shared
+    pool; block_table: (1, n_pages); start: scalar int32 (data — one
+    executable per chunk length serves every offset). The chunk's K/V
+    is scattered into the sequence's pages, then attention runs over
+    the gathered logical view: positions < start are the already-cached
+    (possibly shared) prefix, positions ≥ start+c stay behind the
+    causal mask. Row-for-row this matches a full static prefill
+    restricted to the chunk's query positions."""
+    from repro.serving.paged_cache import paged_gather, paged_write_slice
+
+    b, c, _ = x.shape
+    positions = jnp.broadcast_to(start + jnp.arange(c, dtype=jnp.int32)[None], (b, c))
+    q, k, v = _gqa_qkv(p, x, cfg, positions, use_pallas)
+    pk = paged_write_slice(cache["k"], block_table[0], start, k[0])
+    pv = paged_write_slice(cache["v"], block_table[0], start, v[0])
+    ck = paged_gather(pk, block_table)
+    cv = paged_gather(pv, block_table)
+    o = _sdpa(q, ck.astype(q.dtype), cv.astype(q.dtype), causal=True, q_offset=start)
+    return apply_linear(p["wo"], o.reshape(b, c, -1), use_pallas=use_pallas), {"k": pk, "v": pv}
 
 
 def apply_gqa_decode_paged(p, x, cfg, *, cache, block_table, seq_lens, use_pallas=False):
@@ -424,9 +450,11 @@ def _split_wukv(p, cfg):
 def _mla_absorbed_attend(p, x, cfg, q_nope, q_rope, cckv, ckr, valid):
     """Shared absorbed-decode attention: scores and values computed
     directly against the compressed latent view cckv (b, S, kv_lora) /
-    ckr (b, S, rope_d) under the (b, S) validity mask — no full K/V is
-    ever materialized (the MLA idea, mirroring SCT's never-materialize
-    rule)."""
+    ckr (b, S, rope_d) under a validity mask — no full K/V is ever
+    materialized (the MLA idea, mirroring SCT's never-materialize
+    rule). ``valid`` is (b, S) (same mask for every query — the decode
+    case) or (b, s, S) (per-query causal mask — the chunked-prefill
+    case)."""
     b, s, _ = x.shape
     h, nope, rope_d, vd = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
     wuk, wuv = _split_wukv(p, cfg)
@@ -436,7 +464,8 @@ def _mla_absorbed_attend(p, x, cfg, q_nope, q_rope, cckv, ckr, valid):
         jnp.einsum("bshl,bSl->bhsS", q_lat, cckv.astype(q_lat.dtype))
         + jnp.einsum("bshr,bSr->bhsS", q_rope, ckr.astype(q_rope.dtype))
     ).astype(jnp.float32) / jnp.sqrt(jnp.float32(nope + rope_d))
-    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    mask = valid[:, None, None, :] if valid.ndim == 2 else valid[:, None, :, :]
+    scores = jnp.where(mask, scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
     o_lat = jnp.einsum("bhsS,bSl->bshl", probs, cckv.astype(probs.dtype))   # (b,s,h,kv_lora)
     o = jnp.einsum("bshl,lhv->bshv", o_lat, wuv.astype(o_lat.dtype))        # (b,s,h,vd)
@@ -456,6 +485,30 @@ def apply_mla_decode(p, x, cfg, *, cache, cache_len):
     valid = jnp.broadcast_to((jnp.arange(S)[None, :] <= cache_len), (b, S))
     out = _mla_absorbed_attend(p, x, cfg, q_nope, q_rope, cckv, ckr, valid)
     return out, {"ckv": cckv, "krope": ckr}
+
+
+def apply_mla_prefill_paged(p, x, cfg, *, cache, block_table, start):
+    """Chunked prefill from a logical offset against paged latent
+    pools — the MLA twin of :func:`apply_gqa_prefill_paged`. The
+    chunk's compressed latent/rope-key is scattered into the sequence's
+    pages, then the absorbed attend runs over the gathered view under a
+    per-query causal mask at absolute positions (cached prefix latents
+    are already roped, so nothing is recomputed for shared pages)."""
+    from repro.serving.paged_cache import paged_gather, paged_write_slice
+
+    b, c, _ = x.shape
+    positions = jnp.broadcast_to(start + jnp.arange(c, dtype=jnp.int32)[None], (b, c))
+    q_nope, q_rope = _mla_q(p, x, cfg)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    ckv, krope = _mla_ckv(p, x, cfg, positions)
+    pckv = paged_write_slice(cache["ckv"], block_table[0], start, ckv[0])
+    pkr = paged_write_slice(cache["krope"], block_table[0], start, krope[0])
+    cckv = paged_gather(pckv, block_table)
+    ckr = paged_gather(pkr, block_table)
+    S = cckv.shape[1]
+    valid = jnp.arange(S)[None, None, :] <= positions[:, :, None]      # (b, c, S)
+    out = _mla_absorbed_attend(p, x, cfg, q_nope, q_rope, cckv, ckr, valid)
+    return out, {"ckv": pckv, "krope": pkr}
 
 
 def apply_mla_decode_paged(p, x, cfg, *, cache, block_table, seq_lens):

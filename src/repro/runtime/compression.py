@@ -41,17 +41,32 @@ def compressed_psum(grads: Any, axis_name: str, ef: ErrorFeedbackState
                     ) -> Tuple[Any, ErrorFeedbackState]:
     """int8 all-reduce with error feedback, for use inside shard_map
     over the cross-pod DP axis. The quantization error is fed back into
-    the next step's gradients, preserving convergence (EF-SGD)."""
+    the next step's gradients, preserving convergence (EF-SGD).
+
+    Each shard's natural int8 scale is its own max, so payloads from
+    different shards live on different scales. Summing raw int8
+    payloads and multiplying by the *averaged* scale (the old math
+    here) is biased whenever shard scales differ: a shard with tiny
+    gradients has its contribution inflated by a neighbour's large
+    scale and vice versa, with error unbounded in the scale ratio.
+    Instead, all shards agree on the max scale first (a scalar pmax —
+    negligible next to the payload), requantize to that shared scale,
+    and psum the int8 payload: the sum is then exact int arithmetic
+    under one scale, the wire still carries int8, and the per-element
+    error of the mean is bounded by shared_scale / 2 (each shard's
+    rounding error <= shared_scale/2, averaged over n). The error
+    feedback residual keys off the *shared-scale* dequantization, so
+    what the wire lost this step is exactly what re-enters next step."""
 
     def one(g, r):
         gf = g.astype(jnp.float32) + r
-        q, scale = compress_int8(gf)
-        # all-reduce the int8 payload (sum) and the scales
+        _, scale = compress_int8(gf)
+        shared = jax.lax.pmax(scale, axis_name)
+        q = jnp.clip(jnp.round(gf / shared), -127, 127).astype(jnp.int8)
         summed = jax.lax.psum(q.astype(jnp.int32), axis_name)
-        scale_sum = jax.lax.psum(scale, axis_name)  # conservative shared scale
         n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
-        out = summed.astype(jnp.float32) * (scale_sum / n) / n
-        new_r = gf - decompress_int8(q, scale)
+        out = summed.astype(jnp.float32) * shared / n
+        new_r = gf - decompress_int8(q, shared)
         return out.astype(g.dtype), new_r
 
     flat_g, td = jax.tree.flatten(grads)

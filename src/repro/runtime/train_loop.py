@@ -90,6 +90,17 @@ class TrainLoop:
                 self.restarts += 1
                 if attempt > self.cfg.max_restarts:
                     raise
+                # flush any in-flight async checkpoint write before the
+                # restart touches the checkpoint directory: a writer
+                # still running would race the restarted attempt's
+                # restore_latest/save. Writer errors are swallowed —
+                # the restart path must not die on a failed background
+                # save (the restore picks the newest *complete*
+                # checkpoint either way).
+                try:
+                    self.mgr.wait()
+                except Exception:  # noqa: BLE001 — writer error
+                    pass
                 # fall through: restart from the latest checkpoint
 
     def _apply_rank_decision(self, step: int, state, metrics=None):

@@ -7,9 +7,11 @@ here would close that cycle.
 from repro.serving.paged_cache import (
     PagedCacheConfig,
     PagePool,
+    copy_page,
     paged_append,
     paged_gather,
     paged_write_pages,
+    paged_write_slice,
     slot_read,
     slot_write,
 )
@@ -22,7 +24,11 @@ from repro.serving.quantize import (
     quantize_int8,
     quantize_tree,
 )
-from repro.serving.scheduler import ContinuousBatchingScheduler, Request
+from repro.serving.scheduler import (
+    ContinuousBatchingScheduler,
+    PrefixCache,
+    Request,
+)
 
 __all__ = [
     "quantize_int8",
@@ -34,9 +40,12 @@ __all__ = [
     "param_bytes",
     "PagedCacheConfig",
     "PagePool",
+    "PrefixCache",
+    "copy_page",
     "paged_append",
     "paged_gather",
     "paged_write_pages",
+    "paged_write_slice",
     "slot_read",
     "slot_write",
     "ContinuousBatchingScheduler",

@@ -1,39 +1,60 @@
 """Serving engine: continuous batching over jitted prefill/decode steps
-with paged caches.
+with paged caches, shared-prefix reuse, and chunked prefill.
 
 Shape discipline — the decode step compiles exactly once per engine:
 ``(max_slots, 1)`` tokens against the shared pools, with block tables
 and per-slot fill levels as data. A mixed stream of request lengths
-never retriggers decode compilation. Prefill runs one request at a time
-at its exact prompt length (jax caches one executable per distinct
-length), writes the resulting cache into that sequence's pages, and
-scatters recurrent (mamba/xlstm) state into the sequence's slot — so
-every model family in models/decode.py serves through the same engine.
+never retriggers decode compilation. Prompt processing depends on
+family:
 
-The loop each engine step: admit waiting requests into free slots
-(FIFO, under the prefill token budget) -> prefill them -> one batched
-decode step for every active slot -> record tokens, evict finished
-sequences, free their pages.
+  * attention families (dense/moe) prefill through the paged
+    chunk path — ``models/decode.py:prefill_chunk_lm_paged`` writes KV
+    straight into the sequence's pages from a logical offset, so a
+    prompt whose prefix is already cached (shared system prompt) only
+    computes its tail, and with ``chunked_prefill`` the tail is split
+    into budget-sized chunks interleaved with decode steps (a long
+    prompt no longer stalls every active slot for its full length).
+    One executable per distinct chunk length.
+  * recurrent families (hybrid mamba, xlstm) opt out of prefix sharing
+    and chunking (models/decode.py:PREFIX_SHARING_FAMILIES): their
+    prompts prefill in one shot at exact length through a temporary
+    static cache that is scattered into pages / slot state.
+
+The loop each engine step: expire deadlines -> admit waiting requests
+into free slots (FIFO, shared prefixes mapped from the index) -> run
+prefill chunks under the step budget -> one batched decode step for
+every *decoding* slot (mid-prefill slots are invisible to it) ->
+record tokens, drain finished/cancelled sequences to the caller.
 """
 from __future__ import annotations
 
 import time
-from typing import Dict, List, Optional, Sequence
+from collections import deque
+from typing import Deque, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.config.model_config import ModelConfig
-from repro.models.decode import ATTN_STATE_KEYS, recurrent_slot_axes
+from repro.models.decode import (
+    ATTN_STATE_KEYS,
+    recurrent_slot_axes,
+    supports_prefix_sharing,
+)
 from repro.models.model import (
     decode_step_paged,
     init_decode_state,
     init_paged_state,
     prefill,
+    prefill_chunk_paged,
 )
 from repro.serving.paged_cache import PagedCacheConfig, paged_write_pages, slot_write
 from repro.serving.scheduler import ContinuousBatchingScheduler, Request, SeqState
+
+# inter-token latency samples kept for percentile stats; bounded so a
+# long-lived engine under continuous traffic cannot leak host memory
+LATENCY_WINDOW = 4096
 
 
 def params_from_checkpoint(ckpt_dir: str, *, rank: Optional[int] = None,
@@ -61,16 +82,20 @@ def params_from_checkpoint(ckpt_dir: str, *, rank: Optional[int] = None,
 class ServingEngine:
     """Continuous-batching serving runtime over one model + one paged
     cache pool. Construct with live ``params`` (optionally
-    ``quantize="int8"``) or via :meth:`from_checkpoint` (optionally at
-    a different spectral rank), submit ``Request`` traces through
-    :meth:`run`, read throughput/memory from :meth:`stats`. The decode
-    step compiles once per engine — ``(max_slots, 1)`` tokens against
-    the shared pools with block tables as data — so mixed-length
-    request streams never retrigger compilation."""
+    ``quantize="int8"``, ``prefix_cache=True``, ``chunked_prefill=True``)
+    or via :meth:`from_checkpoint` (optionally at a different spectral
+    rank), submit ``Request`` traces through :meth:`run`, cancel
+    in-flight requests with :meth:`cancel`, read throughput/memory/
+    prefix-cache/latency numbers from :meth:`stats`. The decode step
+    compiles once per engine — ``(max_slots, 1)`` tokens against the
+    shared pools with block tables as data — so mixed-length request
+    streams never retrigger compilation."""
 
     def __init__(self, cfg: ModelConfig, params, pcfg: PagedCacheConfig, *,
                  prefill_token_budget: Optional[int] = None,
-                 quantize: Optional[str] = None):
+                 quantize: Optional[str] = None,
+                 prefix_cache: bool = False,
+                 chunked_prefill: bool = False):
         if cfg.family == "encdec":
             raise NotImplementedError("paged serving targets decoder-only families")
         self.cfg = cfg
@@ -85,17 +110,39 @@ class ServingEngine:
         self.weight_bytes = param_bytes(params)
         self.params = params
         self.pcfg = pcfg
+        self.prefill_token_budget = prefill_token_budget
+        # chunk size for chunked prefill: the step budget when set, else
+        # a few pages' worth — chunked_prefill=True must never silently
+        # degrade to whole-tail prefill just because no budget was given
+        self.prefill_chunk = prefill_token_budget or 4 * pcfg.page_size
+        # family policy: recurrent families silently opt out (explicit
+        # in models/decode.py:PREFIX_SHARING_FAMILIES and docs/serving.md)
+        self._offset_prefill = supports_prefix_sharing(cfg)
+        self.prefix_cache = bool(prefix_cache) and self._offset_prefill
+        self.chunked_prefill = bool(chunked_prefill) and self._offset_prefill
         self.state = init_paged_state(cfg, pcfg)
-        self.sched = ContinuousBatchingScheduler(pcfg, prefill_token_budget)
+        self.sched = ContinuousBatchingScheduler(
+            pcfg, prefill_token_budget, prefix_sharing=self.prefix_cache)
         self._next_input = np.zeros((pcfg.max_slots,), dtype=np.int32)
 
         self._decode_fn = jax.jit(
             lambda p, t, st, bt, sl: decode_step_paged(p, t, st, bt, sl, cfg),
             donate_argnums=(2,),
         )
+        self._chunk_fn = jax.jit(
+            lambda p, t, st, bt, s0: prefill_chunk_paged(p, t, st, bt, s0, cfg),
+            donate_argnums=(2,),
+        )
         self._prefill_fn = jax.jit(lambda p, t, st: prefill(p, t, cfg, st))
         self._write_pages = jax.jit(
             lambda pool, ids, v: paged_write_pages(pool, ids, jnp.squeeze(v, 1), n_stack=1),
+            donate_argnums=(0,),
+        )
+        # COW fork: pools are layer-stacked (L, P, page, *f) -> copy one
+        # physical page across every layer of every leaf
+        self._copy_page_fn = jax.jit(
+            lambda pool, src, dst: jax.tree.map(
+                lambda leaf: leaf.at[:, dst].set(leaf[:, src]), pool),
             donate_argnums=(0,),
         )
         self._scatter = {}
@@ -106,11 +153,19 @@ class ServingEngine:
                 static_argnums=(2,), donate_argnums=(0,),
             )
 
-        # stats
-        self.prefill_tokens = 0
+        # stats (bounded: counters + a fixed-width latency window)
+        self.prefill_tokens = 0          # prompt tokens actually computed
+        self.prompt_tokens = 0           # prompt tokens admitted
+        self.prefix_shared_tokens = 0    # prompt tokens served from the index
         self.decoded_tokens = 0
         self.decode_steps = 0
+        self.requests_done = 0
+        self.generated_total = 0
+        self.cancelled = 0
+        self.timed_out = 0
         self.wall_s = 0.0
+        self.step_times: Deque[float] = deque(maxlen=LATENCY_WINDOW)
+        self.last_statuses: Dict[int, str] = {}
 
     # -------------------------------------------------------------- load --
     @classmethod
@@ -138,26 +193,101 @@ class ServingEngine:
         """Serve a trace to completion. ``Request.arrival`` staggers
         enqueueing in engine-step time (a request is invisible to the
         scheduler before its arrival step). Returns rid -> generated
-        token ids (first token from prefill, rest from decode)."""
+        token ids (first token from prefill, rest from decode); results
+        are drained from the scheduler every step, so neither side
+        accumulates state across requests. Per-rid outcomes
+        (finished/cancelled/timeout) land in :attr:`last_statuses`."""
         pending: List[Request] = sorted(requests, key=lambda r: r.arrival)
-        first_new = len(self.sched.finished)            # segment repeated run()s
+        results: Dict[int, np.ndarray] = {}
+        self.last_statuses = {}
         t0 = time.time()
         clock = 0
+        last_decode_t = None
         while pending or self.sched.has_work:
             while pending and pending[0].arrival <= clock:
                 self.sched.submit(pending.pop(0))
+            self.sched.expire_deadlines(clock)
             for seq in self.sched.admit():
-                self._prefill_into(seq)
-            if self.sched.active:
+                self.prompt_tokens += seq.request.prompt_len
+                self.prefix_shared_tokens += seq.shared_len
+            self._prefill_step()
+            if any(s.status == "decoding" for s in self.sched.active.values()):
                 self._decode_once()
+                # inter-token latency = gap between consecutive decode
+                # completions, so prefill stalls *between* decode steps
+                # (what chunked prefill exists to bound) count against
+                # the tail; the first decode of a run is TTFT, not ITL
+                now = time.time()
+                if last_decode_t is not None:
+                    self.step_times.append(now - last_decode_t)
+                last_decode_t = now
+            self._drain(results)
             clock += 1
         jax.block_until_ready(jax.tree.leaves(self.state)[0])
         self.wall_s += time.time() - t0
-        return {s.request.rid: np.asarray(s.generated, dtype=np.int32)
-                for s in self.sched.finished[first_new:]}
+        return results
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel a request mid-flight (queue or active). Partial
+        results surface on the next drain with status ``cancelled``."""
+        return self.sched.cancel(rid)
+
+    def _drain(self, results: Dict[int, np.ndarray]) -> None:
+        for seq in self.sched.drain_finished():
+            rid = seq.request.rid
+            results[rid] = np.asarray(seq.generated, dtype=np.int32)
+            self.last_statuses[rid] = seq.status
+            self.requests_done += 1
+            self.generated_total += len(seq.generated)
+            if seq.status == "cancelled":
+                self.cancelled += 1
+            elif seq.status == "timeout":
+                self.timed_out += 1
 
     # ------------------------------------------------------------- steps --
-    def _prefill_into(self, seq: SeqState) -> None:
+    def _prefill_step(self) -> None:
+        """Advance every prefilling sequence, FIFO, under the per-step
+        chunk budget (when chunking; otherwise each tail runs whole).
+        The first chunk of a step always runs — progress guarantee."""
+        budget = self.prefill_chunk if self.chunked_prefill else None
+        spent = 0
+        for seq in self.sched.prefilling():
+            if not self._offset_prefill:
+                self._prefill_full(seq)
+                continue
+            plen = seq.request.prompt_len
+            logits = None
+            while seq.prefill_pos < plen:
+                remaining = plen - seq.prefill_pos
+                c = remaining if budget is None else min(remaining, max(1, budget - spent))
+                if budget is not None and spent > 0 and spent + c > budget:
+                    return                       # budget exhausted; resume next step
+                logits = self._run_chunk(seq, c)
+                spent += c
+            self._complete_prefill(seq, logits)
+            if budget is not None and spent >= budget:
+                return
+
+    def _run_chunk(self, seq: SeqState, c: int):
+        req = seq.request
+        toks = jnp.asarray(req.prompt[seq.prefill_pos:seq.prefill_pos + c],
+                           dtype=jnp.int32)[None]
+        bt = jnp.asarray(self.sched.block_table[seq.slot:seq.slot + 1])
+        logits, self.state = self._chunk_fn(self.params, toks, self.state, bt,
+                                            jnp.int32(seq.prefill_pos))
+        seq.prefill_pos += c
+        self.prefill_tokens += c
+        return logits
+
+    def _complete_prefill(self, seq: SeqState, logits) -> None:
+        tok = int(np.asarray(jnp.argmax(logits[0, -1])))
+        self._next_input[seq.slot] = tok
+        self.sched.finish_prefill(seq.slot)
+        self.sched.on_prefill_token(seq.slot, tok)
+
+    def _prefill_full(self, seq: SeqState) -> None:
+        """Recurrent-family prompt path: full-length prefill through a
+        temporary static cache, scattered into pages / slot state."""
         req = seq.request
         tokens = jnp.asarray(req.prompt, dtype=jnp.int32)[None]
         tmp = init_decode_state(self.cfg, 1, req.prompt_len)
@@ -170,25 +300,33 @@ class ServingEngine:
                     self.state[key], filled[key])
         for key, scatter in self._scatter.items():
             self.state[key] = scatter(self.state[key], filled[key], seq.slot)
-        tok = int(np.asarray(jnp.argmax(logits[0, -1])))
-        self._next_input[seq.slot] = tok
+        seq.prefill_pos = req.prompt_len
         self.prefill_tokens += req.prompt_len
-        self.sched.on_prefill_token(seq.slot, tok)
+        self._complete_prefill(seq, logits)
 
     def _decode_once(self) -> None:
-        self.sched.ensure_append_capacity()
-        bt = jnp.asarray(self.sched.block_table)
-        sl = jnp.asarray(self.sched.seq_lens)
+        for _, src, dst in self.sched.ensure_append_capacity():
+            # copy-on-write fork: duplicate the shared page before the
+            # batched append may write it (unreachable under full-page
+            # sharing, but the semantics are complete and fuzz-tested)
+            for key in ATTN_STATE_KEYS:
+                if key in self.state:
+                    self.state[key] = self._copy_page_fn(
+                        self.state[key], jnp.int32(src), jnp.int32(dst))
+        bt_np, sl_np = self.sched.decode_view()
+        bt = jnp.asarray(bt_np)
+        sl = jnp.asarray(sl_np)
         toks = jnp.asarray(self._next_input)[:, None]
         logits, self.state = self._decode_fn(self.params, toks, self.state, bt, sl)
         nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1)).astype(np.int32)
-        active_slots = list(self.sched.active)
-        for slot in active_slots:
+        decoding = [s for s, seq in self.sched.active.items()
+                    if seq.status == "decoding"]
+        for slot in decoding:
             tok = int(nxt[slot])
             self._next_input[slot] = tok
             self.sched.on_token(slot, tok)
         self.decode_steps += 1
-        self.decoded_tokens += len(active_slots)
+        self.decoded_tokens += len(decoding)
 
     # ------------------------------------------------------------- stats --
     def attn_cache_bytes(self) -> int:
@@ -201,16 +339,36 @@ class ServingEngine:
                              for leaf in jax.tree.leaves(self.state[key]))
         return total
 
+    def latency_percentiles(self) -> Dict[str, float]:
+        """p50/p99 inter-token latency (seconds) over the sliding window
+        of gaps between consecutive decode-step completions — prefill
+        work scheduled between decode steps shows up in the tail."""
+        if not self.step_times:
+            return {"itl_p50_s": 0.0, "itl_p99_s": 0.0}
+        arr = np.asarray(self.step_times)
+        return {"itl_p50_s": float(np.percentile(arr, 50)),
+                "itl_p99_s": float(np.percentile(arr, 99))}
+
     def stats(self) -> Dict[str, float]:
-        gen = sum(len(s.generated) for s in self.sched.finished)
-        return {
-            "requests": float(len(self.sched.finished)),
+        gen = self.generated_total
+        out = {
+            "requests": float(self.requests_done),
+            "cancelled": float(self.cancelled),
+            "timed_out": float(self.timed_out),
             "prefill_tokens": float(self.prefill_tokens),
+            "prompt_tokens": float(self.prompt_tokens),
+            "prefix_shared_tokens": float(self.prefix_shared_tokens),
             "generated_tokens": float(gen),
             "decode_steps": float(self.decode_steps),
+            "cow_forks": float(self.sched.cow_forks),
             "wall_s": self.wall_s,
             "tokens_per_s": (self.prefill_tokens + gen) / self.wall_s if self.wall_s else 0.0,
             "attn_cache_bytes": float(self.attn_cache_bytes()),
             "weight_bytes": float(self.weight_bytes),
             "weight_bytes_fp": float(self.weight_bytes_fp),
         }
+        out.update(self.latency_percentiles())
+        if self.sched.prefix_cache is not None:
+            out.update({k: float(v)
+                        for k, v in self.sched.prefix_cache.stats().items()})
+        return out

@@ -24,13 +24,18 @@ Recurrent (mamba / xlstm) decode state is a fixed-size single "page" per
 sequence, so it pages trivially: ``slot_read`` / ``slot_write`` index the
 slot axis of the stacked state arrays.
 
-Host side: ``PagePool`` is the free-list allocator the continuous-
-batching scheduler draws from.
+Host side: ``PagePool`` is the refcounted free-list allocator the
+continuous-batching scheduler draws from. Shared-prefix caching maps
+one physical page into several sequences' block tables: ``share``
+bumps the refcount, ``release`` drops it (the page returns to the free
+list at zero), and a write into a page with refcount > 1 must first
+fork a private copy (``copy_page`` is the device half of that
+copy-on-write step).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence
+from typing import Dict, List, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -90,6 +95,29 @@ def paged_append(pool: jax.Array, block_table: jax.Array, seq_lens: jax.Array,
     return pool.at[phys, seq_lens % page].set(vals.astype(pool.dtype))
 
 
+def paged_write_slice(pool: jax.Array, block_table: jax.Array, start: jax.Array,
+                      vals: jax.Array) -> jax.Array:
+    """Write a contiguous chunk of tokens at a logical offset.
+
+    pool (P, page, *f); block_table (n,) — one sequence's page ids;
+    start — scalar int32 logical position of ``vals[0]``; vals (c, *f).
+    Token i lands at pool[bt[(start+i) // page], (start+i) % page] — the
+    chunked-prefill write path (prefill from an offset against pages
+    already holding the shared prefix). ``start`` is data, so one
+    executable serves every offset at a given chunk length.
+    """
+    page = pool.shape[1]
+    pos = start + jnp.arange(vals.shape[0], dtype=jnp.int32)
+    phys = jnp.take(block_table, pos // page)
+    return pool.at[phys, pos % page].set(vals.astype(pool.dtype))
+
+
+def copy_page(pool: jax.Array, src: jax.Array, dst: jax.Array) -> jax.Array:
+    """pool[dst] = pool[src] — the device half of a copy-on-write fork.
+    src/dst are scalar int32 page ids (data, not static)."""
+    return pool.at[dst].set(pool[src])
+
+
 def paged_write_pages(pool: jax.Array, page_ids: jax.Array, vals: jax.Array,
                       *, n_stack: int = 0) -> jax.Array:
     """Scatter a contiguous per-sequence cache into its pages.
@@ -140,13 +168,21 @@ def slot_read(state_tree, slot_axes, slot: int):
 # ======================================================================
 
 class PagePool:
-    """Free-list page allocator. Pages are plain ints in
-    [0, num_pages); the null page is never handed out."""
+    """Refcounted free-list page allocator. Pages are plain ints in
+    [0, num_pages); the null page is never handed out.
+
+    ``alloc`` hands out pages at refcount 1; ``share`` maps an
+    already-allocated page into another holder (refcount + 1);
+    ``release``/``free`` drop one reference and return the page to the
+    free list only when the last holder lets go. A holder about to
+    *write* a shared page must fork it first (allocate a fresh page,
+    ``copy_page`` on device, release the shared one) — the scheduler's
+    copy-on-write step."""
 
     def __init__(self, num_pages: int):
         self.num_pages = num_pages
         self._free: List[int] = list(range(num_pages - 1, -1, -1))
-        self._allocated: set[int] = set()
+        self._refs: Dict[int, int] = {}
 
     @property
     def free_count(self) -> int:
@@ -154,18 +190,41 @@ class PagePool:
 
     @property
     def allocated_count(self) -> int:
-        return len(self._allocated)
+        return len(self._refs)
+
+    def refcount(self, page: int) -> int:
+        return self._refs.get(page, 0)
+
+    def is_shared(self, page: int) -> bool:
+        return self._refs.get(page, 0) > 1
 
     def alloc(self, n: int) -> List[int]:
         if n > len(self._free):
             raise RuntimeError(f"page pool exhausted: want {n}, have {len(self._free)}")
         out = [self._free.pop() for _ in range(n)]
-        self._allocated.update(out)
+        for p in out:
+            self._refs[p] = 1
         return out
 
-    def free(self, page_ids: Sequence[int]) -> None:
+    def share(self, page_ids: Sequence[int]) -> None:
+        """Add one reference to each (already-allocated) page."""
         for p in page_ids:
-            if p not in self._allocated:
+            if p not in self._refs:
+                raise RuntimeError(f"share of unallocated page {p}")
+        for p in page_ids:
+            self._refs[p] += 1
+
+    def release(self, page_ids: Sequence[int]) -> None:
+        """Drop one reference per page; free at refcount zero. Releasing
+        a page nobody holds raises (the double-free guard)."""
+        for p in page_ids:
+            if p not in self._refs:
                 raise RuntimeError(f"double free of page {p}")
-            self._allocated.remove(p)
-            self._free.append(p)
+        for p in page_ids:
+            self._refs[p] -= 1
+            if self._refs[p] == 0:
+                del self._refs[p]
+                self._free.append(p)
+
+    # pre-refcount name, kept for callers that never share
+    free = release

@@ -1,5 +1,6 @@
 """Continuous-batching scheduler: a FIFO request queue feeding a fixed
-set of decode slots, with page-pool accounting.
+set of decode slots, with refcounted page-pool accounting, an optional
+shared-prefix index, chunked prefill, and cancellation/deadlines.
 
 Policy (host-side, cheap — the device only ever sees static shapes):
 
@@ -8,18 +9,40 @@ Policy (host-side, cheap — the device only ever sees static shapes):
     and the per-step prefill token budget allows it. Later requests
     never jump the head (no starvation under a full queue).
   * **reservation** — pages for ``prompt + max_new_tokens`` are reserved
-    at admission but allocated lazily as the sequence crosses page
-    boundaries, so a running sequence can never hit pool OOM mid-flight
-    and reserved-but-unused pages show up in the accounting.
-  * **eviction** — finished sequences (max_new reached or EOS) free
-    their slot, pages, and reservation immediately; the freed capacity
-    admits the next waiting request on the same engine step.
+    at admission (in full, even when a prefix is shared — the
+    conservative bound under which an admitted sequence can never hit
+    pool OOM mid-flight) but allocated lazily as the sequence crosses
+    page boundaries. Pages held only by the prefix index are evictable
+    on demand, so reservations stay honourable with a warm cache.
+  * **prefix sharing** — at admission the prompt's page-aligned chunks
+    are looked up in the :class:`PrefixCache`; matched pages are mapped
+    into the block table via ``PagePool.share`` and only the tail is
+    prefilled. At least one tail token always remains (prefill must
+    produce next-token logits). A completed prefill inserts its full
+    prompt pages back into the index.
+  * **chunked prefill** — a sequence is admitted in ``prefilling``
+    status with ``prefill_pos`` tracking cached tokens; the engine
+    advances it in budget-sized chunks interleaved with decode steps
+    and calls :meth:`finish_prefill` when the prompt is fully cached.
+    Prefilling slots are invisible to the decode step
+    (:meth:`decode_view` nulls their block-table rows).
+  * **copy-on-write** — :meth:`ensure_append_capacity` forks any page a
+    decode append would write while its refcount is > 1 (fresh page +
+    device copy, reported to the engine). Under the full-page-sharing
+    policy appends never actually target shared pages — the fork path
+    is the safety net that makes that a checked invariant rather than
+    an assumption.
+  * **eviction** — finished sequences (max_new reached, EOS, a
+    ``cancel`` call, or a blown deadline) free their slot, release
+    their pages, and land in the per-step drain list — the caller
+    collects them via :meth:`drain_finished` every step, so nothing
+    accumulates in the scheduler under continuous traffic.
 """
 from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Deque, Dict, List, Optional
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -32,13 +55,17 @@ class Request:
     shape ``(prompt_len,)``; generation runs until ``max_new_tokens``
     (or ``eos_id``, when set). ``arrival`` is the engine step at which
     the request becomes visible to the scheduler — traces with
-    staggered arrivals exercise mid-flight slot joins. ``rid`` keys the
+    staggered arrivals exercise mid-flight slot joins. ``deadline``
+    (engine steps after arrival) bounds total service time: a request
+    still unfinished when it expires is evicted with status
+    ``"timeout"`` and whatever tokens it produced. ``rid`` keys the
     result dict ``ServingEngine.run`` returns."""
     rid: int
     prompt: np.ndarray                 # (prompt_len,) int32 token ids
     max_new_tokens: int
     arrival: int = 0                   # engine step at which it enters the queue
     eos_id: Optional[int] = None
+    deadline: Optional[int] = None     # max engine steps after arrival
 
     @property
     def prompt_len(self) -> int:
@@ -54,8 +81,11 @@ class SeqState:
     request: Request
     slot: int
     seq_len: int                       # tokens whose KV/state is cached
-    pages: List[int]                   # allocated physical pages, logical order
+    pages: List[int]                   # mapped physical pages, logical order
     reserved_pages: int                # worst-case commitment at admission
+    shared_len: int = 0                # prefix tokens mapped from the cache
+    prefill_pos: int = 0               # prompt tokens cached so far
+    status: str = "prefilling"         # prefilling|decoding|finished|cancelled|timeout
     generated: List[int] = dataclasses.field(default_factory=list)
 
     @property
@@ -66,15 +96,139 @@ class SeqState:
         return eos is not None and len(self.generated) > 0 and self.generated[-1] == eos
 
 
-class ContinuousBatchingScheduler:
-    """Owns slots, block tables, and the page pool. The engine calls:
-    ``submit`` -> [``admit`` -> prefill]* -> ``ensure_append_capacity``
-    -> decode -> ``on_token`` (evicts finished) — once per step."""
+@dataclasses.dataclass
+class _PrefixEntry:
+    page: int
+    key: int
+    parent: Optional[int]              # parent chain key (None at the root)
+    tick: int
+    children: set = dataclasses.field(default_factory=set)
 
-    def __init__(self, pcfg: PagedCacheConfig, prefill_token_budget: Optional[int] = None):
+
+class PrefixCache:
+    """Index of page-aligned prompt chunks -> physical pages.
+
+    Keys are a running hash chain over page-sized token chunks, so a
+    lookup walks the chain from the root and stops at the first miss —
+    only a *prefix* of full pages is ever matched. Entries hold one
+    pool reference each (the cache keeps hot prefixes alive after their
+    sequences finish); :meth:`evict` drops LRU leaf entries whose page
+    nobody else references, so eviction never orphans a reachable chain
+    or steals a page out from under a live sequence."""
+
+    def __init__(self, pool: PagePool, page_size: int):
+        self.pool = pool
+        self.page_size = page_size
+        self._entries: Dict[int, _PrefixEntry] = {}
+        self._tick = 0
+        self.hit_pages = 0
+        self.lookup_pages = 0
+        self.inserted_pages = 0
+        self.evicted_pages = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @property
+    def pages(self) -> List[int]:
+        return [e.page for e in self._entries.values()]
+
+    def _chain_keys(self, prompt: np.ndarray, n_pages: int) -> List[int]:
+        ps = self.page_size
+        keys, h = [], 0
+        chunks = np.asarray(prompt[: n_pages * ps], dtype=np.int32)
+        for i in range(n_pages):
+            h = hash((h, chunks[i * ps:(i + 1) * ps].tobytes()))
+            keys.append(h)
+        return keys
+
+    def lookup(self, prompt: np.ndarray) -> List[int]:
+        """Longest chain of cached pages covering a *proper* prefix of
+        the prompt (at least one tail token is always left to prefill).
+        Returns page ids in logical order; the caller maps them with
+        ``pool.share``."""
+        n = (len(prompt) - 1) // self.page_size
+        self._tick += 1
+        self.lookup_pages += n
+        pages: List[int] = []
+        for key in self._chain_keys(prompt, n):
+            e = self._entries.get(key)
+            if e is None:
+                break
+            e.tick = self._tick
+            pages.append(e.page)
+        self.hit_pages += len(pages)
+        return pages
+
+    def insert(self, prompt: np.ndarray, pages: Sequence[int]) -> None:
+        """Register every *full* prompt page under its chain key. Pages
+        already present (another sequence inserted the same chunk
+        first) are skipped; new entries take a pool reference."""
+        n = min(len(prompt) // self.page_size, len(pages))
+        self._tick += 1
+        parent: Optional[int] = None
+        for i, key in enumerate(self._chain_keys(prompt, n)):
+            e = self._entries.get(key)
+            if e is None:
+                self.pool.share([pages[i]])
+                e = _PrefixEntry(page=int(pages[i]), key=key, parent=parent,
+                                 tick=self._tick)
+                self._entries[key] = e
+                if parent is not None:
+                    self._entries[parent].children.add(key)
+                self.inserted_pages += 1
+            else:
+                e.tick = self._tick
+            parent = key
+
+    def evictable_count(self) -> int:
+        return sum(1 for e in self._entries.values()
+                   if not e.children and self.pool.refcount(e.page) == 1)
+
+    def evict(self, n: int) -> int:
+        """Drop up to ``n`` LRU leaf entries whose page only the cache
+        holds (releasing frees them). Evicting a leaf may expose its
+        parent as the next candidate. Returns pages actually freed."""
+        freed = 0
+        while freed < n:
+            candidates = [e for e in self._entries.values()
+                          if not e.children and self.pool.refcount(e.page) == 1]
+            if not candidates:
+                break
+            victim = min(candidates, key=lambda e: e.tick)
+            del self._entries[victim.key]
+            if victim.parent is not None and victim.parent in self._entries:
+                self._entries[victim.parent].children.discard(victim.key)
+            self.pool.release([victim.page])
+            self.evicted_pages += 1
+            freed += 1
+        return freed
+
+    def stats(self) -> Dict[str, int]:
+        return {
+            "prefix_entries": len(self._entries),
+            "prefix_lookup_pages": self.lookup_pages,
+            "prefix_hit_pages": self.hit_pages,
+            "prefix_inserted_pages": self.inserted_pages,
+            "prefix_evicted_pages": self.evicted_pages,
+        }
+
+
+class ContinuousBatchingScheduler:
+    """Owns slots, block tables, the page pool, and the prefix index.
+    The engine calls, once per step: ``submit`` -> ``expire_deadlines``
+    -> [``admit`` -> chunked prefill -> ``finish_prefill``]* ->
+    ``ensure_append_capacity`` (returns COW forks) -> decode via
+    ``decode_view`` -> ``on_token`` -> ``drain_finished``."""
+
+    def __init__(self, pcfg: PagedCacheConfig,
+                 prefill_token_budget: Optional[int] = None,
+                 prefix_sharing: bool = False):
         self.pcfg = pcfg
         self.pool = PagePool(pcfg.num_pages)
         self.prefill_token_budget = prefill_token_budget
+        self.prefix_cache = (PrefixCache(self.pool, pcfg.page_size)
+                             if prefix_sharing else None)
         self.waiting: Deque[Request] = deque()
         self.active: Dict[int, SeqState] = {}          # slot -> seq
         self._free_slots: List[int] = list(range(pcfg.max_slots - 1, -1, -1))
@@ -82,7 +236,9 @@ class ContinuousBatchingScheduler:
         self.block_table = np.full((pcfg.max_slots, pcfg.max_pages_per_seq),
                                    pcfg.null_page, dtype=np.int32)
         self.seq_lens = np.zeros((pcfg.max_slots,), dtype=np.int32)
-        self.finished: List[SeqState] = []
+        self._finished_step: List[SeqState] = []       # drained every step
+        self.finished_count = 0
+        self.cow_forks = 0
 
     # ------------------------------------------------------------- api --
     def submit(self, req: Request) -> None:
@@ -100,9 +256,19 @@ class ContinuousBatchingScheduler:
     def has_work(self) -> bool:
         return bool(self.waiting or self.active)
 
+    def _alloc(self, n: int) -> List[int]:
+        """Pool alloc that reclaims prefix-cache-only pages on demand —
+        reservations count cache-held pages as reclaimable."""
+        short = n - self.pool.free_count
+        if short > 0 and self.prefix_cache is not None:
+            self.prefix_cache.evict(short)
+        return self.pool.alloc(n)
+
     def admit(self) -> List[SeqState]:
         """Admit from the queue head while slot/pages/budget allow.
-        Returns newly admitted sequences (engine prefills them)."""
+        Returns newly admitted sequences in ``prefilling`` status, with
+        any cached prefix already mapped (the engine prefills the tail
+        from ``prefill_pos``)."""
         admitted: List[SeqState] = []
         budget = self.prefill_token_budget
         spent = 0
@@ -111,35 +277,92 @@ class ContinuousBatchingScheduler:
             need = self.pcfg.pages_for(req.max_total_len)
             if self._reserved_total + need > self.pcfg.num_pages:
                 break                                   # head waits; no queue-jumping
-            if budget is not None and spent and spent + req.prompt_len > budget:
+            shared = (self.prefix_cache.lookup(req.prompt)
+                      if self.prefix_cache is not None else [])
+            shared_len = len(shared) * self.pcfg.page_size
+            tail = req.prompt_len - shared_len
+            if budget is not None and spent and spent + tail > budget:
+                if self.prefix_cache is not None:
+                    # the head wasn't admitted — it will be looked up
+                    # again next step, so roll this probe back out of
+                    # the hit-rate stats (the LRU touch is harmless)
+                    n = (req.prompt_len - 1) // self.pcfg.page_size
+                    self.prefix_cache.lookup_pages -= n
+                    self.prefix_cache.hit_pages -= len(shared)
                 break                                   # budget bounds each step, but
                                                         # never blocks the first admit
                                                         # (progress guarantee)
             self.waiting.popleft()
             slot = self._free_slots.pop()
-            pages = self.pool.alloc(self.pcfg.pages_for(req.prompt_len))
+            self.pool.share(shared)
+            fresh = self._alloc(self.pcfg.pages_for(req.prompt_len) - len(shared))
+            pages = list(shared) + fresh
             self._reserved_total += need
-            seq = SeqState(request=req, slot=slot, seq_len=req.prompt_len,
-                           pages=pages, reserved_pages=need)
+            seq = SeqState(request=req, slot=slot, seq_len=0,
+                           pages=pages, reserved_pages=need,
+                           shared_len=shared_len, prefill_pos=shared_len)
             self.active[slot] = seq
             self.block_table[slot, :len(pages)] = pages
-            self.seq_lens[slot] = req.prompt_len
-            spent += req.prompt_len
+            self.seq_lens[slot] = 0                     # decode-invisible until
+            spent += tail                               # finish_prefill
             admitted.append(seq)
         return admitted
 
-    def ensure_append_capacity(self) -> None:
-        """Before a decode step: every active slot must own the page its
-        next token lands in. Allocation cannot fail — the pages were
-        reserved at admission."""
+    def prefilling(self) -> List[SeqState]:
+        """Active sequences with prompt tokens still to cache, in slot
+        admission order (FIFO over the step)."""
+        return [s for s in self.active.values() if s.status == "prefilling"]
+
+    def finish_prefill(self, slot: int) -> None:
+        """Prompt fully cached: the sequence joins the decode batch and
+        its full prompt pages enter the prefix index."""
+        seq = self.active[slot]
+        assert seq.prefill_pos == seq.request.prompt_len
+        seq.status = "decoding"
+        seq.seq_len = seq.request.prompt_len
+        self.seq_lens[slot] = seq.seq_len
+        if self.prefix_cache is not None:
+            self.prefix_cache.insert(seq.request.prompt, seq.pages)
+
+    def decode_view(self) -> Tuple[np.ndarray, np.ndarray]:
+        """(block_table, seq_lens) as the decode step may see them:
+        slots still prefilling are nulled so the batched append can't
+        write into their half-filled pages."""
+        bt = self.block_table.copy()
+        sl = self.seq_lens.copy()
         for seq in self.active.values():
+            if seq.status != "decoding":
+                bt[seq.slot, :] = self.pcfg.null_page
+                sl[seq.slot] = 0
+        return bt, sl
+
+    def ensure_append_capacity(self) -> List[Tuple[int, int, int]]:
+        """Before a decode step: every decoding slot must own — with
+        refcount 1 — the page its next token lands in. Boundary pages
+        are allocated from the reservation; a shared target page is
+        forked copy-on-write. Returns ``(slot, src_page, dst_page)``
+        forks for the engine to copy device-side (empty under the
+        full-page sharing policy — see class docstring)."""
+        forks: List[Tuple[int, int, int]] = []
+        for seq in self.active.values():
+            if seq.status != "decoding":
+                continue
             page_idx = seq.seq_len // self.pcfg.page_size
             if page_idx >= len(seq.pages):
                 assert len(seq.pages) < seq.reserved_pages, (
                     f"seq {seq.request.rid} outgrew its reservation")
-                (page,) = self.pool.alloc(1)
+                (page,) = self._alloc(1)
                 seq.pages.append(page)
                 self.block_table[seq.slot, page_idx] = page
+            elif self.pool.is_shared(seq.pages[page_idx]):
+                src = seq.pages[page_idx]
+                (dst,) = self._alloc(1)
+                self.pool.release([src])
+                seq.pages[page_idx] = dst
+                self.block_table[seq.slot, page_idx] = dst
+                self.cow_forks += 1
+                forks.append((seq.slot, src, dst))
+        return forks
 
     def on_token(self, slot: int, token: int) -> Optional[SeqState]:
         """Record one generated token for a slot (its KV was appended by
@@ -150,7 +373,7 @@ class ContinuousBatchingScheduler:
         seq.seq_len += 1
         self.seq_lens[slot] = seq.seq_len
         if seq.finished:
-            self._evict(seq)
+            self._evict(seq, "finished")
             return seq
         return None
 
@@ -160,32 +383,96 @@ class ContinuousBatchingScheduler:
         seq = self.active[slot]
         seq.generated.append(int(token))
         if seq.finished:                                 # max_new_tokens == 1
-            self._evict(seq)
+            self._evict(seq, "finished")
             return seq
         return None
 
+    # -------------------------------------------- cancel / deadlines --
+    def cancel(self, rid: int, status: str = "cancelled") -> bool:
+        """Cancel a request wherever it is: drop it from the queue, or
+        evict its sequence with partial results. The cancelled request
+        still surfaces through :meth:`drain_finished` (with ``status``
+        set) so callers see every submitted rid exactly once."""
+        for req in self.waiting:
+            if req.rid == rid:
+                self.waiting.remove(req)
+                seq = SeqState(request=req, slot=-1, seq_len=0, pages=[],
+                               reserved_pages=0, status=status)
+                self._finished_step.append(seq)
+                self.finished_count += 1
+                return True
+        for seq in list(self.active.values()):
+            if seq.request.rid == rid:
+                self._evict(seq, status)
+                return True
+        return False
+
+    def expire_deadlines(self, clock: int) -> int:
+        """Evict every request whose deadline (engine steps since
+        arrival) has passed — waiting or active. Called once per engine
+        step with the current clock. Returns the number expired; the
+        sequences themselves surface through :meth:`drain_finished`
+        with status ``"timeout"``."""
+        expired = [r.rid for r in list(self.waiting)
+                   if r.deadline is not None and clock - r.arrival >= r.deadline]
+        expired += [s.request.rid for s in list(self.active.values())
+                    if s.request.deadline is not None
+                    and clock - s.request.arrival >= s.request.deadline]
+        for rid in expired:
+            self.cancel(rid, status="timeout")
+        return len(expired)
+
+    def drain_finished(self) -> List[SeqState]:
+        """Hand completed/cancelled sequences to the caller and forget
+        them — the per-step drain that keeps scheduler memory bounded
+        under continuous traffic."""
+        out, self._finished_step = self._finished_step, []
+        return out
+
     # -------------------------------------------------------- internal --
-    def _evict(self, seq: SeqState) -> None:
+    def _evict(self, seq: SeqState, status: str) -> None:
         del self.active[seq.slot]
-        self.pool.free(seq.pages)
+        self.pool.release(seq.pages)
         self._reserved_total -= seq.reserved_pages
         self.block_table[seq.slot, :] = self.pcfg.null_page
         self.seq_lens[seq.slot] = 0
         self._free_slots.append(seq.slot)
-        self.finished.append(seq)
+        seq.status = status
+        self._finished_step.append(seq)
+        self.finished_count += 1
 
     # ------------------------------------------------------ invariants --
     def check_invariants(self) -> None:
         """Cheap structural invariants, asserted by tests after every
-        step: slots partition exactly, pages never leak, reservations
-        bound allocations."""
+        step: slots partition exactly, refcounts account for every
+        holder, pages never leak, reservations stay honourable."""
         assert len(self.active) + len(self._free_slots) == self.pcfg.max_slots
         assert set(self.active) | set(self._free_slots) == set(range(self.pcfg.max_slots))
-        held = [p for s in self.active.values() for p in s.pages]
-        assert len(held) == len(set(held)), "page double-booked"
-        assert len(held) == self.pool.allocated_count, "page leak"
-        assert self.pool.allocated_count <= self._reserved_total <= self.pcfg.num_pages
+        holders: Dict[int, int] = {}
+        for s in self.active.values():
+            for p in s.pages:
+                holders[p] = holders.get(p, 0) + 1
+        cache_pages = set(self.prefix_cache.pages) if self.prefix_cache else set()
+        for p in cache_pages:
+            holders[p] = holders.get(p, 0) + 1
+        # every reference accounted for: refcount == seq holders + index
+        for p, n in holders.items():
+            assert self.pool.refcount(p) == n, \
+                f"page {p}: refcount {self.pool.refcount(p)} != holders {n}"
+        assert len(holders) == self.pool.allocated_count, "page leak"
+        assert self.pool.free_count + self.pool.allocated_count == self.pcfg.num_pages
+        assert self._reserved_total <= self.pcfg.num_pages
+        # reservations stay honourable: free + cache-evictable pages
+        # cover every sequence's remaining worst-case growth
+        remaining = sum(s.reserved_pages - len(s.pages) for s in self.active.values())
+        evictable = (self.prefix_cache.evictable_count() if self.prefix_cache else 0)
+        assert self.pool.free_count + evictable >= remaining, (
+            f"reservation not honourable: free {self.pool.free_count} + "
+            f"evictable {evictable} < remaining {remaining}")
         for seq in self.active.values():
             assert len(seq.pages) <= seq.reserved_pages
+            assert seq.reserved_pages - len(seq.pages) >= 0
             used = self.block_table[seq.slot][self.block_table[seq.slot] != self.pcfg.null_page]
             assert list(used) == seq.pages
+            if seq.status == "prefilling":
+                assert seq.shared_len <= seq.prefill_pos <= seq.request.prompt_len

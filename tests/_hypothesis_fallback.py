@@ -33,9 +33,14 @@ def _floats(min_value, max_value):
     return _Strategy(lambda rng: rng.uniform(min_value, max_value))
 
 
+def _booleans():
+    return _Strategy(lambda rng: rng.random() < 0.5)
+
+
 class st:  # noqa: N801 — mirrors `from hypothesis import strategies as st`
     integers = staticmethod(_integers)
     floats = staticmethod(_floats)
+    booleans = staticmethod(_booleans)
 
 
 def settings(max_examples: int = 10, deadline=None, **_ignored):

@@ -1,5 +1,7 @@
 """Serving-path integrity: prefill + single-token decode must agree with
-the training forward for every family (exact up to bf16 cache rounding).
+the training forward for every family (exact up to bf16 cache rounding),
+and the prefix-cached + chunked-prefill streaming engine must reproduce
+the static-cache oracle token for token.
 """
 import jax
 import jax.numpy as jnp
@@ -64,6 +66,50 @@ def test_multi_step_decode_stays_consistent(key):
     ref_next = jnp.argmax(flogits[:, plen - 1:], axis=-1)
     got_next = jnp.concatenate(toks, axis=1)
     np.testing.assert_array_equal(np.asarray(got_next), np.asarray(ref_next))
+
+
+@pytest.mark.parametrize("arch,shares", [
+    ("llama3.2-1b", True),        # GQA
+    ("deepseek-v3-671b", True),   # absorbed MLA + MoE
+    ("xlstm-1.3b", False),        # recurrent: explicit prefix-sharing opt-out
+    ("jamba-v0.1-52b", False),    # hybrid mamba: opt-out
+])
+def test_prefix_chunked_greedy_matches_static(arch, shares, key):
+    """Prefix-cached + chunked-prefill serving is token-identical to the
+    static-cache oracle. Attention families actually reuse cached
+    prefix pages; recurrent families opt out of sharing/chunking
+    (models/decode.py:PREFIX_SHARING_FAMILIES) and must still serve the
+    same flags token-identically through full-prompt prefill."""
+    from repro.launch.serve import static_greedy_reference
+    from repro.serving import PagedCacheConfig, Request
+    from repro.serving.engine import ServingEngine
+
+    cfg = get_config(arch, reduced=True).replace(dtype="float32",
+                                                 capacity_factor=8.0)
+    params = init_model(key, cfg)
+    pcfg = PagedCacheConfig(page_size=4, num_pages=32, max_slots=2,
+                            max_pages_per_seq=6)
+    rng = np.random.default_rng(0)
+    system = rng.integers(0, cfg.vocab, size=(9,)).astype(np.int32)
+    reqs = [Request(rid=i,
+                    prompt=np.concatenate(
+                        [system, rng.integers(0, cfg.vocab, size=(t,)).astype(np.int32)]),
+                    max_new_tokens=g, arrival=a)
+            for i, (t, g, a) in enumerate([(3, 4, 0), (2, 3, 2), (4, 4, 4)])]
+    engine = ServingEngine(cfg, params, pcfg, prefill_token_budget=6,
+                           prefix_cache=True, chunked_prefill=True)
+    assert engine.prefix_cache == shares and engine.chunked_prefill == shares
+    out = engine.run(reqs)
+    engine.sched.check_invariants()
+    st = engine.stats()
+    if shares:
+        assert st["prefix_shared_tokens"] > 0, "no prefix pages were reused"
+    else:
+        assert st["prefill_tokens"] == st["prompt_tokens"]   # full-prompt prefill
+    for r in reqs:
+        ref = static_greedy_reference(cfg, params, r.prompt, r.max_new_tokens,
+                                      pcfg.max_seq)
+        np.testing.assert_array_equal(out[r.rid], ref, err_msg=f"{arch} rid {r.rid}")
 
 
 def test_whisper_encdec_decode(key):

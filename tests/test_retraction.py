@@ -90,6 +90,32 @@ def test_retract_tree_touches_only_spectral(key):
     np.testing.assert_array_equal(np.asarray(out["mlp"]["s"]), np.asarray(p["s"]))
 
 
+def test_dispatcher_rejects_axis_name_for_local_methods(key):
+    """Inside shard_map a row-sharded U through qr/cayley would be QR'd
+    per-shard — silently non-orthonormal globally. The dispatcher must
+    refuse instead of corrupting the manifold."""
+    U = _noisy_stiefel(key, 32, 8, 0.01)
+    for method in ("qr", "cayley"):
+        with pytest.raises(ValueError, match="cholesky_qr2"):
+            retract(U, method, axis_name="data")
+    # cholesky_qr2 accepts it (None mapping == unsharded single shard)
+    R = retract(U, "cholesky_qr2", axis_name=None)
+    assert float(orthogonality_error(R)) < 2e-5
+
+
+def test_dispatcher_threads_method_kwargs(key):
+    """tangent_scale must reach cayley through the dispatcher (it used
+    to be unreachable — retract() dropped all method kwargs)."""
+    U = _noisy_stiefel(key, 48, 12, 0.05)
+    via_dispatch = retract(U, "cayley", tangent_scale=0.25)
+    direct = cayley_retract(U, tangent_scale=0.25)
+    np.testing.assert_allclose(np.asarray(via_dispatch), np.asarray(direct),
+                               atol=1e-7)
+    # a different scale must actually change the result
+    other = retract(U, "cayley", tangent_scale=1.0)
+    assert float(jnp.max(jnp.abs(via_dispatch - other))) > 1e-6
+
+
 def test_paper_ortho_error_bound_after_training_step(key):
     """Paper Table 2 reports ortho error < 2e-6 after a full train step.
     One AdamW-sized perturbation + retraction must restore that level."""

@@ -96,22 +96,33 @@ def test_page_pool_accounting():
 # Scheduler invariants
 # ======================================================================
 
+def _finish_prefill(sched, seq, tok=1):
+    """Simulate the engine's prefill of an admitted sequence: mark the
+    prompt fully cached, join the decode batch, record the first
+    token."""
+    seq.prefill_pos = seq.request.prompt_len
+    sched.finish_prefill(seq.slot)
+    sched.on_prefill_token(seq.slot, tok)
+
+
 def _drive(sched, max_steps=200):
     """Run the scheduler protocol with fake tokens until idle, checking
-    invariants after every step. Returns admission order (rids)."""
-    admitted = []
+    invariants after every step. Returns (admission order, drained)."""
+    admitted, drained = [], []
     steps = 0
     while sched.has_work:
         assert steps < max_steps, "scheduler wedged"
-        for seq in sched.admit():
-            admitted.append(seq.request.rid)
-            sched.on_prefill_token(seq.slot, 1)
+        admitted += [seq.request.rid for seq in sched.admit()]
+        for seq in sched.prefilling():   # covers pre-driven admissions too
+            _finish_prefill(sched, seq)
         sched.ensure_append_capacity()
-        for slot in list(sched.active):
-            sched.on_token(slot, 1)
+        for slot, seq in list(sched.active.items()):
+            if seq.status == "decoding":
+                sched.on_token(slot, 1)
         sched.check_invariants()
+        drained += sched.drain_finished()
         steps += 1
-    return admitted
+    return admitted, drained
 
 
 def test_scheduler_no_slot_or_page_leak():
@@ -122,8 +133,9 @@ def test_scheduler_no_slot_or_page_leak():
         plen = int(rng.integers(2, 9))
         sched.submit(Request(rid=i, prompt=np.zeros(plen, np.int32),
                              max_new_tokens=int(rng.integers(1, 8 - 1))))
-    _drive(sched)
-    assert len(sched.finished) == 7
+    _, drained = _drive(sched)
+    assert len(drained) == 7 and sched.finished_count == 7
+    assert not sched.drain_finished()        # results drained, not retained
     assert sched.pool.allocated_count == 0 and sched.pool.free_count == 16
     assert len(sched._free_slots) == pcfg.max_slots
     assert np.all(sched.block_table == pcfg.null_page)
@@ -145,7 +157,7 @@ def test_scheduler_fifo_no_starvation_under_full_queue():
     for i in range(3, 6):
         sched.submit(Request(rid=i, prompt=np.zeros(2, np.int32), max_new_tokens=2))
     assert sched.admit() == []                          # no pages AND no queue-jumping
-    order = _drive(sched)
+    order, _ = _drive(sched)
     # the big request is admitted before every small one queued behind it
     assert order.index(2) < order.index(3) < order.index(4) < order.index(5)
 
@@ -237,6 +249,166 @@ def test_streaming_engine_matches_static_greedy(key):
         ref = static_greedy_reference(cfg, params, r.prompt, r.max_new_tokens,
                                       pcfg.max_seq)
         np.testing.assert_array_equal(out[r.rid], ref, err_msg=f"request {r.rid}")
+
+
+# ======================================================================
+# Shared-prefix reuse, chunked prefill, cancellation, deadlines
+# ======================================================================
+
+def _shared_prefix_trace(vocab, n=4, system=17, gen=5, stride=3):
+    rng = np.random.default_rng(2)
+    sysp = rng.integers(0, vocab, size=(system,)).astype(np.int32)
+    return [Request(rid=i,
+                    prompt=np.concatenate(
+                        [sysp, rng.integers(0, vocab, size=(3 + i,)).astype(np.int32)]),
+                    max_new_tokens=gen, arrival=i * stride)
+            for i in range(n)]
+
+
+@pytest.mark.parametrize("chunked", [False, True])
+def test_prefix_cache_engine_matches_static(key, chunked):
+    """Prefix-cached (and chunked) serving is token-identical to the
+    static oracle while actually skipping shared prompt compute."""
+    cfg = get_config("llama3.2-1b", reduced=True)
+    params = init_model(key, cfg)
+    pcfg = PagedCacheConfig(page_size=8, num_pages=32, max_slots=2, max_pages_per_seq=4)
+    reqs = _shared_prefix_trace(cfg.vocab)
+    engine = ServingEngine(cfg, params, pcfg, prefill_token_budget=8,
+                           prefix_cache=True, chunked_prefill=chunked)
+    out = engine.run(reqs)
+    engine.sched.check_invariants()
+    st = engine.stats()
+    assert st["prefix_shared_tokens"] > 0, "no prefix reuse happened"
+    assert st["prefill_tokens"] + st["prefix_shared_tokens"] == st["prompt_tokens"]
+    for r in reqs:
+        ref = static_greedy_reference(cfg, params, r.prompt, r.max_new_tokens,
+                                      pcfg.max_seq)
+        np.testing.assert_array_equal(out[r.rid], ref, err_msg=f"request {r.rid}")
+    # pages still allocated are exactly the index's retained prefixes
+    assert engine.sched.pool.allocated_count == len(engine.sched.prefix_cache.pages)
+
+
+def test_prefix_cache_survives_across_runs(key):
+    """The index retains prefixes after their sequences finish: a second
+    run() over the same system prompt starts warm."""
+    cfg = get_config("llama3.2-1b", reduced=True)
+    params = init_model(key, cfg)
+    pcfg = PagedCacheConfig(page_size=8, num_pages=32, max_slots=2, max_pages_per_seq=4)
+    reqs = _shared_prefix_trace(cfg.vocab, n=2)
+    engine = ServingEngine(cfg, params, pcfg, prefix_cache=True)
+    engine.run(reqs)
+    shared_before = engine.stats()["prefix_shared_tokens"]
+    out = engine.run([Request(rid=10, prompt=reqs[0].prompt, max_new_tokens=4)])
+    assert engine.stats()["prefix_shared_tokens"] > shared_before
+    ref = static_greedy_reference(cfg, params, reqs[0].prompt, 4, pcfg.max_seq)
+    np.testing.assert_array_equal(out[10], ref)
+
+
+def test_chunked_prefill_without_budget_still_chunks(key):
+    """chunked_prefill=True with no prefill_token_budget must not
+    silently degrade to whole-tail prefill: a default chunk size kicks
+    in, the prompt spans multiple engine steps, outputs stay exact."""
+    cfg = get_config("llama3.2-1b", reduced=True)
+    params = init_model(key, cfg)
+    pcfg = PagedCacheConfig(page_size=4, num_pages=24, max_slots=2, max_pages_per_seq=6)
+    assert ServingEngine(cfg, params, pcfg, chunked_prefill=True).prefill_chunk \
+        == 4 * pcfg.page_size
+    rng = np.random.default_rng(4)
+    prompt = rng.integers(0, cfg.vocab, size=(20,)).astype(np.int32)  # > one chunk
+    engine = ServingEngine(cfg, params, pcfg, chunked_prefill=True)
+    out = engine.run([Request(rid=0, prompt=prompt, max_new_tokens=4)])
+    ref = static_greedy_reference(cfg, params, prompt, 4, pcfg.max_seq)
+    np.testing.assert_array_equal(out[0], ref)
+
+
+def test_scheduler_cancel_waiting_and_active():
+    pcfg = PagedCacheConfig(page_size=4, num_pages=16, max_slots=1, max_pages_per_seq=4)
+    sched = ContinuousBatchingScheduler(pcfg)
+    for i in range(3):
+        sched.submit(Request(rid=i, prompt=np.zeros(4, np.int32), max_new_tokens=4))
+    (seq,) = sched.admit()
+    _finish_prefill(sched, seq)
+    assert sched.cancel(1)                    # waiting: dropped from the queue
+    assert sched.cancel(0)                    # active: evicted with partial output
+    assert not sched.cancel(99)               # unknown rid
+    sched.check_invariants()
+    drained = {s.request.rid: s for s in sched.drain_finished()}
+    assert drained[0].status == "cancelled" and drained[1].status == "cancelled"
+    assert sched.pool.allocated_count == 0
+    # the queue head (rid 2) proceeds into the freed slot
+    (seq2,) = sched.admit()
+    assert seq2.request.rid == 2
+
+
+def test_engine_request_deadline_times_out(key):
+    """A request whose deadline can't cover its decode length is evicted
+    with status 'timeout' and a partial output that is a prefix of the
+    oracle's tokens; pool accounting stays clean."""
+    cfg = get_config("llama3.2-1b", reduced=True)
+    params = init_model(key, cfg)
+    pcfg = PagedCacheConfig(page_size=8, num_pages=24, max_slots=2, max_pages_per_seq=4)
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, cfg.vocab, size=(6,)).astype(np.int32)
+    reqs = [Request(rid=0, prompt=prompt, max_new_tokens=12, deadline=4),
+            Request(rid=1, prompt=prompt, max_new_tokens=3)]
+    engine = ServingEngine(cfg, params, pcfg)
+    out = engine.run(reqs)
+    engine.sched.check_invariants()
+    assert engine.last_statuses[0] == "timeout"
+    assert engine.last_statuses[1] == "finished"
+    assert 0 < len(out[0]) < 12
+    ref = static_greedy_reference(cfg, params, prompt, 12, pcfg.max_seq)
+    np.testing.assert_array_equal(out[0], ref[:len(out[0])])
+    assert engine.sched.pool.allocated_count == 0
+    assert engine.stats()["timed_out"] == 1.0
+
+
+def test_scheduler_cow_fork_on_shared_append_target():
+    """A decode append whose target page is shared must fork it: fresh
+    page in the block table, old page released, fork reported for the
+    device copy, invariants green."""
+    pcfg = PagedCacheConfig(page_size=4, num_pages=16, max_slots=1, max_pages_per_seq=4)
+    sched = ContinuousBatchingScheduler(pcfg)
+    sched.submit(Request(rid=0, prompt=np.zeros(6, np.int32), max_new_tokens=4))
+    (seq,) = sched.admit()
+    _finish_prefill(sched, seq)
+    target = seq.pages[seq.seq_len // pcfg.page_size]
+    sched.pool.share([target])                # simulate another holder
+    forks = sched.ensure_append_capacity()
+    assert forks == [(seq.slot, target, seq.pages[seq.seq_len // pcfg.page_size])]
+    new = seq.pages[seq.seq_len // pcfg.page_size]
+    assert new != target and sched.pool.refcount(new) == 1
+    assert sched.pool.refcount(target) == 1   # our ref released, other holder's kept
+    assert sched.block_table[seq.slot, seq.seq_len // pcfg.page_size] == new
+    assert sched.cow_forks == 1
+    sched.pool.release([target])              # the simulated holder lets go
+    sched.check_invariants()
+
+
+def test_copy_page_device_op(key):
+    """The device half of a COW fork: dst page becomes bit-identical to
+    src across a layer-stacked pool leaf."""
+    from repro.serving import copy_page
+
+    pool = jax.random.normal(key, (5, 4, 3))            # (P, page, f)
+    out = copy_page(pool, jnp.int32(1), jnp.int32(3))
+    np.testing.assert_array_equal(np.asarray(out[3]), np.asarray(pool[1]))
+    np.testing.assert_array_equal(np.asarray(out[0]), np.asarray(pool[0]))
+
+
+def test_paged_write_slice_offsets(key):
+    """Offset writes land tokens at their logical positions across page
+    boundaries — the chunked-prefill write primitive."""
+    from repro.serving import paged_write_slice
+
+    page, f = 4, 3
+    pool = jnp.zeros((7, page, f))
+    bt = jnp.asarray([5, 2, 0], dtype=jnp.int32)
+    vals = jax.random.normal(key, (6, f))               # spans pages 1..2 of the seq
+    out = paged_write_slice(pool, bt, jnp.int32(3), vals)
+    view = np.asarray(paged_gather(out, bt[None]))[0]   # (12, f) logical view
+    np.testing.assert_array_equal(view[3:9], np.asarray(vals))
+    np.testing.assert_array_equal(view[:3], np.zeros((3, f)))
 
 
 def test_streaming_engine_recurrent_family(key):

@@ -1,8 +1,11 @@
 """Fuzzed continuous-batching invariants: random
-admit/append/finish/evict schedules driven through the real scheduler
-API, asserting after every transition that pages never double-book,
-free-list + held pages always partition the pool exactly, and no page
-is aliased across sequences. Plus direct PagePool allocator fuzzing."""
+admit/chunk-prefill/append/finish/evict/cancel schedules driven through
+the real scheduler API — with and without prefix sharing — asserting
+after every transition that refcounts account for every holder, pages
+never leak or double-book, no write-targeted page stays shared (COW
+forks fire), and pool accounting is exact. Plus direct PagePool
+allocator fuzzing of the refcount (alloc/share/release) state machine.
+"""
 import random as pyrandom
 
 import numpy as np
@@ -20,21 +23,45 @@ EOS = 7
 
 def _full_invariants(sched: ContinuousBatchingScheduler, pcfg: PagedCacheConfig):
     sched.check_invariants()
-    held = [p for s in sched.active.values() for p in s.pages]
-    # free-list + held pages partition the pool exactly (no leak, no
-    # double-count)
-    assert sched.pool.free_count + len(held) == pcfg.num_pages
-    # no cross-sequence page aliasing, null page never handed out
-    owner = {}
-    for slot, seq in sched.active.items():
-        for p in seq.pages:
-            assert p != pcfg.null_page
-            assert p not in owner, f"page {p} aliased by slots {owner[p]} and {slot}"
-            owner[p] = slot
     # block-table rows of *free* slots hold only the null page
     for slot in sched._free_slots:
         assert (sched.block_table[slot] == pcfg.null_page).all()
         assert sched.seq_lens[slot] == 0
+    # without a prefix cache, pages never alias across sequences
+    if sched.prefix_cache is None:
+        owner = {}
+        for slot, seq in sched.active.items():
+            for p in seq.pages:
+                assert p != pcfg.null_page
+                assert p not in owner, f"page {p} aliased by {owner[p]} and {slot}"
+                owner[p] = slot
+
+
+def _rand_requests(rng, pcfg, n_max=16, shared_pool=None):
+    cap = pcfg.max_pages_per_seq * pcfg.page_size
+    reqs = []
+    for i in range(rng.randint(1, n_max)):
+        max_new = rng.randint(1, cap - 1)
+        plen = rng.randint(1, cap - max_new)
+        if shared_pool is not None and rng.random() < 0.6:
+            # draw the prompt head from a small pool of shared prefixes
+            # so the index actually hits
+            head = shared_pool[rng.randrange(len(shared_pool))][:plen]
+            tail = rng.getrandbits(16)
+            prompt = np.concatenate(
+                [head, np.full((max(plen - len(head), 0),), tail % 97, np.int32)])
+            prompt = prompt[:plen]
+        else:
+            prompt = np.asarray([rng.randint(0, 96) for _ in range(plen)], np.int32)
+        reqs.append(Request(
+            rid=i,
+            prompt=prompt.astype(np.int32),
+            max_new_tokens=max_new,
+            arrival=rng.randint(0, 8),
+            eos_id=EOS if rng.random() < 0.5 else None,
+            deadline=rng.randint(4, 40) if rng.random() < 0.25 else None,
+        ))
+    return [r for r in reqs if pcfg.pages_for(r.max_total_len) <= pcfg.num_pages]
 
 
 @settings(max_examples=12, deadline=None)
@@ -43,30 +70,26 @@ def _full_invariants(sched: ContinuousBatchingScheduler, pcfg: PagedCacheConfig)
     page_size=st.integers(2, 8),
     slots=st.integers(1, 6),
     pool_pages=st.integers(8, 40),
+    prefix_sharing=st.booleans(),
 )
-def test_scheduler_random_schedule_invariants(seed, page_size, slots, pool_pages):
+def test_scheduler_random_schedule_invariants(seed, page_size, slots, pool_pages,
+                                              prefix_sharing):
     rng = pyrandom.Random(seed)
     mpps = max(2, min(8, pool_pages // 2))
     pcfg = PagedCacheConfig(page_size=page_size, num_pages=pool_pages,
                             max_slots=slots, max_pages_per_seq=mpps)
     budget = rng.choice([None, 2 * page_size, 6 * page_size])
-    sched = ContinuousBatchingScheduler(pcfg, prefill_token_budget=budget)
+    sched = ContinuousBatchingScheduler(pcfg, prefill_token_budget=budget,
+                                        prefix_sharing=prefix_sharing)
 
-    cap = mpps * page_size
-    reqs = []
-    for i in range(rng.randint(1, 16)):
-        max_new = rng.randint(1, cap - 1)
-        plen = rng.randint(1, cap - max_new)
-        reqs.append(Request(
-            rid=i,
-            prompt=np.zeros((plen,), dtype=np.int32),
-            max_new_tokens=max_new,
-            arrival=rng.randint(0, 8),
-            eos_id=EOS if rng.random() < 0.5 else None,
-        ))
-    reqs = [r for r in reqs if pcfg.pages_for(r.max_total_len) <= pcfg.num_pages]
+    shared_pool = [np.asarray([rng.randint(0, 96)
+                               for _ in range(mpps * page_size)], np.int32)
+                   for _ in range(2)] if prefix_sharing else None
+    reqs = _rand_requests(rng, pcfg, shared_pool=shared_pool)
     pending = sorted(reqs, key=lambda r: r.arrival)
+    submitted = {r.rid for r in reqs}
 
+    drained = []
     clock = 0
     guard = 0
     while pending or sched.has_work:
@@ -74,61 +97,107 @@ def test_scheduler_random_schedule_invariants(seed, page_size, slots, pool_pages
         assert guard < 5000, "scheduler failed to drain (live/deadlock)"
         while pending and pending[0].arrival <= clock:
             sched.submit(pending.pop(0))
-        admitted = sched.admit()
+        sched.expire_deadlines(clock)
         _full_invariants(sched, pcfg)
-        for seq in admitted:                       # simulated prefill token
-            tok = EOS if (seq.request.eos_id and rng.random() < 0.15) else 1
-            sched.on_prefill_token(seq.slot, tok)
+        sched.admit()
+        _full_invariants(sched, pcfg)
+        for seq in sched.prefilling():               # chunked prefill: advance
+            plen = seq.request.prompt_len            # by a random chunk
+            c = rng.randint(1, max(1, plen - seq.prefill_pos))
+            seq.prefill_pos = min(plen, seq.prefill_pos + c)
+            if seq.prefill_pos == plen:
+                sched.finish_prefill(seq.slot)
+                tok = EOS if (seq.request.eos_id and rng.random() < 0.15) else 1
+                sched.on_prefill_token(seq.slot, tok)
             _full_invariants(sched, pcfg)
-        if sched.active:
-            sched.ensure_append_capacity()         # page-boundary appends
+        if rng.random() < 0.1 and sched.active:      # random mid-flight cancel
+            sched.cancel(rng.choice([s.request.rid for s in sched.active.values()]))
             _full_invariants(sched, pcfg)
-            for slot in list(sched.active):        # decode + random finishes
-                seq = sched.active[slot]
+        decoding = [s for s in sched.active.values() if s.status == "decoding"]
+        if decoding:
+            sched.ensure_append_capacity()           # page-boundary appends + COW
+            _full_invariants(sched, pcfg)
+            for seq in decoding:
+                if seq.slot not in sched.active:     # cancelled above
+                    continue
+                # after capacity assurance no append target is shared —
+                # a decode write can never reach a page another holder
+                # still references
+                tgt = seq.pages[seq.seq_len // pcfg.page_size]
+                assert sched.pool.refcount(tgt) >= 1
+                assert not sched.pool.is_shared(tgt), \
+                    f"append target page {tgt} still shared after COW pass"
+            for seq in list(decoding):
+                if seq.slot not in sched.active:     # cancelled above
+                    continue
                 tok = EOS if (seq.request.eos_id and rng.random() < 0.2) else 1
-                sched.on_token(slot, tok)
+                sched.on_token(seq.slot, tok)
                 _full_invariants(sched, pcfg)
+        drained += sched.drain_finished()
         clock += 1
 
-    # fully drained: every page back on the free list, every slot free
-    assert sched.pool.allocated_count == 0
-    assert sched.pool.free_count == pcfg.num_pages
-    assert len(sched.finished) == len(reqs)
+    # fully drained: every remaining page belongs to the prefix index,
+    # every slot free, every submitted rid surfaced exactly once
+    cache_pages = len(sched.prefix_cache.pages) if sched.prefix_cache else 0
+    assert sched.pool.allocated_count == cache_pages
+    assert sched.pool.free_count == pcfg.num_pages - cache_pages
     assert not sched.active and len(sched._free_slots) == slots
-    # every finished sequence respected its bounds
-    for seq in sched.finished:
+    assert not sched.drain_finished()
+    assert sorted(s.request.rid for s in drained) == sorted(submitted)
+    assert sched.finished_count == len(submitted)
+    for seq in drained:
         assert len(seq.generated) <= seq.request.max_new_tokens
-        if seq.request.eos_id is None:
+        if seq.request.eos_id is None and seq.status == "finished":
             assert len(seq.generated) == seq.request.max_new_tokens
+    # the index fully evicts on demand once nothing references its pages
+    if sched.prefix_cache is not None:
+        sched.prefix_cache.evict(pcfg.num_pages)
+        assert sched.pool.allocated_count == 0
 
 
 @settings(max_examples=10, deadline=None)
 @given(seed=st.integers(0, 2**31 - 1), pool_pages=st.integers(1, 32))
-def test_pagepool_random_alloc_free(seed, pool_pages):
-    """Direct allocator fuzz against a model: counts always sum to pool
-    size, no page handed out twice, double-free always raises."""
+def test_pagepool_random_alloc_share_release(seed, pool_pages):
+    """Direct allocator fuzz against a reference refcount model: counts
+    always partition the pool, no page handed out twice, refcounts
+    exact, double-release always raises and never mutates state."""
     rng = pyrandom.Random(seed)
     pool = PagePool(pool_pages)
-    held = []
-    for _ in range(200):
+    refs = {}                                   # model: page -> refcount
+    for _ in range(300):
         assert pool.free_count + pool.allocated_count == pool_pages
-        assert len(set(held)) == len(held)
-        if held and rng.random() < 0.45:
-            n = rng.randint(1, len(held))
-            back, held = held[:n], held[n:]
-            pool.free(back)
+        assert pool.allocated_count == len(refs)
+        for p, n in refs.items():
+            assert pool.refcount(p) == n
+            assert pool.is_shared(p) == (n > 1)
+        op = rng.random()
+        if refs and op < 0.3:                   # release one ref somewhere
+            p = rng.choice(list(refs))
+            pool.release([p])
+            refs[p] -= 1
+            if refs[p] == 0:
+                del refs[p]
+                with pytest.raises(RuntimeError):
+                    pool.release([p])           # double free always raises
+                assert pool.free_count + pool.allocated_count == pool_pages
+        elif refs and op < 0.55:                # share (refcount bump)
+            p = rng.choice(list(refs))
+            pool.share([p])
+            refs[p] += 1
+        elif op < 0.6 and not refs:
             with pytest.raises(RuntimeError):
-                pool.free([back[0]])               # double free always raises
-            # the failed double-free must not have changed state
-            assert pool.free_count + pool.allocated_count == pool_pages
+                pool.share([0])                 # share of unallocated raises
         else:
             want = rng.randint(1, max(1, pool_pages // 2))
             if want > pool.free_count:
                 with pytest.raises(RuntimeError):
-                    pool.alloc(want)               # exhaustion raises cleanly
+                    pool.alloc(want)            # exhaustion raises cleanly
             else:
-                held += pool.alloc(want)
-    pool.free(held)
+                for p in pool.alloc(want):
+                    assert p not in refs        # never hand out a held page
+                    refs[p] = 1
+    for p, n in list(refs.items()):
+        pool.release([p] * n)
     assert pool.free_count == pool_pages and pool.allocated_count == 0
 
 
@@ -139,3 +208,12 @@ def test_pagepool_null_page_never_allocated():
     pages = pool.alloc(pcfg.num_pages)
     assert pcfg.null_page not in pages
     assert sorted(pages) == list(range(pcfg.num_pages))
+
+
+def test_pagepool_failed_release_is_atomic():
+    """A release list containing any bad page must not change state."""
+    pool = PagePool(4)
+    a = pool.alloc(2)
+    with pytest.raises(RuntimeError):
+        pool.release([a[0], 99])
+    assert pool.refcount(a[0]) == 1 and pool.allocated_count == 2
