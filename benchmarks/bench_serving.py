@@ -81,20 +81,27 @@ def _run_static(cfg, params, prompts):
     return n_tok / dt, _static_cache_bytes(cfg, SLOTS, max_total)
 
 
-def _run_paged(cfg, params, prompts, quantize=None):
-    from repro.serving import PagedCacheConfig, Request
-    from repro.serving.engine import ServingEngine
+def _paged_spec(quantize=None, **serve_kw):
+    """The bench's RunSpec: pool sized to the workload's concurrent
+    reservation fit, not the global worst case — the paged memory win."""
+    from repro.api import ModelSpec, RunSpec, ServeSpec
 
-    # pool sized to the workload's concurrent reservation fit, not the
-    # global worst case — the paged memory win
-    pcfg = PagedCacheConfig(page_size=8, num_pages=20, max_slots=SLOTS,
-                            max_pages_per_seq=5)
-    engine = ServingEngine(cfg, params, pcfg, prefill_token_budget=64,
-                           quantize=quantize)
-    reqs = [Request(rid=i, prompt=p, max_new_tokens=GEN, arrival=(i // SLOTS) * 3)
-            for i, p in enumerate(prompts)]
-    engine.run(reqs)
-    st = engine.stats()
+    return RunSpec(
+        model=ModelSpec(ARCH, reduced=True),
+        serve=ServeSpec(page_size=8, num_pages=20, slots=SLOTS,
+                        pages_per_seq=5, prefill_budget=64,
+                        quantize=quantize, gen=GEN, **serve_kw),
+    )
+
+
+def _run_paged(params, prompts, quantize=None):
+    from repro.api import Server
+
+    server = Server(_paged_spec(quantize), params)
+    for i, p in enumerate(prompts):
+        server.submit(p, arrival=(i // SLOTS) * 3)
+    server.run()
+    st = server.stats()
     return (st["tokens_per_s"], int(st["attn_cache_bytes"]),
             int(st["weight_bytes"]))
 
@@ -114,7 +121,7 @@ def run() -> list[str]:
     out.append(f"serving_static,{1e6 / max(tps_s, 1e-9):.1f},"
                f"tok_s={tps_s:.1f};cache_bytes={bytes_s}")
 
-    tps_p, bytes_p, wb_fp = _run_paged(cfg, params, prompts)
+    tps_p, bytes_p, wb_fp = _run_paged(params, prompts)
     print(f"paged fp32: {tps_p:8.1f} tok/s   cache {bytes_p:8d} bytes "
           f"(shared pool, {bytes_s / max(bytes_p, 1):.2f}x smaller)   "
           f"weights {wb_fp:8d} bytes")
@@ -123,7 +130,7 @@ def run() -> list[str]:
 
     # per-precision weight memory + throughput: int8 per-channel factors
     # dequantized on the fly (serving/quantize.py)
-    tps_q, bytes_q, wb_q = _run_paged(cfg, params, prompts, quantize="int8")
+    tps_q, bytes_q, wb_q = _run_paged(params, prompts, quantize="int8")
     print(f"paged int8: {tps_q:8.1f} tok/s   cache {bytes_q:8d} bytes   "
           f"weights {wb_q:8d} bytes ({wb_fp / max(wb_q, 1):.2f}x smaller)")
     out.append(f"serving_paged_int8,{1e6 / max(tps_q, 1e-9):.1f},"
@@ -133,15 +140,21 @@ def run() -> list[str]:
 
 
 def run_shared_prefix(verify: bool = False) -> list[str]:
-    """Shared-system-prompt workload: prefix cache off vs. on."""
+    """Shared-system-prompt workload: prefix cache off vs. on. The two
+    runs differ only by a ``spec.replace`` — the declarative record of
+    what the comparison toggles."""
+    from repro.api import ModelSpec, RunSpec, Server, ServeSpec
     from repro.launch.serve import static_greedy_reference
-    from repro.serving import PagedCacheConfig, Request
-    from repro.serving.engine import ServingEngine
+    from repro.serving import Request
 
-    cfg = get_config(ARCH, reduced=True)
+    base = RunSpec(
+        model=ModelSpec(ARCH, reduced=True),
+        serve=ServeSpec(page_size=8, num_pages=48, slots=SLOTS,
+                        pages_per_seq=8, prefill_budget=16, gen=GEN),
+    )
+    cfg = base.model.config()
     params = init_model(jax.random.PRNGKey(0), cfg)
-    pcfg = PagedCacheConfig(page_size=8, num_pages=48, max_slots=SLOTS,
-                            max_pages_per_seq=8)
+    pcfg = base.serve.paged_config()
     rng = np.random.default_rng(0)
     system = rng.integers(0, cfg.vocab, size=(32,)).astype(np.int32)
     tails = [5, 9, 7, 12, 6, 10, 8, 11]
@@ -160,13 +173,14 @@ def run_shared_prefix(verify: bool = False) -> list[str]:
 
     out = []
     results = {}
-    for label, kw in (("off", {}),
-                      ("on ", dict(prefix_cache=True, chunked_prefill=True))):
-        engine = ServingEngine(cfg, params, pcfg, prefill_token_budget=16, **kw)
-        results[label.strip()] = engine.run(reqs)
-        engine.sched.check_invariants()
-        st = engine.stats()
-        lat = engine.latency_percentiles()
+    for label, spec in (("off", base),
+                        ("on ", base.replace(serve={"prefix_cache": True,
+                                                    "chunked_prefill": True}))):
+        server = Server(spec, params)
+        results[label.strip()] = server.run(reqs)
+        server.engine.sched.check_invariants()
+        st = server.stats()
+        lat = server.engine.latency_percentiles()
         saved = int(st["prompt_tokens"] - st["prefill_tokens"])
         hit = st.get("prefix_hit_pages", 0.0)
         look = max(st.get("prefix_lookup_pages", 0.0), 1.0)

@@ -31,14 +31,10 @@ import sys
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.config import get_config
-from repro.data.synthetic import SyntheticLMDataset
-from repro.launch.steps import make_train_step
-from repro.models.model import init_model, param_count
-from repro.optim import make_sct_optimizer
+from repro.api import ModelSpec, RunSpec, Trainer, TrainSpec
+from repro.models.model import param_count
 
 STEPS = 300
 BATCH = 8
@@ -59,19 +55,24 @@ def _peak_rss_mb() -> float:
     return ru / (1024.0 ** 2) if sys.platform == "darwin" else ru / 1024.0
 
 
-def _run_one(cfg, lr, label, steps, batch, seq, ds):
-    opt = make_sct_optimizer(cfg, lr=lr, warmup=10, total_steps=steps)
-    step_fn = jax.jit(make_train_step(cfg, opt))
-    state = opt.init(init_model(jax.random.PRNGKey(0), cfg))
+def _run_one(model: ModelSpec, lr, label, steps, batch, seq):
+    """One sweep cell = one RunSpec (the declarative record of the
+    variant: rank override or dense baseline on the ModelSpec), driven
+    step-at-a-time through the Trainer facade for per-step loss/timing."""
+    spec = RunSpec(model=model,
+                   train=TrainSpec(steps=steps, batch=batch, seq=seq,
+                                   lr=lr, warmup=10, seed=0))
+    trainer = Trainer(spec)
     losses = []
     t_steps = []
     for i in range(steps):
-        t, l = ds.batch(i, batch)
-        t0 = time.time()
-        state, m = step_fn(state, {"tokens": jnp.asarray(t), "labels": jnp.asarray(l)})
+        data = trainer.make_batch(i)       # host-side data gen stays
+        t0 = time.time()                   # outside the timed region
+        m = trainer.step(data)
         jax.block_until_ready(m["loss"])
         t_steps.append(time.time() - t0)
         losses.append(float(m["loss"]))
+    state = trainer.state
     n = param_count(state["params"])
     smooth = float(np.mean(losses[-20:]))
     ppl = float(np.exp(min(smooth, 20)))
@@ -88,14 +89,13 @@ def run(ranks=RANKS, steps=STEPS, batch=BATCH, seq=SEQ,
         json_out=None) -> list[str]:
     print("# Paper Table 3 — rank sweep (reduced SmolLM2-1.7B family, "
           f"{steps} steps, synthetic data)")
-    base = get_config("smollm2-1.7b", reduced=True)
-    ds = SyntheticLMDataset(vocab=base.vocab, seq_len=seq, seed=0)
+    base = ModelSpec("smollm2-1.7b", reduced=True)
     results = []
-    dense = _run_one(base.replace_sct(spectral_mlp=False), lr=1e-3, label="dense",
-                     steps=steps, batch=batch, seq=seq, ds=ds)
+    dense = _run_one(base.replace(spectral_mlp=False), lr=1e-3, label="dense",
+                     steps=steps, batch=batch, seq=seq)
     for r in ranks:
-        results.append(_run_one(base.replace_sct(rank=r), lr=3e-3, label=f"SCT r={r}",
-                                steps=steps, batch=batch, seq=seq, ds=ds))
+        results.append(_run_one(base.replace(rank=r), lr=3e-3, label=f"SCT r={r}",
+                                steps=steps, batch=batch, seq=seq))
 
     floors = [x["loss"] for x in results]
     spread = max(floors) - min(floors)
@@ -123,7 +123,7 @@ def run(ranks=RANKS, steps=STEPS, batch=BATCH, seq=SEQ,
     if json_out:
         payload = {
             "bench": "table3_rank_sweep",
-            "config": {"arch": base.name, "reduced": True, "steps": steps,
+            "config": {"arch": base.arch, "reduced": True, "steps": steps,
                        "batch": batch, "seq": seq, "ranks": list(ranks)},
             "dense": dense,
             "sct": results,

@@ -1,42 +1,40 @@
-"""Quickstart: SCT in 60 lines — build a spectral model, take training
-steps with QR retraction, watch the manifold invariant hold.
+"""Quickstart: SCT through the experiment API — declare a RunSpec,
+drive a Trainer step by step, watch the manifold invariant hold.
 
   PYTHONPATH=src python examples/quickstart.py
-"""
-import jax
-import jax.numpy as jnp
 
-from repro.config import get_config
+A RunSpec is the whole experiment as one JSON-serializable value; the
+Trainer facade owns the wiring (config, optimizer, jitted step). The
+same spec given a checkpoint directory runs the fault-tolerant
+production loop via ``Trainer(spec).fit()`` — see examples/train_e2e.py
+and docs/api.md.
+"""
+from repro.api import ModelSpec, RunSpec, Trainer, TrainSpec
 from repro.core.tree import max_orthogonality_error
-from repro.data.synthetic import SyntheticLMDataset
-from repro.launch.steps import make_train_step
-from repro.models.model import init_model, param_count, dense_equivalent_param_count
-from repro.optim import make_sct_optimizer
+from repro.models.model import param_count, dense_equivalent_param_count
 
 
 def main():
     # the paper's rank-sweep model family, smoke-test sized for CPU
-    cfg = get_config("smollm2-1.7b", reduced=True)
+    spec = RunSpec(
+        model=ModelSpec("smollm2-1.7b", reduced=True),
+        train=TrainSpec(steps=60, batch=8, seq=32, lr=3e-3, warmup=5),
+    )
+    cfg = spec.model.config()
     print(f"arch: {cfg.name} (reduced) | spectral MLP rank {cfg.sct.rank} | "
           f"retraction: {cfg.sct.retraction}")
+    print("spec:", spec.to_json())
 
-    params = init_model(jax.random.PRNGKey(0), cfg)
-    n = param_count(params)
-    n_dense = dense_equivalent_param_count(params)
+    trainer = Trainer(spec)
+    n = param_count(trainer.params)
+    n_dense = dense_equivalent_param_count(trainer.params)
     print(f"spectral params: {n/1e3:.0f}K  (dense-equivalent {n_dense/1e3:.0f}K, "
           f"{n_dense/n:.2f}x compression)")
 
-    opt = make_sct_optimizer(cfg, lr=3e-3, warmup=5, total_steps=60)
-    state = opt.init(params)
-    step = jax.jit(make_train_step(cfg, opt))
-
-    ds = SyntheticLMDataset(vocab=cfg.vocab, seq_len=32, seed=0)
-    for i in range(60):
-        tokens, labels = ds.batch(i, 8)
-        state, metrics = step(state, {"tokens": jnp.asarray(tokens),
-                                      "labels": jnp.asarray(labels)})
+    for i in range(spec.train.steps):
+        metrics = trainer.step()
         if i % 10 == 0:
-            ortho = float(max_orthogonality_error(state["params"]))
+            ortho = float(max_orthogonality_error(trainer.params))
             print(f"step {i:3d}  loss {float(metrics['loss']):.4f}  "
                   f"ortho_err {ortho:.2e}")
 

@@ -1,10 +1,12 @@
-"""Serving demo, both modes:
+"""Serving demo, both modes plus the programmatic facade:
 
   1. static batch — prefill a batch of same-length prompts, decode with
      the dense (batch, max_seq) cache;
   2. streaming — continuous batching over a staggered mixed-length
      request trace with the paged KV cache, verified token-for-token
-     against the static path.
+     against the static path;
+  3. programmatic — the same paged runtime through ``repro.api.Server``:
+     declare a RunSpec, submit prompts, stream completions.
 
   PYTHONPATH=src python examples/serve_batched.py [arch]
 """
@@ -17,7 +19,7 @@ def run(label, extra):
     arch = sys.argv[1] if len(sys.argv) > 1 else "llama3.2-1b"
     env = dict(os.environ)
     env["PYTHONPATH"] = "src"
-    cmd = [sys.executable, "-m", "repro.launch.serve",
+    cmd = [sys.executable, "-m", "repro", "serve",
            "--arch", arch, "--reduced"] + extra
     print(f"--- {label}: {' '.join(cmd[3:])}")
     out = subprocess.run(cmd, env=env, capture_output=True, text=True)
@@ -25,6 +27,27 @@ def run(label, extra):
     if out.returncode != 0:
         print(out.stderr[-2000:])
         sys.exit(1)
+
+
+def run_api(arch):
+    print("--- programmatic: RunSpec -> Server.submit/stream")
+    import numpy as np
+
+    from repro.api import ModelSpec, RunSpec, Server, ServeSpec
+
+    spec = RunSpec(model=ModelSpec(arch, reduced=True),
+                   serve=ServeSpec(page_size=8, num_pages=32, slots=3,
+                                   pages_per_seq=4, gen=10))
+    server = Server(spec)
+    rng = np.random.default_rng(0)
+    for n in (6, 11, 9):
+        server.submit(rng.integers(0, server.cfg.vocab, size=(n,)))
+    for rid, tokens, status in server.stream():
+        print(f"request {rid}: {status}, {len(tokens)} tokens -> "
+              f"{tokens[:8].tolist()}...")
+    st = server.stats()
+    print(f"{st['tokens_per_s']:.1f} tok/s, "
+          f"paged cache {int(st['attn_cache_bytes'])} bytes")
 
 
 def main():
@@ -39,6 +62,7 @@ def main():
          "--num-pages", "48", "--pages-per-seq", "8",
          "--shared-prefix", "24", "--prefix-cache", "--chunked-prefill",
          "--prefill-budget", "16", "--verify"])
+    run_api(sys.argv[1] if len(sys.argv) > 1 else "llama3.2-1b")
 
 
 if __name__ == "__main__":

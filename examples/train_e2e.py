@@ -1,6 +1,13 @@
 """End-to-end training driver: train a (reduced) model for a few hundred
 steps through the production path — fault-tolerant loop, periodic
-checkpoints, resume — and then prove restartability by rerunning.
+checkpoints, resume — and then prove restartability two ways:
+
+  1. rerun the same CLI command (``python -m repro train``, the thin
+     RunSpec adapter) with a larger step budget — it resumes from the
+     newest checkpoint;
+  2. resume *programmatically* with zero re-specified flags:
+     ``Trainer.resume(ckpt_dir)`` rebuilds the run from the RunSpec
+     embedded in the checkpoint sidecar.
 
   PYTHONPATH=src python examples/train_e2e.py
 """
@@ -15,7 +22,7 @@ CKPT = "/tmp/repro_e2e_ckpt"
 def run_training(steps):
     env = dict(os.environ)
     env["PYTHONPATH"] = "src"
-    cmd = [sys.executable, "-m", "repro.launch.train",
+    cmd = [sys.executable, "-m", "repro", "train",
            "--arch", "smollm2-1.7b", "--reduced",
            "--steps", str(steps), "--batch", "8", "--seq", "64",
            "--lr", "3e-3", "--ckpt-dir", CKPT, "--ckpt-every", "50"]
@@ -32,7 +39,16 @@ def main():
     run_training(200)
     print("=== phase 2: extend to 300 steps — resumes from step 200 ===")
     run_training(300)
-    print("done: the second run restored from the step-200 checkpoint and "
+    print("=== phase 3: zero-flag programmatic resume from the embedded "
+          "RunSpec ===")
+    from repro.api import Trainer
+
+    trainer = Trainer.resume(CKPT, **{"train.steps": 320})
+    state = trainer.fit()
+    print(f"resumed to step {trainer.current_step} "
+          f"(optimizer step counter {int(state['step'])}) with zero "
+          f"re-specified flags — arch/lr/seed all came from the sidecar")
+    print("done: every phase restored from the newest checkpoint and "
           "continued — the crash/restart path is the same code.")
 
 

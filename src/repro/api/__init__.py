@@ -1,0 +1,44 @@
+"""Unified experiment API: declarative RunSpecs + Trainer/Server facades.
+
+    from repro.api import ModelSpec, RunSpec, TrainSpec, Trainer, Server
+
+    spec = RunSpec(model=ModelSpec("smollm2-1.7b", reduced=True),
+                   train=TrainSpec(steps=200, lr=3e-3),
+                   checkpoint=CheckpointSpec(directory="/tmp/run1"))
+    Trainer(spec).fit()                       # fault-tolerant, resumable
+    server = Server.from_checkpoint("/tmp/run1")   # zero flags
+    rid = server.submit(prompt_tokens)
+    tokens = server.run()[rid]
+
+Specs are frozen, JSON-round-trippable values (specs.py); the facades
+own all wiring (mesh, optimizer, rank controller, engine); the CLIs
+(``python -m repro``, launch/train.py, launch/serve.py) are thin
+argparse adapters over this module. docs/api.md is the reference.
+"""
+from repro.api.specs import (
+    CheckpointSpec,
+    ModelSpec,
+    PrecisionSpec,
+    RankScheduleSpec,
+    RunSpec,
+    ServeSpec,
+    ShardingSpec,
+    TrainSpec,
+)
+from repro.api.trainer import Trainer, log_metrics
+from repro.api.server import Server, load_run_spec
+
+__all__ = [
+    "ModelSpec",
+    "TrainSpec",
+    "PrecisionSpec",
+    "RankScheduleSpec",
+    "ShardingSpec",
+    "ServeSpec",
+    "CheckpointSpec",
+    "RunSpec",
+    "Trainer",
+    "Server",
+    "load_run_spec",
+    "log_metrics",
+]

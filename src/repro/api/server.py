@@ -1,0 +1,209 @@
+"""Server: the programmatic serving facade over one :class:`RunSpec`.
+
+Owns the continuous-batching :class:`ServingEngine` — paged KV cache,
+int8 quantization, prefix cache, chunked prefill, deadlines — built
+entirely from ``spec.serve``. Three ways in:
+
+  * ``Server(spec)`` — random-init weights (demos, benchmarks);
+  * ``Server(spec, params=...)`` — weights you already hold;
+  * ``Server.from_checkpoint(path)`` — the zero-flag path: the RunSpec
+    embedded in the newest checkpoint sidecar describes the model, the
+    serving geometry, and the quantization; ``**overrides`` are
+    :meth:`RunSpec.replace` arguments, so serving a shrunk snapshot is
+    ``Server.from_checkpoint(path, **{"serve.rank": 64})``.
+
+Requests go in through :meth:`submit` (or a prebuilt ``Request`` list
+to :meth:`run`); results come back as a batch dict from :meth:`run` or
+incrementally from the :meth:`stream` generator. :meth:`stats` is the
+engine's throughput/memory/prefix-cache/latency counters.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.api.specs import RunSpec
+from repro.serving.scheduler import Request
+
+__all__ = ["Server", "load_run_spec"]
+
+
+def load_run_spec(ckpt_dir: str) -> Tuple[int, RunSpec]:
+    """(step, RunSpec) embedded in the newest checkpoint under
+    ``ckpt_dir``. Raises FileNotFoundError for an empty directory and
+    ValueError for pre-API checkpoints without an embedded spec."""
+    from repro.checkpoint.manager import CheckpointManager
+
+    # a read path must not mkdir (CheckpointManager's constructor does):
+    # a typo'd path should stay a loud FileNotFoundError, not become a
+    # plausible-looking empty run directory
+    if not os.path.isdir(ckpt_dir):
+        raise FileNotFoundError(f"no checkpoints under {ckpt_dir!r}")
+    step, spec_dict = CheckpointManager(ckpt_dir).latest_run_spec()
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints under {ckpt_dir!r}")
+    if spec_dict is None:
+        raise ValueError(
+            f"checkpoint step {step} under {ckpt_dir!r} predates spec "
+            f"embedding — rebuild the RunSpec by hand: Trainer(spec) "
+            f"restores the snapshot, Server(spec, params) serves it")
+    return step, RunSpec.from_dict(spec_dict)
+
+
+class Server:
+    """One serving runtime for one model, described by ``spec``. Only
+    ``spec.model`` and ``spec.serve`` are consulted — plus
+    ``spec.train.seed`` when no ``params`` are given and the weights
+    are random-initialized (a training RunSpec serves unchanged; the
+    sub-specs are orthogonal). ``spec.serve.mode`` must be ``"paged"``,
+    the engine's runtime (the static dense-cache path stays a
+    launcher/test oracle, not a production server)."""
+
+    def __init__(self, spec: RunSpec, params: Any = None):
+        if spec.serve.mode != "paged":
+            raise ValueError(
+                f"Server drives the paged engine; serve.mode is "
+                f"{spec.serve.mode!r} (the static path lives in "
+                f"launch/serve.py as the verification oracle)")
+        from repro.models.model import init_model
+        from repro.serving.engine import ServingEngine
+        import jax
+
+        self.spec = spec
+        self.cfg = spec.model.config()
+        if params is None:
+            params = init_model(jax.random.PRNGKey(spec.train.seed), self.cfg)
+        sv = spec.serve
+        self.engine = ServingEngine(
+            self.cfg, params, sv.paged_config(),
+            prefill_token_budget=sv.prefill_budget,
+            quantize=sv.quantize,
+            prefix_cache=sv.prefix_cache,
+            chunked_prefill=sv.chunked_prefill,
+        )
+        self.checkpoint_step: Optional[int] = None
+        self._pending: List[Request] = []
+        self._next_rid = 0
+        # rids currently owned by this server or its engine (pending,
+        # queued, in flight, undelivered) — maintained incrementally so
+        # submit() stays O(1); delivery discards, so a finished rid is
+        # reusable, matching engine.known_rids() semantics
+        self._live_rids: set = set()
+
+    # -------------------------------------------------------------- load --
+    @classmethod
+    def from_checkpoint(cls, ckpt_dir: str, **overrides) -> "Server":
+        """Serve the newest checkpoint under ``ckpt_dir`` with zero
+        re-specified flags: model + serving geometry come from the
+        embedded RunSpec; ``overrides`` are :meth:`RunSpec.replace`
+        arguments applied on top (``{"serve.rank": K}`` resizes the
+        spectral groups at load, ``{"serve.quantize": "int8"}`` serves
+        the snapshot quantized)."""
+        from repro.serving.engine import params_from_checkpoint
+
+        step, spec = load_run_spec(ckpt_dir)
+        spec = spec.replace(**overrides)
+        # pin the params load to the step the spec came from: a live
+        # training run may land (and rotate in) a newer checkpoint
+        # between the two reads, and spec/weights must describe the
+        # same snapshot (they can disagree on rank otherwise)
+        _, params = params_from_checkpoint(ckpt_dir, rank=spec.serve.rank,
+                                           step=step)
+        server = cls(spec, params)
+        server.checkpoint_step = step
+        return server
+
+    # ------------------------------------------------------------ submit --
+    def submit(self, prompt, max_new_tokens: Optional[int] = None, *,
+               arrival: int = 0, eos_id: Optional[int] = None,
+               deadline: Optional[int] = None,
+               rid: Optional[int] = None) -> int:
+        """Queue one request; returns its rid (auto-assigned unless
+        given). ``max_new_tokens`` defaults to ``spec.serve.gen`` and
+        ``deadline`` to ``spec.serve.request_timeout``. The request sits
+        host-side until the next :meth:`run`/:meth:`stream` drives the
+        engine."""
+        if rid is None:
+            # auto-assignment must also dodge rids the engine learned
+            # from explicit Request lists passed straight to run/stream
+            rid = self._next_rid
+            while rid in self._live_rids:
+                rid += 1
+        elif rid in self._live_rids:
+            raise ValueError(f"rid {rid} is already queued or in flight — "
+                             f"results key on rid, so a duplicate would "
+                             f"silently overwrite the other request's "
+                             f"output")
+        self._live_rids.add(rid)
+        self._next_rid = max(self._next_rid, rid + 1)
+        self._pending.append(Request(
+            rid=rid,
+            prompt=np.asarray(prompt, dtype=np.int32),
+            max_new_tokens=(max_new_tokens if max_new_tokens is not None
+                            else self.spec.serve.gen),
+            arrival=arrival,
+            eos_id=eos_id,
+            deadline=(deadline if deadline is not None
+                      else self.spec.serve.request_timeout),
+        ))
+        return rid
+
+    def _take(self, requests: Optional[Sequence[Request]]) -> List[Request]:
+        if requests is not None:
+            return list(requests)
+        taken, self._pending = self._pending, []
+        # an empty take is fine while the engine still holds in-flight
+        # work or undelivered results — a stream() abandoned mid-trace
+        # strands its remaining requests, and a fresh run()/stream()
+        # with nothing new submitted is how they are recovered
+        if not taken and not self.engine.has_pending_work:
+            raise ValueError("nothing to serve: submit() requests first "
+                             "(or pass an explicit Request list)")
+        return taken
+
+    # --------------------------------------------------------------- run --
+    def run(self, requests: Optional[Sequence[Request]] = None) -> Dict[int, np.ndarray]:
+        """Serve everything submitted (or an explicit ``Request`` list)
+        to completion; rid -> generated int32 token ids. Per-rid
+        outcomes land in :attr:`last_statuses`."""
+        return {rid: tokens for rid, tokens, _ in self.stream(requests)}
+
+    def stream(self, requests: Optional[Sequence[Request]] = None
+               ) -> Iterator[Tuple[int, np.ndarray, str]]:
+        """Incremental form of :meth:`run`: yields ``(rid, tokens,
+        status)`` the engine step each request finishes — the
+        continuous-batching loop advances between yields, so consumers
+        see completions in service order, not submission order."""
+        reqs = self._take(requests)
+        # explicit Request lists bypass submit(); their rids join the
+        # live ledger here so auto-assignment dodges them too
+        self._live_rids.update(r.rid for r in reqs)
+        inner = self.engine.serve(reqs)   # registers with the engine now
+
+        def _events():
+            for rid, tokens, status in inner:
+                self._live_rids.discard(rid)
+                yield rid, tokens, status
+
+        return _events()
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel an in-flight request (only meaningful from another
+        thread of control, e.g. between :meth:`stream` iterations)."""
+        return self.engine.cancel(rid)
+
+    # ------------------------------------------------------------- stats --
+    def stats(self) -> Dict[str, float]:
+        return self.engine.stats()
+
+    @property
+    def last_statuses(self) -> Dict[int, str]:
+        return self.engine.last_statuses
+
+    @property
+    def params(self) -> Any:
+        """The engine's effective weights (quantized when serving
+        int8 — dequantize with serving.dequantize_tree for oracles)."""
+        return self.engine.params

@@ -1,0 +1,323 @@
+"""Declarative experiment specs: the serializable description of a run.
+
+A :class:`RunSpec` is the single object that describes everything the
+repo knows how to do — which architecture to build (``model``), how to
+train it (``train``, ``precision``, ``rank``, ``sharding``,
+``checkpoint``) and how to serve it (``serve``). It is:
+
+  * **frozen** — specs are values; deriving a variant goes through
+    :meth:`RunSpec.replace`, never mutation;
+  * **JSON-round-trippable** — ``to_json``/``from_json`` are bit-exact
+    inverses (sorted keys, no float surprises: every field is an int,
+    str, bool or None except learning rates, which JSON represents
+    exactly via repr round-trip);
+  * **self-validating** — unknown keys are rejected on ``from_dict``,
+    and enum-ish fields (precision mode, serve mode, quantize, rank
+    schedule grammar) are checked at construction time, so a spec that
+    exists is a spec that can run.
+
+The facades (api/trainer.py, api/server.py) consume RunSpecs; the CLIs
+(launch/train.py, launch/serve.py, ``python -m repro``) are thin
+argparse -> RunSpec adapters; CheckpointManager embeds the serialized
+spec in every checkpoint sidecar so a snapshot is self-describing —
+``Server.from_checkpoint(path)`` and ``Trainer.resume(path)`` need zero
+re-specified flags.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, Optional
+
+__all__ = [
+    "ModelSpec",
+    "TrainSpec",
+    "PrecisionSpec",
+    "RankScheduleSpec",
+    "ShardingSpec",
+    "ServeSpec",
+    "CheckpointSpec",
+    "RunSpec",
+]
+
+
+# ----------------------------------------------------------------------
+# shared (de)serialization machinery
+# ----------------------------------------------------------------------
+
+class _Spec:
+    """Base for all spec dataclasses: dict/JSON round-trip with
+    unknown-key rejection, and field-validated ``replace``."""
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, data: Dict[str, Any]) -> "_Spec":
+        if not isinstance(data, dict):
+            raise TypeError(f"{cls.__name__}.from_dict wants a dict, "
+                            f"got {type(data).__name__}")
+        fields = {f.name: f for f in dataclasses.fields(cls)}
+        unknown = sorted(set(data) - set(fields))
+        if unknown:
+            raise ValueError(f"{cls.__name__}: unknown key(s) {unknown} "
+                             f"(known: {sorted(fields)})")
+        kw = {}
+        for name, value in data.items():
+            sub = _subspec_type(fields[name])
+            kw[name] = sub.from_dict(value) if sub is not None else value
+        return cls(**kw)
+
+    def replace(self, **overrides) -> "_Spec":
+        """A new spec with ``overrides`` applied. Keys are validated, so
+        a typo raises instead of silently minting a field."""
+        fields = {f.name: f for f in dataclasses.fields(self)}
+        unknown = sorted(set(overrides) - set(fields))
+        if unknown:
+            raise ValueError(f"{type(self).__name__}.replace: unknown "
+                             f"field(s) {unknown} (known: {sorted(fields)})")
+        return dataclasses.replace(self, **overrides)
+
+    def to_json(self, indent: Optional[int] = None) -> str:
+        return json.dumps(self.to_dict(), indent=indent, sort_keys=True)
+
+    @classmethod
+    def from_json(cls, text: str) -> "_Spec":
+        return cls.from_dict(json.loads(text))
+
+
+def _subspec_type(field: dataclasses.Field):
+    """Nested-spec detection: a field whose default is itself a spec
+    instance (RunSpec's sub-specs) recurses through that class's
+    ``from_dict``; everything else is a plain JSON scalar."""
+    return type(field.default) if isinstance(field.default, _Spec) else None
+
+
+def _spec(cls):
+    return dataclasses.dataclass(frozen=True)(cls)
+
+
+# ----------------------------------------------------------------------
+# sub-specs
+# ----------------------------------------------------------------------
+
+@_spec
+class ModelSpec(_Spec):
+    """Reference into the config registry (config/registry.py) plus the
+    declarative SCT overrides a sweep needs: ``rank`` overrides
+    ``cfg.sct.rank``; ``spectral_mlp=False`` is the dense baseline."""
+    arch: str = "smollm2-1.7b"
+    reduced: bool = False
+    rank: Optional[int] = None
+    spectral_mlp: Optional[bool] = None
+
+    def config(self):
+        from repro.config import get_config
+
+        cfg = get_config(self.arch, reduced=self.reduced)
+        sct_kw = {}
+        if self.rank is not None:
+            sct_kw["rank"] = int(self.rank)
+        if self.spectral_mlp is not None:
+            sct_kw["spectral_mlp"] = bool(self.spectral_mlp)
+        return cfg.replace_sct(**sct_kw) if sct_kw else cfg
+
+
+@_spec
+class TrainSpec(_Spec):
+    """The optimization run: step budget, batch geometry, LR schedule
+    inputs, microbatching, and the data/init seed. ``warmup=None`` is
+    the CLI's historical auto rule ``min(100, steps // 10 + 1)``."""
+    steps: int = 100
+    batch: int = 8
+    seq: int = 64
+    lr: float = 1e-3
+    warmup: Optional[int] = None
+    microbatches: int = 1
+    seed: int = 0
+    telemetry: bool = False
+
+    @property
+    def warmup_steps(self) -> int:
+        return self.warmup if self.warmup is not None \
+            else min(100, self.steps // 10 + 1)
+
+
+@_spec
+class PrecisionSpec(_Spec):
+    """The precision contract, with the legacy path an explicit mode
+    rather than a sentinel ``None``:
+
+      legacy  compute in ``ModelConfig.dtype``, fp32 accumulation, no
+              loss scaling — what every run did before --precision grew
+              presets.
+      fp32 / bf16 / mixed — the core/precision.py presets.
+    """
+    mode: str = "legacy"
+
+    def __post_init__(self):
+        from repro.core.precision import LEGACY, POLICIES
+
+        allowed = [LEGACY, *POLICIES]
+        if self.mode not in allowed:
+            raise ValueError(f"precision mode {self.mode!r}; options {allowed}")
+
+    def policy(self):
+        """The optimizer-facing PrecisionPolicy — None for legacy (the
+        optimizer's no-cast, no-scaling path; steps.py resolves the
+        effective dtypes via core/precision.effective_policy)."""
+        from repro.core.precision import precision_policy
+
+        return precision_policy(self.mode)
+
+
+@_spec
+class RankScheduleSpec(_Spec):
+    """Adaptive-rank policy as its CLI grammar string (rank/schedule.py:
+    ``static:K`` | ``step:S=K,...`` | ``energy:T[,kv...]``), or None for
+    fixed-rank training. The string is the serialization format — it is
+    validated at construction by actually parsing it."""
+    schedule: Optional[str] = None
+
+    def __post_init__(self):
+        self.parsed()     # grammar errors surface at spec build time
+
+    def parsed(self):
+        from repro.rank import parse_rank_schedule
+
+        return parse_rank_schedule(self.schedule)
+
+
+@_spec
+class ShardingSpec(_Spec):
+    """Mesh geometry. ``data``/``model`` of None means the launcher
+    heuristic: all visible devices, with the model axis the largest of
+    (16, 8, 4, 2, 1) dividing both the device count and ``cfg.d_ff``;
+    single-device runs get no mesh (plain jit). Explicit values pin the
+    axes (their product must equal the device count)."""
+    data: Optional[int] = None
+    model: Optional[int] = None
+
+    def mesh(self, cfg):
+        import jax
+
+        n_dev = jax.device_count()
+        if self.data is None and self.model is None:
+            if n_dev <= 1:
+                return None
+            n_model = 1
+            for cand in (16, 8, 4, 2, 1):
+                if n_dev % cand == 0 and cfg.d_ff % cand == 0:
+                    n_model = cand
+                    break
+            return jax.make_mesh((n_dev // n_model, n_model), ("data", "model"))
+        n_model = self.model or 1
+        n_data = self.data or n_dev // n_model
+        if n_data * n_model != n_dev:
+            raise ValueError(f"sharding {n_data}x{n_model} wants "
+                             f"{n_data * n_model} devices, have {n_dev}")
+        if n_data == n_model == 1:
+            return None
+        return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+@_spec
+class ServeSpec(_Spec):
+    """The serving side. ``mode="paged"`` is the continuous-batching
+    engine (serving/engine.py) — page geometry, slots, prefill budget,
+    prefix cache, chunked prefill, deadlines, int8 quantization.
+    ``mode="static"`` is the dense (batch, max_seq)-cache path; it only
+    reads ``batch``/``prompt_len``/``gen``/``quantize``. ``rank``
+    resizes spectral groups at checkpoint-load time (cheap serving of a
+    shrunk snapshot); ``gen`` doubles as the default ``max_new_tokens``
+    for ``Server.submit``."""
+    mode: str = "paged"
+    slots: int = 4
+    page_size: int = 16
+    num_pages: int = 64
+    pages_per_seq: int = 8
+    prefill_budget: Optional[int] = 64
+    prefix_cache: bool = False
+    chunked_prefill: bool = False
+    request_timeout: Optional[int] = None
+    quantize: Optional[str] = None
+    rank: Optional[int] = None
+    batch: int = 4
+    prompt_len: int = 16
+    gen: int = 32
+
+    def __post_init__(self):
+        if self.mode not in ("paged", "static"):
+            raise ValueError(f"serve mode {self.mode!r}; options paged|static")
+        if self.quantize not in (None, "int8"):
+            raise ValueError(f"quantize {self.quantize!r}; options int8")
+
+    def paged_config(self):
+        from repro.serving import PagedCacheConfig
+
+        return PagedCacheConfig(
+            page_size=self.page_size,
+            num_pages=self.num_pages,
+            max_slots=self.slots,
+            max_pages_per_seq=self.pages_per_seq,
+        )
+
+
+@_spec
+class CheckpointSpec(_Spec):
+    """Where and how often the run checkpoints. ``directory=None`` means
+    no checkpointing — :meth:`Trainer.fit` requires a directory (the
+    fault-tolerant loop restarts from disk); step-at-a-time
+    ``Trainer.step`` runs fine without one."""
+    directory: Optional[str] = None
+    every: int = 50
+    keep: int = 3
+
+
+# ----------------------------------------------------------------------
+# the top-level spec
+# ----------------------------------------------------------------------
+
+@_spec
+class RunSpec(_Spec):
+    """One experiment, fully described. Sub-specs compose orthogonally;
+    derive variants with :meth:`replace` (sub-spec instances, dicts
+    merged into a sub-spec, or dotted leaf paths):
+
+        spec.replace(precision=PrecisionSpec("mixed"))
+        spec.replace(serve={"quantize": "int8", "slots": 8})
+        spec.replace(**{"train.steps": 500, "serve.rank": 64})
+    """
+    model: ModelSpec = ModelSpec()
+    train: TrainSpec = TrainSpec()
+    precision: PrecisionSpec = PrecisionSpec()
+    rank: RankScheduleSpec = RankScheduleSpec()
+    sharding: ShardingSpec = ShardingSpec()
+    serve: ServeSpec = ServeSpec()
+    checkpoint: CheckpointSpec = CheckpointSpec()
+
+    def replace(self, **overrides) -> "RunSpec":
+        fields = {f.name: f for f in dataclasses.fields(self)}
+        merged: Dict[str, Dict[str, Any]] = {}
+        flat: Dict[str, Any] = {}
+        for key, value in overrides.items():
+            name, dot, leaf = key.partition(".")
+            if name not in fields:
+                raise ValueError(f"RunSpec.replace: unknown field {name!r} "
+                                 f"(known: {sorted(fields)})")
+            if dot:
+                merged.setdefault(name, {})[leaf] = value
+            elif isinstance(value, dict):
+                merged.setdefault(name, {}).update(value)
+            else:
+                expected = type(fields[name].default)
+                if not isinstance(value, expected):
+                    raise TypeError(f"RunSpec.replace: {name} wants "
+                                    f"{expected.__name__} (or a dict / "
+                                    f"dotted '{name}.<field>' override), "
+                                    f"got {type(value).__name__}")
+                flat[name] = value
+        for name, sub_overrides in merged.items():
+            base = flat.get(name, getattr(self, name))
+            flat[name] = base.replace(**sub_overrides)
+        return dataclasses.replace(self, **flat)

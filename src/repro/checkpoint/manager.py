@@ -14,6 +14,12 @@ loading the arrays — serving uses it to pick a snapshot). Passing
 (rank/resize.py: params and Adam moments together) before any device
 placement, so a run checkpointed at rank 128 can resume — or serve —
 at rank 64, and vice versa.
+
+Self-describing checkpoints: a manager constructed with ``run_spec``
+(the serialized RunSpec dict, api/specs.py) embeds it in the same
+sidecar, so a snapshot carries its full experiment description —
+``Server.from_checkpoint(path)`` and ``Trainer.resume(path)`` rebuild
+the run with zero re-specified flags via :meth:`latest_run_spec`.
 """
 from __future__ import annotations
 
@@ -29,10 +35,12 @@ _CKPT_RE = re.compile(r"^step_(\d+)\.npz$")
 
 
 class CheckpointManager:
-    def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = True,
+                 run_spec: Optional[Dict[str, Any]] = None):
         self.directory = directory
         self.keep = keep
         self.async_save = async_save
+        self.run_spec = run_spec
         self._thread: Optional[threading.Thread] = None
         os.makedirs(directory, exist_ok=True)
 
@@ -78,6 +86,8 @@ class CheckpointManager:
         params = state.get("params", state) if isinstance(state, dict) else state
         ranks = rank_metadata(params)
         meta = {"step": step, "ranks": ranks}
+        if self.run_spec is not None:
+            meta["run_spec"] = self.run_spec
         tmp = self._meta_path(step) + ".tmp"
         with open(tmp, "w") as f:
             json.dump(meta, f, indent=1, sort_keys=True)
@@ -94,6 +104,28 @@ class CheckpointManager:
                 return dict(json.load(f)["ranks"])
         except (FileNotFoundError, KeyError, json.JSONDecodeError):
             return None
+
+    def run_spec_for(self, step: int) -> Optional[Dict[str, Any]]:
+        """The serialized RunSpec embedded at ``step``'s save, read from
+        the sidecar without loading any arrays. None for checkpoints
+        written without a spec (pre-API runs restore fine; they just
+        need their flags re-specified)."""
+        try:
+            with open(self._meta_path(step)) as f:
+                return dict(json.load(f)["run_spec"])
+        except (FileNotFoundError, KeyError, json.JSONDecodeError, TypeError):
+            return None
+
+    def latest_run_spec(self) -> Tuple[Optional[int], Optional[Dict[str, Any]]]:
+        """(step, serialized RunSpec) of the newest checkpoint, or
+        (None, None) for an empty directory. The step is returned even
+        when the sidecar carries no spec, so callers can distinguish
+        'no checkpoint' from 'checkpoint without a spec'."""
+        self.wait()
+        steps = self.list_steps()
+        if not steps:
+            return None, None
+        return steps[-1], self.run_spec_for(steps[-1])
 
     def _rotate(self) -> None:
         steps = self.list_steps()

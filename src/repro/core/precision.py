@@ -72,18 +72,43 @@ POLICIES: Dict[str, PrecisionPolicy] = {
                              loss_scaling=True),
 }
 
+# the pre-preset behaviour as an explicit, nameable mode: compute in
+# ModelConfig.dtype, fp32 accumulation, no loss scaling, params stored
+# as init_model made them. The optimizer represents it as precision=None
+# (no cast at init, no scaling branch); everything dtype-shaped goes
+# through effective_policy instead of sentinel-None checks.
+LEGACY = "legacy"
+
 
 def precision_policy(policy: Union[str, PrecisionPolicy, None]) -> Optional[PrecisionPolicy]:
-    """Resolve a policy by name ('fp32' | 'bf16' | 'mixed'), pass through
-    a PrecisionPolicy, or return None (legacy behaviour: compute dtype
-    from ModelConfig.dtype, no loss scaling)."""
+    """Resolve a policy by name ('legacy' | 'fp32' | 'bf16' | 'mixed'),
+    pass through a PrecisionPolicy, or return None. Both None and
+    'legacy' mean the legacy mode — compute dtype from ModelConfig.dtype,
+    no loss scaling — for which the optimizer-facing policy is None;
+    resolve its effective dtypes with :func:`effective_policy`."""
     if policy is None or isinstance(policy, PrecisionPolicy):
         return policy
+    if policy == LEGACY:
+        return None
     try:
         return POLICIES[policy]
     except KeyError:
         raise ValueError(
-            f"unknown precision {policy!r}; options {list(POLICIES)}") from None
+            f"unknown precision {policy!r}; options "
+            f"{[LEGACY, *POLICIES]}") from None
+
+
+def effective_policy(cfg, policy: Union[str, PrecisionPolicy, None]) -> PrecisionPolicy:
+    """The *resolved* precision contract for a (config, policy) pair —
+    always a concrete PrecisionPolicy, never a sentinel. Legacy mode
+    resolves to ``cfg.dtype`` compute with fp32 accumulation and no
+    scaling; presets pass through. Step builders key every dtype and
+    scaling decision on this, so 'no policy given' is just another
+    policy rather than a None threaded through the stack."""
+    pol = precision_policy(policy)
+    if pol is not None:
+        return pol
+    return PrecisionPolicy(name=LEGACY, compute_dtype=cfg.dtype)
 
 
 def cast_tree(tree: Any, dtype) -> Any:

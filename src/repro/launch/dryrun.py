@@ -23,10 +23,12 @@ import argparse  # noqa: E402
 import json  # noqa: E402
 import time  # noqa: E402
 import traceback  # noqa: E402
+from typing import Optional, Sequence, Union  # noqa: E402
 
 import jax  # noqa: E402
 
-from repro.config import ARCH_IDS, SHAPES, get_config, shape_applicable  # noqa: E402
+from repro.api.specs import ModelSpec  # noqa: E402
+from repro.config import ARCH_IDS, SHAPES, shape_applicable  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
 from repro.launch import steps as steps_mod  # noqa: E402
 from repro.launch.variants import apply_variant, VARIANTS  # noqa: E402
@@ -37,9 +39,16 @@ ASSIGNED = ARCH_IDS[:10]  # the 10 assigned architectures
 REPORT_DIR = os.path.join(os.path.dirname(__file__), "../../../reports/dryrun")
 
 
-def run_cell(arch: str, shape_name: str, multi_pod: bool, variant: str | None = None,
-             report_dir: str = REPORT_DIR) -> dict:
-    cfg = get_config(arch)
+def run_cell(model: Union[ModelSpec, str], shape_name: str, multi_pod: bool,
+             variant: str | None = None, report_dir: str = REPORT_DIR) -> dict:
+    """Lower + compile one (model x shape x mesh) cell. ``model`` is a
+    ModelSpec (the API's registry reference — a bare arch-id string is
+    coerced for convenience), so sweeps route through the same
+    declarative spec the launchers use."""
+    if isinstance(model, str):
+        model = ModelSpec(arch=model)
+    arch = model.arch
+    cfg = model.config()
     shape = SHAPES[shape_name]
     ok, why = shape_applicable(cfg, shape)
     mesh_name = "2x16x16" if multi_pod else "16x16"
@@ -94,14 +103,14 @@ def _write(report_dir: str, tag: str, result: dict) -> None:
         json.dump(result, f, indent=1, default=str)
 
 
-def main() -> None:
+def main(argv: Optional[Sequence[str]] = None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="all")
     ap.add_argument("--shape", default="all")
     ap.add_argument("--mesh", default="16x16", choices=["16x16", "2x16x16", "both"])
     ap.add_argument("--variant", default=None, choices=[None] + list(VARIANTS))
     ap.add_argument("--report-dir", default=REPORT_DIR)
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
     archs = ASSIGNED if args.arch == "all" else [args.arch]
     shapes = list(SHAPES) if args.shape == "all" else [args.shape]
@@ -110,7 +119,8 @@ def main() -> None:
     for arch in archs:
         for shape in shapes:
             for mp in meshes:
-                r = run_cell(arch, shape, mp, args.variant, args.report_dir)
+                r = run_cell(ModelSpec(arch=arch), shape, mp, args.variant,
+                             args.report_dir)
                 status = r["status"]
                 extra = ""
                 if status == "ok":

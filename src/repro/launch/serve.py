@@ -1,4 +1,7 @@
-"""Serving launcher.
+"""Serving launcher — a thin argparse adapter over the experiment API:
+flags map onto a RunSpec (api/specs.py) and the paged/streaming path is
+the :class:`repro.api.Server` facade; this file keeps only flag parsing,
+trace construction, and the --verify oracle checks.
 
 Static mode (the original path): one batch, one shared prompt length,
 dense ``(batch, max_seq)`` cache — compile once, serve any length up to
@@ -8,12 +11,15 @@ max_seq:
       --reduced --batch 4 --prompt-len 16 --gen 32
 
 Streaming mode (continuous batching + paged KV cache): replays a trace
-of staggered, variable-length requests through the ServingEngine —
+of staggered, variable-length requests through the Server —
 requests arrive mid-flight, join free decode slots, and share one page
 pool:
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \\
       --reduced --paged --stream [--verify]
+
+(equivalently: ``python -m repro serve ...``; ``--dump-spec`` prints
+the resolved RunSpec JSON and exits.)
 
 ``--verify`` re-decodes every request through the static path and
 checks the greedy outputs match token for token.
@@ -36,18 +42,26 @@ weights* — the greedy outputs of the int8 runtime must match it token
 for token (same effective weights, so any divergence is a bug in the
 on-the-fly dequant path, not quantization noise). The greedy agreement
 against the original unquantized weights is reported as a diagnostic.
+
+Checkpoint serving: ``--ckpt-dir`` loads the newest snapshot (with
+``--serve-rank`` resizing spectral groups at load). The zero-flag form
+— model and serving geometry read from the checkpoint's embedded
+RunSpec — is the programmatic ``Server.from_checkpoint(path)``
+(docs/api.md); the CLI keeps explicit flags so pre-API checkpoints and
+flag overrides keep working.
 """
 from __future__ import annotations
 
 import argparse
 import functools
 import time
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config import get_config
+from repro.api import ModelSpec, RunSpec, ServeSpec, Server
 from repro.models.model import (
     init_model,
     init_decode_state,
@@ -116,28 +130,18 @@ def static_greedy_reference(cfg, params, prompt, gen, max_seq):
     return np.asarray(toks, dtype=np.int32)
 
 
-def run_stream(args, cfg, params) -> None:
-    from repro.serving import PagedCacheConfig, dequantize_tree
-    from repro.serving.engine import ServingEngine
+def run_stream(args, spec: RunSpec, params) -> None:
+    from repro.serving import dequantize_tree
 
-    pcfg = PagedCacheConfig(
-        page_size=args.page_size,
-        num_pages=args.num_pages,
-        max_slots=args.slots,
-        max_pages_per_seq=args.pages_per_seq,
-    )
-    engine = ServingEngine(cfg, params, pcfg,
-                           prefill_token_budget=args.prefill_budget,
-                           quantize=args.quantize,
-                           prefix_cache=args.prefix_cache,
-                           chunked_prefill=args.chunked_prefill)
+    server = Server(spec, params)
+    cfg, pcfg = server.cfg, spec.serve.paged_config()
     trace = build_trace(args, cfg.vocab, pcfg)
     print(f"streaming {len(trace)} requests, prompt lens "
           f"{sorted({r.prompt_len for r in trace})}, slots={pcfg.max_slots}, "
           f"pool={pcfg.num_pages}x{pcfg.page_size} tokens")
-    out = engine.run(trace)
-    engine.sched.check_invariants()
-    st = engine.stats()
+    out = server.run(trace)
+    server.engine.sched.check_invariants()
+    st = server.stats()
     print(f"served {int(st['requests'])} requests: "
           f"{int(st['prefill_tokens'])} prefill + {int(st['generated_tokens'])} generated "
           f"tokens in {st['wall_s']:.2f}s ({st['tokens_per_s']:.1f} tok/s)")
@@ -151,7 +155,7 @@ def run_stream(args, cfg, params) -> None:
         print(f"prefix cache: {saved}/{total} prompt tokens served from cache "
               f"({100.0 * saved / max(total, 1):.0f}% prefill saved), "
               f"page hit-rate {100.0 * hit / look:.0f}%"
-              + ("" if engine.prefix_cache else
+              + ("" if server.engine.prefix_cache else
                  " [family opted out: recurrent state, exact-match only]"))
     print(f"inter-token latency: p50 {st['itl_p50_s'] * 1e3:.1f} ms, "
           f"p99 {st['itl_p99_s'] * 1e3:.1f} ms")
@@ -168,13 +172,13 @@ def run_stream(args, cfg, params) -> None:
     if args.verify:
         # oracle: fp32 static path over the engine's effective weights
         # (dequantized when --quantize) — must match token for token
-        oracle_params = dequantize_tree(engine.params) if args.quantize else params
+        oracle_params = dequantize_tree(server.params) if args.quantize else params
         bad = 0
         for r in trace:
             ref = static_greedy_reference(cfg, oracle_params, r.prompt,
                                           r.max_new_tokens, pcfg.max_seq)
             got = out[r.rid]
-            if engine.last_statuses.get(r.rid) != "finished":
+            if server.last_statuses.get(r.rid) != "finished":
                 # timed-out/cancelled: partial output must still be a
                 # prefix of the oracle's tokens
                 ok = np.array_equal(ref[:len(got)], got)
@@ -244,7 +248,7 @@ def run_static(args, cfg, params) -> np.ndarray:
     return gen
 
 
-def main() -> None:
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-1b")
     ap.add_argument("--reduced", action="store_true")
@@ -297,14 +301,50 @@ def main() -> None:
                     help="resize spectral groups to this rank at load time "
                          "(cheap serving from a higher-rank training "
                          "snapshot; requires --ckpt-dir)")
-    args = ap.parse_args()
+    ap.add_argument("--dump-spec", action="store_true",
+                    help="print the resolved RunSpec JSON and exit")
+    return ap
+
+
+def build_spec(args: argparse.Namespace) -> RunSpec:
+    """argparse Namespace -> RunSpec: the whole adapter. Trace-shape
+    knobs (--requests, --arrive-every, --shared-prefix, --seed) stay
+    CLI-side — they describe the synthetic workload, not the runtime."""
+    return RunSpec(
+        model=ModelSpec(arch=args.arch, reduced=args.reduced),
+        serve=ServeSpec(
+            mode="paged" if args.paged else "static",
+            slots=args.slots,
+            page_size=args.page_size,
+            num_pages=args.num_pages,
+            pages_per_seq=args.pages_per_seq,
+            prefill_budget=args.prefill_budget,
+            prefix_cache=args.prefix_cache,
+            chunked_prefill=args.chunked_prefill,
+            request_timeout=args.request_timeout,
+            quantize=args.quantize,
+            rank=args.serve_rank,
+            batch=args.batch,
+            prompt_len=args.prompt_len,
+            gen=args.gen,
+        ),
+    )
+
+
+def main(argv: Optional[Sequence[str]] = None) -> None:
+    args = build_parser().parse_args(argv)
 
     if args.paged != args.stream:
         raise SystemExit("--paged and --stream go together (static mode: neither)")
     if args.serve_rank is not None and args.ckpt_dir is None:
         raise SystemExit("--serve-rank needs --ckpt-dir")
 
-    cfg = get_config(args.arch, reduced=args.reduced)
+    spec = build_spec(args)
+    if args.dump_spec:
+        print(spec.to_json(indent=2))
+        return
+
+    cfg = spec.model.config()
     if args.ckpt_dir:
         from repro.serving.engine import params_from_checkpoint
 
@@ -321,7 +361,7 @@ def main() -> None:
     else:
         params = init_model(jax.random.PRNGKey(args.seed), cfg)
     if args.paged:
-        run_stream(args, cfg, params)
+        run_stream(args, spec, params)
         return
 
     if args.quantize:

@@ -15,7 +15,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.config.model_config import ModelConfig
 from repro.config.shapes import ShapeSpec, input_specs
-from repro.core.precision import scale_loss
+from repro.core.precision import effective_policy, scale_loss
 from repro.models.model import init_model, train_loss, prefill, decode_step
 from repro.optim import make_sct_optimizer, SCTOptimizer
 from repro.sharding.rules import param_pspecs, set_current_mesh, constrain, dp_axes
@@ -52,17 +52,19 @@ def make_train_step(cfg: ModelConfig, optimizer: Optional[SCTOptimizer] = None,
     computed on the post-update factors inside the same jit) into the
     metrics dict under ``rank/*`` keys; dense models emit nothing."""
     opt = optimizer or make_sct_optimizer(cfg)
-    pol = opt.precision
-    cfg_eff = cfg if pol is None else cfg.replace(dtype=pol.compute_dtype)
-    accum_dtype = jnp.float32 if pol is None else pol.accum_jnp
+    # always a concrete policy: the legacy precision mode resolves
+    # to (cfg.dtype compute, fp32 accum, no scaling) instead of a None
+    # sentinel branching every dtype decision below
+    pol = effective_policy(cfg, opt.precision)
+    cfg_eff = cfg.replace(dtype=pol.compute_dtype)
+    accum_dtype = pol.accum_jnp
 
     def train_step(state, batch):
         params = state["params"]
         # scaling requires BOTH the policy and the state entry (a state
         # restored from a non-mixed checkpoint lacks it) — mirrored by
         # SCTOptimizer.apply, so scale and unscale always agree
-        scaling = (pol is not None and pol.loss_scaling
-                   and "loss_scale" in state)
+        scaling = pol.loss_scaling and "loss_scale" in state
         scale = state["loss_scale"]["scale"] if scaling else None
 
         def loss_fn(params, batch):

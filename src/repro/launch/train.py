@@ -1,7 +1,15 @@
-"""Training launcher.
+"""Training launcher — a thin argparse adapter over the experiment API
+(api/specs.py + api/trainer.py). Every flag maps onto a RunSpec field;
+the Trainer facade owns the wiring (mesh, optimizer, rank controller,
+fault-tolerant loop), so this file is only flag parsing and end-of-run
+printing.
 
   PYTHONPATH=src python -m repro.launch.train --arch smollm2-1.7b \\
       --reduced --steps 200 --batch 8 --seq 64 --ckpt-dir /tmp/run1
+
+(equivalently: ``python -m repro train ...``). ``--dump-spec`` prints
+the resolved RunSpec JSON and exits — the declarative record of what
+the flags mean, replayable programmatically via ``RunSpec.from_json``.
 
 Runs on whatever devices exist (1 CPU here; the production mesh on a
 real slice) with the same code path the dry-run proves at 512 devices:
@@ -10,24 +18,21 @@ sharded state, jitted train_step with donation, fault-tolerant loop.
 from __future__ import annotations
 
 import argparse
-import os
+from typing import Optional, Sequence
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.config import get_config, SHAPES
-from repro.config.shapes import ShapeSpec
-from repro.data.synthetic import SyntheticLMDataset
-from repro.launch import steps as steps_mod
-from repro.optim import make_sct_optimizer
-from repro.models.model import init_model
-from repro.rank import RankController, parse_rank_schedule
-from repro.runtime.train_loop import TrainLoop, TrainLoopConfig
-from repro.sharding.rules import set_current_mesh
+from repro.api import (
+    CheckpointSpec,
+    ModelSpec,
+    PrecisionSpec,
+    RankScheduleSpec,
+    RunSpec,
+    Trainer,
+    TrainSpec,
+    log_metrics,
+)
 
 
-def main() -> None:
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm2-1.7b")
     ap.add_argument("--reduced", action="store_true",
@@ -36,11 +41,14 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--lr", type=float, default=1e-3)
-    ap.add_argument("--precision", choices=["fp32", "bf16", "mixed"], default=None,
-                    help="fp32: everything fp32; bf16: bf16 factors+compute; "
+    ap.add_argument("--precision",
+                    choices=["legacy", "fp32", "bf16", "mixed"],
+                    default="legacy",
+                    help="legacy: compute in the config dtype, no scaling "
+                         "(the default, now an explicit mode); fp32: "
+                         "everything fp32; bf16: bf16 factors+compute; "
                          "mixed: fp32 master factors, bf16 compute, dynamic "
-                         "loss scaling with overflow skip (default: legacy "
-                         "config dtype, no scaling)")
+                         "loss scaling with overflow skip")
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--rank-schedule", default=None,
                     help="adaptive spectral rank schedule: 'static:K' "
@@ -55,86 +63,37 @@ def main() -> None:
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+    ap.add_argument("--dump-spec", action="store_true",
+                    help="print the resolved RunSpec JSON and exit")
+    return ap
 
-    cfg = get_config(args.arch, reduced=args.reduced)
-    opt = make_sct_optimizer(cfg, lr=args.lr, warmup=min(100, args.steps // 10 + 1),
-                             total_steps=args.steps, precision=args.precision)
 
-    n_dev = jax.device_count()
-    mesh = None
-    if n_dev > 1:
-        n_model = 1
-        for cand in (16, 8, 4, 2, 1):
-            if n_dev % cand == 0 and cfg.d_ff % cand == 0:
-                n_model = cand
-                break
-        mesh = jax.make_mesh((n_dev // n_model, n_model), ("data", "model"))
-        set_current_mesh(mesh)
-
-    rank_schedule = parse_rank_schedule(args.rank_schedule)
-    telemetry = args.telemetry or rank_schedule is not None
-
-    step_fn = steps_mod.make_train_step(cfg, opt, microbatches=args.microbatches,
-                                        telemetry=telemetry)
-    shape = ShapeSpec("cli", args.seq, args.batch, "train")
-    if mesh is not None:
-        state_sh, batch_sh = steps_mod.train_shardings(cfg, shape, mesh)
-        step_fn = jax.jit(step_fn, in_shardings=(state_sh, batch_sh),
-                          out_shardings=(state_sh, None), donate_argnums=(0,))
-        state_shardings = state_sh
-    else:
-        step_fn = jax.jit(step_fn, donate_argnums=(0,))
-        state_shardings = None
-
-    controller = None
-    if rank_schedule is not None:
-        controller = RankController(cfg, opt, rank_schedule, mesh=mesh,
-                                    shape=shape, microbatches=args.microbatches,
-                                    seed=args.seed)
-
-    ds = SyntheticLMDataset(vocab=cfg.vocab, seq_len=args.seq, seed=args.seed)
-
-    def batch_iter(start_step):
-        step = start_step
-        while True:
-            t, l = ds.batch(step, args.batch)
-            batch = {"tokens": jnp.asarray(t), "labels": jnp.asarray(l)}
-            if cfg.family == "encdec":
-                from repro.data.vision_stub import audio_frame_stub
-                batch["encoder_frames"] = jnp.asarray(
-                    audio_frame_stub(args.batch, cfg.encoder_seq, cfg.d_model))
-            yield batch
-            step += 1
-
-    def init_state():
-        params = init_model(jax.random.PRNGKey(args.seed), cfg)
-        return opt.init(params)
-
-    def log(step, metrics):
-        line = f"step {step:6d}  loss {metrics['loss']:.4f}  ce {metrics['ce_loss']:.4f}"
-        if "loss_scale" in metrics:
-            line += f"  scale {metrics['loss_scale']:.0f}"
-        if "rank/mean" in metrics:
-            line += (f"  rank {metrics['rank/mean']:.0f}"
-                     f" (eff {metrics['rank/eff_mean']:.1f},"
-                     f" energy {metrics['rank/energy_top']:.3f},"
-                     f" ortho {metrics['rank/ortho_max']:.1e})")
-        print(line, flush=True)
-
-    loop = TrainLoop(
-        step_fn=step_fn,
-        batch_iter_factory=batch_iter,
-        ckpt_dir=args.ckpt_dir,
-        cfg=TrainLoopConfig(total_steps=args.steps, checkpoint_every=args.ckpt_every),
-        init_state_fn=init_state,
-        state_shardings=state_shardings,
-        metrics_cb=log,
-        rank_controller=controller,
+def build_spec(args: argparse.Namespace) -> RunSpec:
+    """argparse Namespace -> RunSpec: the whole adapter."""
+    return RunSpec(
+        model=ModelSpec(arch=args.arch, reduced=args.reduced),
+        train=TrainSpec(steps=args.steps, batch=args.batch, seq=args.seq,
+                        lr=args.lr, microbatches=args.microbatches,
+                        seed=args.seed, telemetry=args.telemetry),
+        precision=PrecisionSpec(mode=args.precision or "legacy"),
+        rank=RankScheduleSpec(schedule=args.rank_schedule),
+        checkpoint=CheckpointSpec(directory=args.ckpt_dir,
+                                  every=args.ckpt_every),
     )
-    state = loop.run()
-    if controller is not None:
-        for at, old, new in controller.resizes:
+
+
+def main(argv: Optional[Sequence[str]] = None) -> None:
+    args = build_parser().parse_args(argv)
+    spec = build_spec(args)
+    if args.dump_spec:
+        print(spec.to_json(indent=2))
+        return
+
+    trainer = Trainer(spec, metrics_cb=log_metrics)
+    state = trainer.fit()
+
+    if trainer.controller is not None:
+        for at, old, new in trainer.controller.resizes:
             print(f"rank resize @ step {at}: {old} -> {new}")
     from repro.core.tree import max_orthogonality_error
 
@@ -142,7 +101,7 @@ def main() -> None:
     if "loss_scale" in state:
         print(f"loss scale: {float(state['loss_scale']['scale']):.0f}  "
               f"overflow-skipped steps: {int(state['loss_scale']['skipped'])} "
-              f"(loop saw {loop.overflow_steps})")
+              f"(loop saw {trainer.loop.overflow_steps})")
 
 
 if __name__ == "__main__":

@@ -55,11 +55,15 @@ class TrainLoop:
         metrics_cb: Optional[Callable[[int, Dict], None]] = None,
         failure_hook: Optional[Callable[[int], None]] = None,
         rank_controller: Optional[Any] = None,
+        checkpoint_manager: Optional[CheckpointManager] = None,
     ):
         self.step_fn = step_fn
         self.batch_iter_factory = batch_iter_factory
         self.cfg = cfg
-        self.mgr = CheckpointManager(ckpt_dir, keep=cfg.keep_checkpoints)
+        # an injected manager wins — the API facade passes one carrying
+        # the serialized RunSpec so every sidecar is self-describing
+        self.mgr = checkpoint_manager or CheckpointManager(
+            ckpt_dir, keep=cfg.keep_checkpoints)
         self.init_state_fn = init_state_fn
         self.state_shardings = state_shardings
         self.metrics_cb = metrics_cb

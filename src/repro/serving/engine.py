@@ -166,6 +166,20 @@ class ServingEngine:
         self.wall_s = 0.0
         self.step_times: Deque[float] = deque(maxlen=LATENCY_WINDOW)
         self.last_statuses: Dict[int, str] = {}
+        # completions drained from the scheduler but not yet handed to a
+        # consumer — survives an abandoned serve() generator (several
+        # requests can finish in one step; closing the generator between
+        # their yields must not lose the rest)
+        self._undelivered: List[tuple] = []
+        # requests handed to serve() but not yet submitted to the
+        # scheduler (future arrivals) — engine state, not generator
+        # state, for the same reason: an abandoned or never-iterated
+        # generator must not lose them
+        self._backlog: List[Request] = []
+        # the engine-step clock arrivals and deadlines are measured
+        # against; persists across an abandoned generator (a recovery
+        # must not restart deadlines) and resets per fresh trace
+        self._clock = 0
 
     # -------------------------------------------------------------- load --
     @classmethod
@@ -189,60 +203,126 @@ class ServingEngine:
         return cls(cfg, params, pcfg, **kw)
 
     # --------------------------------------------------------------- run --
-    def run(self, requests: Sequence[Request]) -> Dict[int, np.ndarray]:
-        """Serve a trace to completion. ``Request.arrival`` staggers
-        enqueueing in engine-step time (a request is invisible to the
-        scheduler before its arrival step). Returns rid -> generated
-        token ids (first token from prefill, rest from decode); results
-        are drained from the scheduler every step, so neither side
-        accumulates state across requests. Per-rid outcomes
-        (finished/cancelled/timeout) land in :attr:`last_statuses`."""
-        pending: List[Request] = sorted(requests, key=lambda r: r.arrival)
-        results: Dict[int, np.ndarray] = {}
+    def serve(self, requests: Sequence[Request]):
+        """Generator form of the serving loop: drives the trace one
+        engine step per iteration and yields ``(rid, tokens, status)``
+        as each request finishes (status ``finished`` / ``cancelled`` /
+        ``timeout``; tokens are the int32 generated ids, partial for
+        evicted requests). ``Request.arrival`` staggers enqueueing in
+        engine-step time (a request is invisible to the scheduler before
+        its arrival step). Results are drained from the scheduler every
+        step, so neither side accumulates state across requests; per-rid
+        outcomes also land in :attr:`last_statuses`. :meth:`run` is the
+        collect-everything wrapper; ``api.Server.stream`` is the
+        incremental consumer.
+
+        Abandonment-safe: the request backlog and drained-but-unyielded
+        completions live on the engine, so a generator dropped mid-trace
+        (or never iterated) strands nothing — a later ``serve(())`` /
+        :meth:`run` picks up exactly where it left off (see
+        :attr:`has_pending_work`)."""
+        # registration happens eagerly, NOT inside the generator body: a
+        # never-iterated generator must still have handed its requests
+        # to the engine. Checked before the merge: a fresh trace restarts
+        # engine-step time, while any leftover work — backlog included —
+        # keeps the clock so arrivals/deadlines retain their meaning.
+        if not self.has_pending_work:
+            self._clock = 0
+        self._backlog = sorted(self._backlog + list(requests),
+                               key=lambda r: r.arrival)
+        return self._serve_loop()
+
+    def _deliver(self):
+        """Yield undelivered completions, popping before the yield (a
+        consumer that bails mid-delivery never sees one twice) and
+        re-recording the per-rid outcome (a stranded completion's
+        status must survive the reset a recovery run starts with)."""
+        while self._undelivered:
+            rid, tokens, status = self._undelivered.pop(0)
+            self.last_statuses[rid] = status
+            yield (rid, tokens, status)
+
+    def _serve_loop(self):
         self.last_statuses = {}
         t0 = time.time()
-        clock = 0
         last_decode_t = None
-        while pending or self.sched.has_work:
-            while pending and pending[0].arrival <= clock:
-                self.sched.submit(pending.pop(0))
-            self.sched.expire_deadlines(clock)
-            for seq in self.sched.admit():
-                self.prompt_tokens += seq.request.prompt_len
-                self.prefix_shared_tokens += seq.shared_len
-            self._prefill_step()
-            if any(s.status == "decoding" for s in self.sched.active.values()):
-                self._decode_once()
-                # inter-token latency = gap between consecutive decode
-                # completions, so prefill stalls *between* decode steps
-                # (what chunked prefill exists to bound) count against
-                # the tail; the first decode of a run is TTFT, not ITL
-                now = time.time()
-                if last_decode_t is not None:
-                    self.step_times.append(now - last_decode_t)
-                last_decode_t = now
-            self._drain(results)
-            clock += 1
-        jax.block_until_ready(jax.tree.leaves(self.state)[0])
-        self.wall_s += time.time() - t0
-        return results
+        try:
+            # completions stranded by a previously abandoned generator
+            # are delivered first
+            yield from self._deliver()
+            while self._backlog or self.sched.has_work:
+                while self._backlog and self._backlog[0].arrival <= self._clock:
+                    self.sched.submit(self._backlog.pop(0))
+                self.sched.expire_deadlines(self._clock)
+                for seq in self.sched.admit():
+                    self.prompt_tokens += seq.request.prompt_len
+                    self.prefix_shared_tokens += seq.shared_len
+                self._prefill_step()
+                if any(s.status == "decoding" for s in self.sched.active.values()):
+                    self._decode_once()
+                    # inter-token latency = gap between consecutive decode
+                    # completions, so prefill stalls *between* decode steps
+                    # (what chunked prefill exists to bound) count against
+                    # the tail; the first decode of a run is TTFT, not ITL
+                    now = time.time()
+                    if last_decode_t is not None:
+                        self.step_times.append(now - last_decode_t)
+                    last_decode_t = now
+                self._undelivered.extend(
+                    (seq.request.rid,
+                     np.asarray(seq.generated, dtype=np.int32),
+                     seq.status)
+                    for seq in self._drain())
+                yield from self._deliver()
+                self._clock += 1
+            jax.block_until_ready(jax.tree.leaves(self.state)[0])
+        finally:
+            # wall clock closes even when the consumer abandons the
+            # generator mid-trace (stats stay meaningful either way)
+            self.wall_s += time.time() - t0
+
+    def run(self, requests: Sequence[Request]) -> Dict[int, np.ndarray]:
+        """Serve a trace to completion: rid -> generated token ids
+        (first token from prefill, rest from decode). The batch wrapper
+        over :meth:`serve`."""
+        return {rid: tokens for rid, tokens, _ in self.serve(requests)}
+
+    @property
+    def has_pending_work(self) -> bool:
+        """True while a fresh :meth:`serve` call with no new requests
+        can still produce completions: a future-arrival backlog,
+        in-flight scheduler work, or results drained but not yet
+        delivered (an abandoned generator)."""
+        return (bool(self._undelivered) or bool(self._backlog)
+                or self.sched.has_work)
+
+    def known_rids(self) -> set:
+        """Every rid the runtime currently owns — backlog, queued,
+        active, or finished-but-undelivered. Results key on rid, so
+        admitting a duplicate would silently cross-wire two requests;
+        submitters check here."""
+        rids = {r.rid for r in self._backlog}
+        rids.update(r.rid for r in self.sched.waiting)
+        rids.update(seq.request.rid for seq in self.sched.active.values())
+        rids.update(rid for rid, _, _ in self._undelivered)
+        return rids
 
     def cancel(self, rid: int) -> bool:
         """Cancel a request mid-flight (queue or active). Partial
         results surface on the next drain with status ``cancelled``."""
         return self.sched.cancel(rid)
 
-    def _drain(self, results: Dict[int, np.ndarray]) -> None:
-        for seq in self.sched.drain_finished():
-            rid = seq.request.rid
-            results[rid] = np.asarray(seq.generated, dtype=np.int32)
-            self.last_statuses[rid] = seq.status
+    def _drain(self) -> List[SeqState]:
+        drained = self.sched.drain_finished()
+        for seq in drained:
+            self.last_statuses[seq.request.rid] = seq.status
             self.requests_done += 1
             self.generated_total += len(seq.generated)
             if seq.status == "cancelled":
                 self.cancelled += 1
             elif seq.status == "timeout":
                 self.timed_out += 1
+        return drained
 
     # ------------------------------------------------------------- steps --
     def _prefill_step(self) -> None:

@@ -1,0 +1,253 @@
+"""Trainer/Server facade contract (api/trainer.py, api/server.py):
+checkpoints are self-describing — train → save embeds the RunSpec in
+the sidecar, ``Server.from_checkpoint(path)`` serves with zero
+re-specified flags and matches the static greedy oracle token for
+token, ``Trainer.resume`` continues a run (and a ``rank.schedule``
+override exercises the cross-rank restore path)."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    CheckpointSpec,
+    ModelSpec,
+    RunSpec,
+    Server,
+    ServeSpec,
+    Trainer,
+    TrainSpec,
+)
+from repro.checkpoint.manager import CheckpointManager
+from repro.launch.serve import static_greedy_reference
+from repro.rank import current_ranks
+from repro.serving import Request
+
+ARCH = "llama3.2-1b"
+
+
+def _spec(ckpt_dir, steps=4):
+    return RunSpec(
+        model=ModelSpec(ARCH, reduced=True),
+        train=TrainSpec(steps=steps, batch=4, seq=32, lr=3e-3),
+        checkpoint=CheckpointSpec(
+            directory=None if ckpt_dir is None else str(ckpt_dir), every=2),
+        serve=ServeSpec(page_size=8, num_pages=32, slots=2,
+                        pages_per_seq=6, gen=6),
+    )
+
+
+@pytest.fixture(scope="module")
+def trained(tmp_path_factory):
+    """One short fit shared by the read-only checkpoint tests."""
+    ckpt_dir = tmp_path_factory.mktemp("api_ckpt")
+    spec = _spec(ckpt_dir)
+    trainer = Trainer(spec)
+    state = trainer.fit()
+    return spec, str(ckpt_dir), state
+
+
+def _prompts(vocab, lens=(5, 9)):
+    rng = np.random.default_rng(3)
+    return [rng.integers(0, vocab, size=(n,)).astype(np.int32) for n in lens]
+
+
+# ---------------------------------------------------------------------------
+def test_fit_embeds_run_spec_in_sidecar(trained):
+    spec, ckpt_dir, _ = trained
+    step, spec_dict = CheckpointManager(ckpt_dir).latest_run_spec()
+    assert step == spec.train.steps
+    assert spec_dict == spec.to_dict()
+    assert RunSpec.from_dict(spec_dict) == spec
+
+
+def test_server_from_checkpoint_zero_flags_matches_oracle(trained):
+    spec, ckpt_dir, _ = trained
+    server = Server.from_checkpoint(ckpt_dir)
+    assert server.spec == spec                     # nothing re-specified
+    assert server.checkpoint_step == spec.train.steps
+    prompts = _prompts(server.cfg.vocab)
+    rids = [server.submit(p) for p in prompts]     # gen from the spec
+    out = server.run()
+    max_seq = spec.serve.paged_config().max_seq
+    for rid, prompt in zip(rids, prompts):
+        ref = static_greedy_reference(server.cfg, server.params, prompt,
+                                      spec.serve.gen, max_seq)
+        np.testing.assert_array_equal(out[rid], ref)
+        assert server.last_statuses[rid] == "finished"
+
+
+def test_server_from_checkpoint_rank_override(trained):
+    spec, ckpt_dir, state = trained
+    (base_rank,) = set(current_ranks(state["params"]))
+    target = base_rank // 2
+    server = Server.from_checkpoint(ckpt_dir, **{"serve.rank": target})
+    assert set(current_ranks(server.params)) == {target}
+    # the resized model still serves token-identically to its own
+    # static oracle (resize correctness is rank/'s concern; the facade
+    # must wire the resized params through unchanged)
+    prompt = _prompts(server.cfg.vocab, lens=(7,))[0]
+    rid = server.submit(prompt, max_new_tokens=5)
+    out = server.run()
+    ref = static_greedy_reference(server.cfg, server.params, prompt, 5,
+                                  spec.serve.paged_config().max_seq)
+    np.testing.assert_array_equal(out[rid], ref)
+
+
+def test_server_stream_yields_completions(trained):
+    _, ckpt_dir, _ = trained
+    server = Server.from_checkpoint(ckpt_dir)
+    rids = {server.submit(p, max_new_tokens=4)
+            for p in _prompts(server.cfg.vocab, lens=(4, 6, 8))}
+    events = list(server.stream())
+    assert {rid for rid, _, _ in events} == rids
+    assert all(status == "finished" for _, _, status in events)
+    assert all(len(tokens) == 4 for _, tokens, _ in events)
+    with pytest.raises(ValueError, match="submit"):
+        server.run()                               # queue already drained
+    # explicit rids: auto-assignment continues past them, and a
+    # duplicate is an error (results key on rid)
+    assert server.submit([1, 2, 3], rid=7) == 7
+    assert server.submit([1, 2, 3]) == 8
+    with pytest.raises(ValueError, match="already queued"):
+        server.submit([1, 2, 3], rid=7)
+
+
+def test_trainer_resume_zero_flags_extends_run(trained, tmp_path):
+    spec, ckpt_dir, state = trained
+    trainer = Trainer.resume(ckpt_dir, **{"train.steps": spec.train.steps + 2})
+    # everything but the override came from the sidecar
+    assert trainer.spec.model == spec.model
+    assert trainer.spec.train.lr == spec.train.lr
+    new_state = trainer.fit()
+    assert int(new_state["step"]) == int(state["step"]) + 2
+
+
+def test_trainer_resume_cross_rank_override(tmp_path):
+    spec = _spec(tmp_path / "ckpt", steps=2)
+    Trainer(spec).fit()
+    trainer = Trainer.resume(str(tmp_path / "ckpt"),
+                             **{"rank.schedule": "static:8",
+                                "train.steps": 3})
+    metrics = trainer.step()                       # restores + resizes
+    assert set(current_ranks(trainer.params)) == {8}
+    assert np.isfinite(float(metrics["loss"]))
+    assert trainer.controller.resizes              # the event was recorded
+
+
+def test_trainer_resume_requires_checkpoint_and_spec(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        Trainer.resume(str(tmp_path / "empty"))
+    # the read path must not create the mistyped directory
+    assert not os.path.exists(tmp_path / "empty")
+    # a pre-API checkpoint (no embedded spec) is a clear error, not a
+    # silent default
+    mgr = CheckpointManager(str(tmp_path / "old"))
+    mgr.save(1, {"x": np.zeros((2,), np.float32)}, block=True)
+    with pytest.raises(ValueError, match="predates spec embedding"):
+        Trainer.resume(str(tmp_path / "old"))
+
+
+def test_server_stream_abandoned_midway_recovers(trained):
+    """A stream() dropped mid-trace strands its remaining requests in
+    the engine; a fresh stream() with nothing new submitted drains
+    them — outcomes included — instead of raising."""
+    _, ckpt_dir, _ = trained
+    server = Server.from_checkpoint(ckpt_dir)
+    rids = {server.submit(p, max_new_tokens=3)
+            for p in _prompts(server.cfg.vocab, lens=(4, 5, 6))}
+    gen = server.stream()
+    first_rid, _, _ = next(gen)                    # one completion, then bail
+    # in-flight rids are still owned by the runtime: duplicates rejected
+    with pytest.raises(ValueError, match="already queued"):
+        server.submit([1, 2, 3], rid=min(rids - {first_rid}))
+    gen.close()
+    rest = list(server.stream())                   # recovery: empty take
+    assert {rid for rid, _, _ in rest} == rids - {first_rid}
+    assert all(server.last_statuses[rid] == "finished"
+               for rid in rids - {first_rid})
+    with pytest.raises(ValueError, match="submit"):
+        server.run()                               # now truly drained
+
+
+def test_server_stream_future_arrivals_and_unconsumed_generators(trained):
+    """Requests live on the engine, not in generator locals: a stream()
+    abandoned before a future arrival lands — or never iterated at all
+    — loses nothing; the recovery call serves everything."""
+    _, ckpt_dir, _ = trained
+    server = Server.from_checkpoint(ckpt_dir)
+    p_now, p_later = _prompts(server.cfg.vocab, lens=(4, 5))
+    r_now = server.submit(p_now, max_new_tokens=3)
+    r_later = server.submit(p_later, max_new_tokens=3, arrival=40)
+    gen = server.stream()
+    first_rid, _, _ = next(gen)                    # r_now finishes first
+    assert first_rid == r_now
+    gen.close()                                    # r_later never arrived
+    out = server.run()                             # recovery serves it
+    assert set(out) == {r_later}
+    # never-iterated generator: registration already happened
+    r3 = server.submit(p_now, max_new_tokens=2)
+    server.stream()                                # discarded unconsumed
+    assert set(server.run()) == {r3}
+
+
+def test_server_auto_rid_dodges_explicit_trace_rids(trained):
+    """Auto-assigned rids must skip rids the engine learned from an
+    explicit Request list (results key on rid)."""
+    _, ckpt_dir, _ = trained
+    server = Server.from_checkpoint(ckpt_dir)
+    (p,) = _prompts(server.cfg.vocab, lens=(4,))
+    server.stream([Request(rid=0, prompt=p, max_new_tokens=2),
+                   Request(rid=1, prompt=p, max_new_tokens=2)])
+    auto = server.submit(p, max_new_tokens=2)
+    assert auto == 2
+    out = server.run()
+    assert set(out) == {0, 1, 2}
+
+
+def test_trainer_fit_preserves_step_progress(tmp_path):
+    """In-memory progress made via step() is checkpointed before fit()
+    hands control to the disk-backed loop (regression: it used to be
+    silently re-run from the last checkpoint)."""
+    spec = _spec(tmp_path / "ckpt", steps=3)
+    trainer = Trainer(spec)
+    trainer.step()
+    trainer.step()                                 # 2 steps, never saved
+    state = trainer.fit()
+    assert int(state["step"]) == 3
+    assert 2 in CheckpointManager(str(tmp_path / "ckpt")).list_steps()
+
+
+def test_trainer_step_continues_after_fit(tmp_path):
+    """fit() leaves the trainer in a usable step-at-a-time state: the
+    batch stream continues from the achieved step (regression: the
+    iterator used to be dropped)."""
+    spec = _spec(tmp_path / "ckpt", steps=2)
+    trainer = Trainer(spec)
+    trainer.fit()
+    metrics = trainer.step()
+    assert np.isfinite(float(metrics["loss"]))
+    assert trainer.current_step == 3
+    assert int(trainer.state["step"]) == 3
+
+
+def test_trainer_fit_past_budget_reports_achieved_step(tmp_path):
+    """A checkpoint already past train.steps restores, runs zero steps,
+    and current_step reflects the checkpoint — not the smaller budget
+    (regression: save() used to write a stale-ordered snapshot)."""
+    spec = _spec(tmp_path / "ckpt", steps=2)
+    Trainer(spec).fit()
+    trainer = Trainer.resume(str(tmp_path / "ckpt"), **{"train.steps": 1})
+    state = trainer.fit()
+    assert int(state["step"]) == 2
+    assert trainer.current_step == 2
+
+
+def test_trainer_fit_requires_directory_step_does_not():
+    spec = _spec(None, steps=1).replace(checkpoint=CheckpointSpec())
+    trainer = Trainer(spec)
+    with pytest.raises(ValueError, match="checkpoint.directory"):
+        trainer.fit()
+    metrics = trainer.step()                       # fresh init, no disk
+    assert np.isfinite(float(metrics["loss"]))
+    assert trainer.current_step == 1
