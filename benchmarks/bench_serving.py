@@ -1,12 +1,15 @@
-"""Serving-path benchmark: paged continuous batching vs. the static
-batch path on the same mixed-length workload (reduced llama3.2-1b; CPU
-timings are indicative — the comparison that transfers is cache bytes
-and tokens/s shape, not absolute latency).
+"""Serving-path benchmark: the paged continuous-batching engine on a
+mixed-length workload (reduced llama3.2-1b; CPU timings are indicative
+— the comparison that transfers is cache bytes and tokens/s shape, not
+absolute latency), against the *analytic* static-path worst case.
 
 Static serving of a mixed stream must pad every sequence to the global
-worst case: a (slots, max_total_len) cache and waves that decode until
-the *longest* member finishes. The paged engine admits requests into
-slots mid-flight and sizes memory by pages actually touched.
+worst case: a (slots, max_seq) cache provisioned for the longest
+request the server promises, decoded in waves until the longest member
+finishes. That cost needs no driver — it is a closed-form byte count
+(models/decode.py:lm_state_specs), which is how this file reports it;
+the paged engine admits requests into slots mid-flight and sizes
+memory by pages actually touched.
 
   PYTHONPATH=src python -m benchmarks.bench_serving
 
@@ -18,23 +21,20 @@ latency. ``--verify`` additionally checks the cached+chunked outputs
 token-for-token against the static-cache oracle.
 
   PYTHONPATH=src python -m benchmarks.bench_serving --shared-prefix --verify
+
+The full traffic harness (arrival processes, SLOs, multi-tenant
+scheduling, BENCH_serving.json) is ``python -m repro bench serving``
+(benchmarks/run.py); this module keeps the two focused comparisons
+above, driven entirely through the ``Server`` facade.
 """
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config import get_config
-from repro.models.model import (
-    decode_step,
-    init_decode_state,
-    init_model,
-    prefill,
-)
 from repro.models.decode import lm_state_specs
 
 ARCH = "llama3.2-1b"
@@ -54,33 +54,6 @@ def _static_cache_bytes(cfg, batch, max_seq) -> int:
                for s in jax.tree.leaves(specs))
 
 
-def _run_static(cfg, params, prompts):
-    """Wave serving: batches of SLOTS, padded to the wave's max prompt
-    length, decoded for GEN steps (the static path cannot evict early).
-    The cache is provisioned at cfg.max_seq — a static server pins the
-    longest request it promises to serve, not the workload it happens
-    to get (that foreknowledge is exactly what paging removes)."""
-    max_total = cfg.max_seq
-    n_tok = 0
-    t0 = time.time()
-    for w in range(0, len(prompts), SLOTS):
-        wave = prompts[w:w + SLOTS]
-        plen = max(len(p) for p in wave)
-        batch = np.zeros((SLOTS, plen), dtype=np.int32)
-        for i, p in enumerate(wave):
-            batch[i, plen - len(p):] = p              # left-pad
-        state = init_decode_state(cfg, SLOTS, max_total)
-        logits, state = prefill(params, jnp.asarray(batch), cfg, state)
-        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
-        for i in range(GEN - 1):
-            logits, state = decode_step(params, tok, state, jnp.int32(plen + i), cfg)
-            tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
-        jax.block_until_ready(tok)
-        n_tok += sum(len(p) for p in wave) + len(wave) * GEN
-    dt = time.time() - t0
-    return n_tok / dt, _static_cache_bytes(cfg, SLOTS, max_total)
-
-
 def _paged_spec(quantize=None, **serve_kw):
     """The bench's RunSpec: pool sized to the workload's concurrent
     reservation fit, not the global worst case — the paged memory win."""
@@ -94,10 +67,13 @@ def _paged_spec(quantize=None, **serve_kw):
     )
 
 
-def _run_paged(params, prompts, quantize=None):
-    from repro.api import Server
+def dump_spec_json() -> str:
+    """--dump-spec parity for the legacy modes: the RunSpec both
+    comparisons drive (the harness's BenchSpec lives in run.py)."""
+    return _paged_spec().to_json(indent=2)
 
-    server = Server(_paged_spec(quantize), params)
+
+def _run_paged(server, prompts):
     for i, p in enumerate(prompts):
         server.submit(p, arrival=(i // SLOTS) * 3)
     server.run()
@@ -107,21 +83,23 @@ def _run_paged(params, prompts, quantize=None):
 
 
 def run() -> list[str]:
+    from repro.api import Server
+
     out = []
     print(f"# Serving bench: {ARCH} reduced, {len(PROMPT_LENS)} requests, "
           f"prompts {min(PROMPT_LENS)}..{max(PROMPT_LENS)} tokens, gen {GEN}, "
           f"{SLOTS} slots")
-    cfg = get_config(ARCH, reduced=True)
-    params = init_model(jax.random.PRNGKey(0), cfg)
+    server = Server(_paged_spec())          # random-init from train.seed
+    cfg, params = server.cfg, server.params
     prompts = _workload(cfg.vocab)
 
-    tps_s, bytes_s = _run_static(cfg, params, prompts)
-    print(f"static:     {tps_s:8.1f} tok/s   cache {bytes_s:8d} bytes "
+    # the static path's cost is analytic: batch x worst-case max_seq
+    bytes_s = _static_cache_bytes(cfg, SLOTS, cfg.max_seq)
+    print(f"static:     (analytic)       cache {bytes_s:8d} bytes "
           f"(batch x worst-case max_seq)")
-    out.append(f"serving_static,{1e6 / max(tps_s, 1e-9):.1f},"
-               f"tok_s={tps_s:.1f};cache_bytes={bytes_s}")
+    out.append(f"serving_static,0,cache_bytes={bytes_s}")
 
-    tps_p, bytes_p, wb_fp = _run_paged(params, prompts)
+    tps_p, bytes_p, wb_fp = _run_paged(server, prompts)
     print(f"paged fp32: {tps_p:8.1f} tok/s   cache {bytes_p:8d} bytes "
           f"(shared pool, {bytes_s / max(bytes_p, 1):.2f}x smaller)   "
           f"weights {wb_fp:8d} bytes")
@@ -130,7 +108,8 @@ def run() -> list[str]:
 
     # per-precision weight memory + throughput: int8 per-channel factors
     # dequantized on the fly (serving/quantize.py)
-    tps_q, bytes_q, wb_q = _run_paged(params, prompts, quantize="int8")
+    tps_q, bytes_q, wb_q = _run_paged(
+        Server(_paged_spec(quantize="int8"), params), prompts)
     print(f"paged int8: {tps_q:8.1f} tok/s   cache {bytes_q:8d} bytes   "
           f"weights {wb_q:8d} bytes ({wb_fp / max(wb_q, 1):.2f}x smaller)")
     out.append(f"serving_paged_int8,{1e6 / max(tps_q, 1e-9):.1f},"
@@ -152,8 +131,8 @@ def run_shared_prefix(verify: bool = False) -> list[str]:
         serve=ServeSpec(page_size=8, num_pages=48, slots=SLOTS,
                         pages_per_seq=8, prefill_budget=16, gen=GEN),
     )
-    cfg = base.model.config()
-    params = init_model(jax.random.PRNGKey(0), cfg)
+    first = Server(base)                    # random-init from train.seed
+    cfg, params = first.cfg, first.params
     pcfg = base.serve.paged_config()
     rng = np.random.default_rng(0)
     system = rng.integers(0, cfg.vocab, size=(32,)).astype(np.int32)
@@ -173,10 +152,12 @@ def run_shared_prefix(verify: bool = False) -> list[str]:
 
     out = []
     results = {}
-    for label, spec in (("off", base),
-                        ("on ", base.replace(serve={"prefix_cache": True,
-                                                    "chunked_prefill": True}))):
-        server = Server(spec, params)
+    servers = {
+        "off": first,
+        "on ": Server(base.replace(serve={"prefix_cache": True,
+                                          "chunked_prefill": True}), params),
+    }
+    for label, server in servers.items():
         results[label.strip()] = server.run(reqs)
         server.engine.sched.check_invariants()
         st = server.stats()
@@ -223,8 +204,12 @@ def main() -> None:
     ap.add_argument("--verify", action="store_true",
                     help="check outputs token-for-token against the "
                          "static-cache oracle")
+    ap.add_argument("--dump-spec", action="store_true",
+                    help="print the RunSpec both comparisons drive")
     args = ap.parse_args()
-    if args.shared_prefix:
+    if args.dump_spec:
+        print(dump_spec_json())
+    elif args.shared_prefix:
         run_shared_prefix(verify=args.verify)
     else:
         run()

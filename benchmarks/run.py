@@ -1,44 +1,75 @@
-# One function per paper table. Print ``name,us_per_call,derived`` CSV.
-"""Benchmark driver: runs every paper-table reproduction + the kernel
-micro-bench + the roofline table, then prints the consolidated CSV.
+"""Benchmark front door: ``python -m repro bench <name> [flags...]``.
 
-  PYTHONPATH=src python -m benchmarks.run            # everything
-  PYTHONPATH=src python -m benchmarks.run table3     # one table
+Every subcommand is a thin argparse -> :class:`repro.api.BenchSpec`
+adapter (``--dump-spec`` prints the resolved spec and exits — the same
+parity contract as ``repro train``/``repro serve``), and the serving
+harness emits a schema-validated ``BENCH_serving.json`` perf-trajectory
+file (docs/benchmarks.md):
+
+  PYTHONPATH=src python -m repro bench                    # run-all CSV
+  PYTHONPATH=src python -m repro bench serving            # traffic harness
+  PYTHONPATH=src python -m repro bench serving --dump-spec
+  PYTHONPATH=src python -m repro bench table3 --ranks 8,16
+  PYTHONPATH=src python -m repro bench table1 kernels     # legacy multi-suite
+
+Knobs that describe a suite's *trace shape* rather than the system
+under test (table3's ``--steps``/``--batch``/``--seq``) stay CLI-side,
+the same rule launch/serve.py applies to its trace flags.
 """
 from __future__ import annotations
 
+import argparse
 import sys
 import traceback
+from typing import List, Optional, Sequence
 
-from benchmarks import (
-    table1_memory,
-    table2_70b_step,
-    table3_rank_sweep,
-    table4_gradient_integrity,
-    bench_kernels,
-    bench_serving,
-    roofline_table,
-)
+SUITE_NAMES = ("table1", "table2", "table3", "table4",
+               "kernels", "serving", "roofline")
 
-SUITES = {
-    "table1": table1_memory.run,
-    "table2": table2_70b_step.run,
-    "table3": table3_rank_sweep.run,
-    "table4": table4_gradient_integrity.run,
-    "kernels": bench_kernels.run,
-    "serving": bench_serving.run,
-    "roofline": roofline_table.run,
-}
+USAGE = """\
+usage: python -m repro bench [<name>] [flags...]
+
+  (no name)   run every suite, print the consolidated CSV
+  serving     SLO/traffic harness -> BENCH_serving.json (--help for knobs)
+  table3      rank sweep (--ranks/--steps/--batch/--seq/--json-out)
+  table1 table2 table4 kernels roofline
+              single paper-table / micro-bench suites
+  <a> <b> ..  any list of suite names: legacy multi-suite CSV run
+
+every subcommand takes --dump-spec (print the resolved BenchSpec, run
+nothing).
+"""
 
 
-def main() -> None:
-    selected = sys.argv[1:] or list(SUITES)
-    rows: list[str] = []
+def _legacy_run(name: str) -> List[str]:
+    from benchmarks import (
+        bench_kernels,
+        bench_serving,
+        roofline_table,
+        table1_memory,
+        table2_70b_step,
+        table3_rank_sweep,
+        table4_gradient_integrity,
+    )
+
+    return {
+        "table1": table1_memory.run,
+        "table2": table2_70b_step.run,
+        "table3": table3_rank_sweep.run,
+        "table4": table4_gradient_integrity.run,
+        "kernels": bench_kernels.run,
+        "serving": bench_serving.run,
+        "roofline": roofline_table.run,
+    }[name]() or []
+
+
+def _run_all(selected: Sequence[str]) -> int:
+    rows: List[str] = []
     failed = []
     for name in selected:
         print(f"\n===== {name} =====", flush=True)
         try:
-            rows.extend(SUITES[name]() or [])
+            rows.extend(_legacy_run(name))
         except Exception:  # noqa: BLE001
             failed.append(name)
             traceback.print_exc()
@@ -47,7 +78,247 @@ def main() -> None:
         print(r)
     if failed:
         print(f"FAILED suites: {failed}", file=sys.stderr)
-        sys.exit(1)
+        return 1
+    return 0
+
+
+# ------------------------------------------------------------- serving --
+
+def build_serving_parser() -> argparse.ArgumentParser:
+    """The traffic-harness flags; defaults are the committed
+    BENCH_serving.json configuration (a deadline-bearing two-tenant mix
+    whose 2x arm genuinely overloads the default geometry)."""
+    ap = argparse.ArgumentParser(
+        prog="repro bench serving",
+        description="load-generator harness: WorkloadSpec traffic over "
+                    "the Server facade, fifo-vs-slo x overload sweep, "
+                    "BENCH_serving.json out")
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--full", action="store_true",
+                    help="full-size config (default: reduced, CPU-scale)")
+    # serving geometry
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--num-pages", type=int, default=64)
+    ap.add_argument("--pages-per-seq", type=int, default=8)
+    ap.add_argument("--prefill-budget", type=int, default=64)
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="serve repeated page-aligned prefixes from the "
+                         "refcounted prefix index")
+    ap.add_argument("--chunked-prefill", action="store_true")
+    # workload
+    ap.add_argument("--arrival", choices=["poisson", "onoff", "fixed"],
+                    default="poisson")
+    ap.add_argument("--rate", type=float, default=0.35,
+                    help="mean arrivals per engine step at 1x overload")
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--tenants", default="2,1",
+                    help="per-tenant arrival weights (ids t0,t1,...)")
+    ap.add_argument("--prefix-tokens", type=int, default=0,
+                    help="shared system-prompt tokens per tenant")
+    ap.add_argument("--prompt-mean", type=int, default=16)
+    ap.add_argument("--prompt-cv", type=float, default=0.5)
+    ap.add_argument("--gen-mean", type=int, default=12)
+    ap.add_argument("--gen-cv", type=float, default=0.5)
+    ap.add_argument("--priority-mix", default="1,1",
+                    help="per-class arrival weights, class 0 most urgent")
+    ap.add_argument("--on-steps", type=int, default=8)
+    ap.add_argument("--off-steps", type=int, default=8)
+    # SLOs
+    ap.add_argument("--deadlines", default="0=20,1=40",
+                    help="per-class end-to-end deadlines in engine steps "
+                         "('N' or 'CLS=N,...'; 'none' disables)")
+    ap.add_argument("--ttft", type=int, default=None,
+                    help="TTFT target in engine steps (reported, not "
+                         "enforced)")
+    ap.add_argument("--no-shed", action="store_true",
+                    help="SLO arm keeps fair-share ordering but never "
+                         "refuses a doomed request")
+    # sweep axes
+    ap.add_argument("--overloads", default="1,2",
+                    help="arrival-rate multipliers")
+    ap.add_argument("--schedulers", default="fifo,slo")
+    ap.add_argument("--precisions", default="fp32,int8",
+                    help="throughput axis; fp32 alone skips the sweep")
+    ap.add_argument("--ranks", default="",
+                    help="serve-rank throughput axis (comma-separated)")
+    # output
+    ap.add_argument("--json-out", default="BENCH_serving.json",
+                    help="envelope path ('' to skip writing)")
+    ap.add_argument("--dump-spec", action="store_true",
+                    help="print the resolved BenchSpec JSON and exit")
+    # legacy workloads (benchmarks/bench_serving.py, unchanged flags)
+    ap.add_argument("--shared-prefix", action="store_true",
+                    help="legacy shared-system-prompt bench: prefix "
+                         "cache off vs on")
+    ap.add_argument("--verify", action="store_true",
+                    help="with --shared-prefix: check outputs against "
+                         "the static-cache oracle")
+    ap.add_argument("--compare-static", action="store_true",
+                    help="legacy static-vs-paged comparison CSV")
+    return ap
+
+
+def serving_bench_from_args(args: argparse.Namespace):
+    from repro.api import (
+        BenchSpec,
+        ModelSpec,
+        ServeSpec,
+        SLOSpec,
+        WorkloadSpec,
+    )
+
+    deadlines = None if args.deadlines in ("", "none") else args.deadlines
+    return BenchSpec(
+        name="serving",
+        model=ModelSpec(args.arch, reduced=not args.full),
+        serve=ServeSpec(
+            slots=args.slots,
+            page_size=args.page_size,
+            num_pages=args.num_pages,
+            pages_per_seq=args.pages_per_seq,
+            prefill_budget=args.prefill_budget,
+            prefix_cache=args.prefix_cache,
+            chunked_prefill=args.chunked_prefill,
+        ),
+        workload=WorkloadSpec(
+            arrival=args.arrival,
+            rate=args.rate,
+            requests=args.requests,
+            seed=args.seed,
+            tenants=args.tenants,
+            shared_prefix=args.prefix_tokens,
+            prompt_mean=args.prompt_mean,
+            prompt_cv=args.prompt_cv,
+            gen_mean=args.gen_mean,
+            gen_cv=args.gen_cv,
+            priority_mix=args.priority_mix,
+            on_steps=args.on_steps,
+            off_steps=args.off_steps,
+        ),
+        slo=SLOSpec(deadlines=deadlines, ttft=args.ttft,
+                    shed=not args.no_shed),
+        overloads=args.overloads,
+        schedulers=args.schedulers,
+        precisions=args.precisions,
+        ranks=args.ranks,
+    )
+
+
+def cmd_serving(argv: Sequence[str]) -> int:
+    args = build_serving_parser().parse_args(argv)
+    if args.shared_prefix or args.compare_static:
+        from benchmarks import bench_serving
+
+        if args.dump_spec:
+            print(bench_serving.dump_spec_json())
+            return 0
+        if args.shared_prefix:
+            bench_serving.run_shared_prefix(verify=args.verify)
+        else:
+            bench_serving.run()
+        return 0
+
+    bench = serving_bench_from_args(args)
+    if args.dump_spec:
+        print(bench.to_json(indent=2))
+        return 0
+
+    from repro.bench import run_bench, write_bench
+
+    doc = run_bench(bench, log=lambda s: print(f"[bench] {s}", flush=True))
+    for arm in doc["results"]:
+        m = arm["metrics"]
+        print(f"{arm['overload']:g}x {arm['scheduler']:4s}: "
+              f"{int(m['completed'])}/{int(m['requests'])} completed, "
+              f"{int(m['timed_out'])} timed out, {int(m['shed'])} shed | "
+              f"ttft p50/p99 {m['ttft_p50_steps']}/{m['ttft_p99_steps']} "
+              f"steps | goodput {m['goodput_tokens_per_s']:.1f} tok/s "
+              f"({int(m['slo_met_tokens'])} SLO-met tokens)")
+    for row in doc.get("throughput") or []:
+        print(f"throughput {row['precision']:5s} rank={row['rank']}: "
+              f"{row['tokens_per_s']:.1f} tok/s, "
+              f"{int(row['weight_bytes'])} weight bytes")
+    if args.json_out:
+        write_bench(doc, args.json_out)
+        print(f"wrote {args.json_out}")
+    return 0
+
+
+# -------------------------------------------------------------- tables --
+
+def _table_bench_spec(name: str, model_arch: str, ranks: str = ""):
+    from repro.api import BenchSpec, ModelSpec
+
+    return BenchSpec(name=name, model=ModelSpec(model_arch, reduced=True),
+                     ranks=ranks, overloads="1", schedulers="fifo")
+
+
+def cmd_table3(argv: Sequence[str]) -> int:
+    from benchmarks import table3_rank_sweep as t3
+
+    ap = argparse.ArgumentParser(prog="repro bench table3")
+    ap.add_argument("--ranks", default=",".join(str(r) for r in t3.RANKS))
+    ap.add_argument("--steps", type=int, default=t3.STEPS)
+    ap.add_argument("--batch", type=int, default=t3.BATCH)
+    ap.add_argument("--seq", type=int, default=t3.SEQ)
+    ap.add_argument("--json-out", default="table3_rank_sweep.json")
+    ap.add_argument("--dump-spec", action="store_true")
+    args = ap.parse_args(argv)
+    if args.dump_spec:
+        print(_table_bench_spec("table3", "smollm2-1.7b",
+                                ranks=args.ranks).to_json(indent=2))
+        return 0
+    ranks = tuple(int(r) for r in args.ranks.split(",") if r)
+    rows = t3.run(ranks=ranks, steps=args.steps, batch=args.batch,
+                  seq=args.seq, json_out=args.json_out or None)
+    for r in rows:
+        print(r)
+    return 0
+
+
+def _simple_suite(name: str, arch: str):
+    def cmd(argv: Sequence[str]) -> int:
+        ap = argparse.ArgumentParser(prog=f"repro bench {name}")
+        ap.add_argument("--dump-spec", action="store_true")
+        args = ap.parse_args(argv)
+        if args.dump_spec:
+            print(_table_bench_spec(name, arch).to_json(indent=2))
+            return 0
+        for r in _legacy_run(name):
+            print(r)
+        return 0
+    return cmd
+
+
+COMMANDS = {
+    "serving": cmd_serving,
+    "table3": cmd_table3,
+    "table1": _simple_suite("table1", "smollm2-1.7b"),
+    "table2": _simple_suite("table2", "llama3.1-70b"),
+    "table4": _simple_suite("table4", "smollm2-1.7b"),
+    "kernels": _simple_suite("kernels", "smollm2-1.7b"),
+    "roofline": _simple_suite("roofline", "smollm2-1.7b"),
+}
+
+
+def main(argv: Optional[Sequence[str]] = None) -> None:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if not argv:
+        raise SystemExit(_run_all(list(SUITE_NAMES)))
+    if argv[0] in ("-h", "--help", "help"):
+        print(USAGE, end="")
+        return
+    # legacy multi-suite form: a bare list of suite names
+    if len(argv) > 1 and all(a in SUITE_NAMES for a in argv):
+        raise SystemExit(_run_all(argv))
+    name, rest = argv[0], argv[1:]
+    if name not in COMMANDS:
+        print(f"repro bench: unknown suite {name!r}\n{USAGE}",
+              file=sys.stderr, end="")
+        raise SystemExit(2)
+    raise SystemExit(COMMANDS[name](rest))
 
 
 if __name__ == "__main__":

@@ -25,7 +25,6 @@ claims, which we assert programmatically:
 from __future__ import annotations
 
 import argparse
-import json
 import resource
 import sys
 import time
@@ -121,17 +120,26 @@ def run(ranks=RANKS, steps=STEPS, batch=BATCH, seq=SEQ,
           f"(best SCT {min(floors):.3f} vs dense {dense['loss']:.3f})")
 
     if json_out:
-        payload = {
-            "bench": "table3_rank_sweep",
-            "config": {"arch": base.arch, "reduced": True, "steps": steps,
-                       "batch": batch, "seq": seq, "ranks": list(ranks)},
-            "dense": dense,
-            "sct": results,
-            "claims": {"converge": claim1, "params_monotone": claim2,
-                       "lr_fix_competitive": claim3},
-        }
-        with open(json_out, "w") as f:
-            json.dump(payload, f, indent=1)
+        # the BENCH_* envelope (docs/benchmarks.md): table-style rows in
+        # ``entries``, the swept spec declared up front, schema-checked
+        # at write time so a drifted emitter fails here, not in CI
+        from repro.api import BenchSpec
+        from repro.bench.schema import bench_envelope
+        from repro.bench.runner import write_bench
+
+        spec = BenchSpec(name="table3", model=base,
+                         ranks=",".join(str(r) for r in ranks),
+                         overloads="1", schedulers="fifo")
+        payload = bench_envelope(
+            "table3", spec.to_dict(), results=[],
+            entries=([{"kind": "config", "steps": steps, "batch": batch,
+                       "seq": seq}]
+                     + [{"kind": "dense", **dense}]
+                     + [{"kind": "sct", **x} for x in results]
+                     + [{"kind": "claims", "converge": claim1,
+                         "params_monotone": claim2,
+                         "lr_fix_competitive": claim3}]))
+        write_bench(payload, json_out)
         print(f"wrote {json_out} (per-rank loss curves + memory)")
 
     out = [f"table3_dense,{dense['step_ms']*1e3:.0f},loss={dense['loss']:.3f}"]

@@ -6,11 +6,12 @@ adapters (each of which is argparse -> RunSpec -> facade):
   train    repro.launch.train    Trainer facade (fault-tolerant loop)
   serve    repro.launch.serve    Server facade (paged) / static oracle
   dryrun   repro.launch.dryrun   512-device lower+compile sweep
-  bench    benchmarks.run        paper tables + kernel/serving benches
+  bench    benchmarks.run        traffic harness + paper tables/kernels
 
-Every ``train``/``serve`` flag set resolves to a RunSpec first
-(``--dump-spec`` prints it), so the CLI surface and the programmatic
-API (docs/api.md) can never drift. ``bench`` needs the repo root on
+Every ``train``/``serve`` flag set resolves to a RunSpec first and
+every ``bench`` subcommand to a BenchSpec (``--dump-spec`` prints it),
+so the CLI surface and the programmatic API (docs/api.md,
+docs/benchmarks.md) can never drift. ``bench`` needs the repo root on
 sys.path (run from the checkout, as ``benchmarks/`` sits next to
 ``src/``).
 """
@@ -26,7 +27,8 @@ commands:
   train    train a model (argparse -> RunSpec -> repro.api.Trainer)
   serve    serve a model (argparse -> RunSpec -> repro.api.Server)
   dryrun   lower + compile every (arch x shape x mesh) cell at 512 devices
-  bench    run the paper-table / kernel / serving benchmarks
+  bench    traffic harness (bench serving -> BENCH_serving.json) +
+           paper-table / kernel benches; `bench --help` lists suites
 
 `python -m repro <command> --help` shows that command's flags.
 """

@@ -16,6 +16,7 @@ own all wiring (mesh, optimizer, rank controller, engine); the CLIs
 argparse adapters over this module. docs/api.md is the reference.
 """
 from repro.api.specs import (
+    BenchSpec,
     CheckpointSpec,
     ModelSpec,
     PrecisionSpec,
@@ -23,7 +24,9 @@ from repro.api.specs import (
     RunSpec,
     ServeSpec,
     ShardingSpec,
+    SLOSpec,
     TrainSpec,
+    WorkloadSpec,
 )
 from repro.api.trainer import Trainer, log_metrics
 from repro.api.server import Server, load_run_spec
@@ -37,6 +40,9 @@ __all__ = [
     "ServeSpec",
     "CheckpointSpec",
     "RunSpec",
+    "WorkloadSpec",
+    "SLOSpec",
+    "BenchSpec",
     "Trainer",
     "Server",
     "load_run_spec",

@@ -82,6 +82,8 @@ class Server:
             quantize=sv.quantize,
             prefix_cache=sv.prefix_cache,
             chunked_prefill=sv.chunked_prefill,
+            scheduler=sv.scheduler,
+            shed=sv.shed,
         )
         self.checkpoint_step: Optional[int] = None
         self._pending: List[Request] = []
@@ -119,12 +121,17 @@ class Server:
     def submit(self, prompt, max_new_tokens: Optional[int] = None, *,
                arrival: int = 0, eos_id: Optional[int] = None,
                deadline: Optional[int] = None,
+               tenant: Optional[str] = None,
+               priority: Optional[int] = None,
                rid: Optional[int] = None) -> int:
         """Queue one request; returns its rid (auto-assigned unless
-        given). ``max_new_tokens`` defaults to ``spec.serve.gen`` and
-        ``deadline`` to ``spec.serve.request_timeout``. The request sits
-        host-side until the next :meth:`run`/:meth:`stream` drives the
-        engine."""
+        given). ``max_new_tokens`` defaults to ``spec.serve.gen``,
+        ``deadline`` to ``spec.serve.effective_deadline``
+        (``default_deadline`` falling back to ``request_timeout``), and
+        ``tenant``/``priority`` to the ``spec.serve`` defaults — the
+        SLO scheduler reads all three; FIFO ignores tenant/priority.
+        The request sits host-side until the next
+        :meth:`run`/:meth:`stream` drives the engine."""
         if rid is None:
             # auto-assignment must also dodge rids the engine learned
             # from explicit Request lists passed straight to run/stream
@@ -146,7 +153,11 @@ class Server:
             arrival=arrival,
             eos_id=eos_id,
             deadline=(deadline if deadline is not None
-                      else self.spec.serve.request_timeout),
+                      else self.spec.serve.effective_deadline),
+            tenant=(tenant if tenant is not None
+                    else self.spec.serve.tenant),
+            priority=(priority if priority is not None
+                      else self.spec.serve.priority),
         ))
         return rid
 

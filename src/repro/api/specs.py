@@ -38,6 +38,9 @@ __all__ = [
     "ServeSpec",
     "CheckpointSpec",
     "RunSpec",
+    "WorkloadSpec",
+    "SLOSpec",
+    "BenchSpec",
 ]
 
 
@@ -230,7 +233,19 @@ class ServeSpec(_Spec):
     reads ``batch``/``prompt_len``/``gen``/``quantize``. ``rank``
     resizes spectral groups at checkpoint-load time (cheap serving of a
     shrunk snapshot); ``gen`` doubles as the default ``max_new_tokens``
-    for ``Server.submit``."""
+    for ``Server.submit``.
+
+    Multi-tenant scheduling: ``scheduler`` picks the admission policy —
+    ``"fifo"`` (strict arrival order, the original scheduler) or
+    ``"slo"`` (per-tenant fair-share token accounting, priority
+    classes, deadline-aware shedding — serving/scheduler.py:
+    SLOScheduler; ``shed=False`` keeps the fair-share ordering but
+    never rejects a doomed request, for apples-to-apples ordering
+    studies). ``tenant``/``priority``/``default_deadline`` are the
+    per-request defaults :meth:`Server.submit` stamps onto requests
+    that don't say otherwise (priority 0 is the most urgent class;
+    ``default_deadline`` falls back to ``request_timeout`` when None,
+    keeping the pre-SLO flag meaningful)."""
     mode: str = "paged"
     slots: int = 4
     page_size: int = 16
@@ -245,12 +260,32 @@ class ServeSpec(_Spec):
     batch: int = 4
     prompt_len: int = 16
     gen: int = 32
+    scheduler: str = "fifo"
+    shed: bool = True
+    tenant: str = "default"
+    priority: int = 0
+    default_deadline: Optional[int] = None
 
     def __post_init__(self):
         if self.mode not in ("paged", "static"):
             raise ValueError(f"serve mode {self.mode!r}; options paged|static")
         if self.quantize not in (None, "int8"):
             raise ValueError(f"quantize {self.quantize!r}; options int8")
+        if self.scheduler not in ("fifo", "slo"):
+            raise ValueError(f"serve scheduler {self.scheduler!r}; "
+                             f"options fifo|slo")
+        if self.priority < 0:
+            raise ValueError(f"priority {self.priority} must be >= 0 "
+                             f"(0 is the most urgent class)")
+        if not self.tenant:
+            raise ValueError("tenant must be a non-empty string")
+
+    @property
+    def effective_deadline(self) -> Optional[int]:
+        """The submit-time deadline default: ``default_deadline`` when
+        set, else the engine-level ``request_timeout``."""
+        return (self.default_deadline if self.default_deadline is not None
+                else self.request_timeout)
 
     def paged_config(self):
         from repro.serving import PagedCacheConfig
@@ -297,27 +332,219 @@ class RunSpec(_Spec):
     checkpoint: CheckpointSpec = CheckpointSpec()
 
     def replace(self, **overrides) -> "RunSpec":
-        fields = {f.name: f for f in dataclasses.fields(self)}
-        merged: Dict[str, Dict[str, Any]] = {}
-        flat: Dict[str, Any] = {}
-        for key, value in overrides.items():
-            name, dot, leaf = key.partition(".")
-            if name not in fields:
-                raise ValueError(f"RunSpec.replace: unknown field {name!r} "
-                                 f"(known: {sorted(fields)})")
-            if dot:
-                merged.setdefault(name, {})[leaf] = value
-            elif isinstance(value, dict):
-                merged.setdefault(name, {}).update(value)
-            else:
-                expected = type(fields[name].default)
-                if not isinstance(value, expected):
-                    raise TypeError(f"RunSpec.replace: {name} wants "
-                                    f"{expected.__name__} (or a dict / "
-                                    f"dotted '{name}.<field>' override), "
-                                    f"got {type(value).__name__}")
-                flat[name] = value
-        for name, sub_overrides in merged.items():
-            base = flat.get(name, getattr(self, name))
-            flat[name] = base.replace(**sub_overrides)
-        return dataclasses.replace(self, **flat)
+        return _composite_replace(self, overrides)
+
+
+def _composite_replace(spec, overrides: Dict[str, Any]):
+    """``replace`` for specs composed of sub-specs (RunSpec, BenchSpec):
+    accepts sub-spec instances, dicts merged into the existing sub-spec,
+    and dotted leaf paths — every key validated, typos raise."""
+    cls_name = type(spec).__name__
+    fields = {f.name: f for f in dataclasses.fields(spec)}
+    merged: Dict[str, Dict[str, Any]] = {}
+    flat: Dict[str, Any] = {}
+    for key, value in overrides.items():
+        name, dot, leaf = key.partition(".")
+        if name not in fields:
+            raise ValueError(f"{cls_name}.replace: unknown field {name!r} "
+                             f"(known: {sorted(fields)})")
+        if dot:
+            merged.setdefault(name, {})[leaf] = value
+        elif isinstance(value, dict) and _subspec_type(fields[name]) is not None:
+            merged.setdefault(name, {}).update(value)
+        else:
+            expected = type(fields[name].default)
+            if not isinstance(value, expected):
+                raise TypeError(f"{cls_name}.replace: {name} wants "
+                                f"{expected.__name__} (or a dict / "
+                                f"dotted '{name}.<field>' override), "
+                                f"got {type(value).__name__}")
+            flat[name] = value
+    for name, sub_overrides in merged.items():
+        base = flat.get(name, getattr(spec, name))
+        flat[name] = base.replace(**sub_overrides)
+    return dataclasses.replace(spec, **flat)
+
+
+# ----------------------------------------------------------------------
+# benchmark specs: declarative workloads, SLOs, and bench runs
+# ----------------------------------------------------------------------
+
+def _parse_weights(text: str, what: str) -> list:
+    """Comma-separated positive weights (``"1"``, ``"3,1"``)."""
+    try:
+        weights = [float(w) for w in text.split(",") if w.strip()]
+    except ValueError:
+        raise ValueError(f"{what} {text!r}: want comma-separated numbers")
+    if not weights or any(w <= 0 for w in weights):
+        raise ValueError(f"{what} {text!r}: want positive weights")
+    return weights
+
+
+@_spec
+class WorkloadSpec(_Spec):
+    """A synthetic production traffic trace, fully determined by its
+    fields (seeded — the same spec always generates the same requests;
+    bench/workload.py is the generator).
+
+      * **arrival process** (engine-step time): ``poisson`` draws the
+        per-step arrival count from Poisson(``rate``); ``onoff`` is the
+        bursty variant — Poisson(``rate``) for ``on_steps`` steps, then
+        silent for ``off_steps``; ``fixed`` spaces arrivals evenly at
+        ``rate`` per step (deterministic smoke traces).
+      * **multi-tenant shared-prefix mix** — requests draw a tenant
+        from ``tenants`` weights (ids ``t0``, ``t1``, ...); each tenant
+        has its own ``shared_prefix``-token system prompt opening every
+        one of its requests (the prefix-cache workload, per tenant).
+      * **long-tail lengths** — prompt tails and output budgets are
+        lognormal with the given mean and coefficient of variation
+        (``cv=0`` pins the length exactly); the generator clips to the
+        serving geometry so every request is admissible.
+      * **priority classes** — each request draws a class from
+        ``priority_mix`` weights (class 0 first, most urgent).
+    """
+    arrival: str = "poisson"
+    rate: float = 0.5                # mean arrivals per engine step
+    requests: int = 32
+    seed: int = 0
+    tenants: str = "1"               # per-tenant arrival weights
+    shared_prefix: int = 0           # system-prompt tokens per tenant
+    prompt_mean: int = 16
+    prompt_cv: float = 0.5
+    gen_mean: int = 16
+    gen_cv: float = 0.5
+    priority_mix: str = "1"          # per-class weights, class 0 first
+    on_steps: int = 8                # onoff: burst length
+    off_steps: int = 8               # onoff: silence length
+
+    def __post_init__(self):
+        if self.arrival not in ("poisson", "onoff", "fixed"):
+            raise ValueError(f"arrival process {self.arrival!r}; "
+                             f"options poisson|onoff|fixed")
+        if self.rate <= 0:
+            raise ValueError(f"arrival rate {self.rate} must be > 0")
+        if self.requests < 1:
+            raise ValueError(f"requests {self.requests} must be >= 1")
+        if self.prompt_mean < 1 or self.gen_mean < 1:
+            raise ValueError("prompt_mean and gen_mean must be >= 1")
+        if self.prompt_cv < 0 or self.gen_cv < 0:
+            raise ValueError("length cv must be >= 0")
+        if self.shared_prefix < 0:
+            raise ValueError("shared_prefix must be >= 0")
+        if self.arrival == "onoff" and (self.on_steps < 1 or self.off_steps < 1):
+            raise ValueError("onoff arrivals need on_steps/off_steps >= 1")
+        self.tenant_weights()
+        self.priority_weights()
+
+    def tenant_weights(self) -> list:
+        return _parse_weights(self.tenants, "tenants")
+
+    def priority_weights(self) -> list:
+        return _parse_weights(self.priority_mix, "priority_mix")
+
+
+@_spec
+class SLOSpec(_Spec):
+    """Service-level objectives the bench scores against (and the SLO
+    scheduler enforces). ``deadlines`` maps priority classes to
+    end-to-end deadlines in engine steps, as a grammar string (the
+    serialization format, validated by parsing): ``"64"`` gives every
+    class the same deadline, ``"0=32,1=96"`` is per-class, ``None``
+    means no deadline (every completion counts as SLO-met). ``ttft`` is
+    the time-to-first-token target in engine steps — reported against,
+    never enforced by eviction. ``shed`` lets the SLO scheduler refuse
+    admission to requests that provably cannot finish inside their
+    deadline (status ``"shed"``) instead of letting them burn decode
+    slots and time out."""
+    deadlines: Optional[str] = None
+    ttft: Optional[int] = None
+    shed: bool = True
+
+    def __post_init__(self):
+        self.deadline_map()
+        if self.ttft is not None and self.ttft < 1:
+            raise ValueError(f"ttft target {self.ttft} must be >= 1")
+
+    def deadline_map(self) -> Dict[int, int]:
+        """{priority class -> deadline steps}; empty when no SLO."""
+        if self.deadlines is None:
+            return {}
+        text = self.deadlines.strip()
+        try:
+            if "=" not in text:
+                return {0: int(text)}
+            out = {}
+            for part in text.split(","):
+                cls_s, _, dl_s = part.partition("=")
+                out[int(cls_s)] = int(dl_s)
+            return out
+        except ValueError:
+            raise ValueError(
+                f"SLO deadlines {self.deadlines!r}: want 'N' or "
+                f"'CLS=N,CLS=N,...' (engine steps per priority class)")
+
+    def deadline_for(self, priority: int) -> Optional[int]:
+        """The deadline for a priority class: its own entry, else the
+        highest class's entry (a single ``"64"`` covers everyone),
+        else None."""
+        dmap = self.deadline_map()
+        if not dmap:
+            return None
+        if priority in dmap:
+            return dmap[priority]
+        return dmap[max(dmap)]
+
+
+@_spec
+class BenchSpec(_Spec):
+    """One benchmark run, fully described: the model and serving
+    geometry under test, the workload driven at it, the SLOs scored,
+    and the sweep axes — ``overloads`` (arrival-rate multipliers; 1 is
+    the nominal rate, 2 doubles it), ``schedulers`` (admission policies
+    compared arm-by-arm), ``precisions``/``ranks`` (throughput-per-
+    variant axes). ``python -m repro bench`` resolves every benchmark
+    CLI to one of these first (``--dump-spec`` prints it), and
+    bench/runner.py turns it into a schema-valid ``BENCH_<area>.json``
+    (docs/benchmarks.md)."""
+    name: str = "serving"
+    model: ModelSpec = ModelSpec("llama3.2-1b", reduced=True)
+    serve: ServeSpec = ServeSpec()
+    workload: WorkloadSpec = WorkloadSpec()
+    slo: SLOSpec = SLOSpec()
+    overloads: str = "1,2"
+    schedulers: str = "fifo,slo"
+    precisions: str = "fp32"
+    ranks: str = ""
+
+    def __post_init__(self):
+        if not self.name:
+            raise ValueError("bench name must be non-empty")
+        self.overload_factors()
+        for s in self.scheduler_arms():
+            if s not in ("fifo", "slo"):
+                raise ValueError(f"scheduler {s!r}; options fifo|slo")
+        for p in self.precision_arms():
+            if p not in ("fp32", "int8"):
+                raise ValueError(f"precision {p!r}; options fp32|int8")
+        self.rank_arms()
+
+    def overload_factors(self) -> list:
+        return _parse_weights(self.overloads, "overloads")
+
+    def scheduler_arms(self) -> list:
+        arms = [s.strip() for s in self.schedulers.split(",") if s.strip()]
+        if not arms:
+            raise ValueError("schedulers must name at least one arm")
+        return arms
+
+    def precision_arms(self) -> list:
+        return [p.strip() for p in self.precisions.split(",") if p.strip()]
+
+    def rank_arms(self) -> list:
+        try:
+            return [int(r) for r in self.ranks.split(",") if r.strip()]
+        except ValueError:
+            raise ValueError(f"ranks {self.ranks!r}: want comma-separated ints")
+
+    def replace(self, **overrides) -> "BenchSpec":
+        return _composite_replace(self, overrides)

@@ -1,0 +1,32 @@
+"""Production traffic harness: deterministic load generation over the
+``Server`` facade, swept by a declarative :class:`BenchSpec`, emitting
+schema-validated ``BENCH_<area>.json`` perf-trajectory files.
+
+    from repro.api import BenchSpec
+    from repro.bench import run_bench, write_bench
+
+    doc = run_bench(BenchSpec())        # 1x/2x overload, fifo vs slo
+    write_bench(doc, "BENCH_serving.json")
+
+``schema`` stays importable without jax (tools/check_bench.py loads it
+by file path); the generator and runner import lazily through here.
+"""
+from repro.bench.schema import (
+    ARM_METRIC_KEYS,
+    SCHEMA_VERSION,
+    bench_envelope,
+    validate_bench,
+)
+from repro.bench.workload import generate_requests
+from repro.bench.runner import arm_metrics, run_bench, write_bench
+
+__all__ = [
+    "SCHEMA_VERSION",
+    "ARM_METRIC_KEYS",
+    "bench_envelope",
+    "validate_bench",
+    "generate_requests",
+    "arm_metrics",
+    "run_bench",
+    "write_bench",
+]

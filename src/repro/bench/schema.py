@@ -1,0 +1,171 @@
+"""The ``BENCH_<area>.json`` envelope: builder + validator.
+
+This module is the **perf-trajectory contract**: every benchmark emits
+one envelope, the envelope is committed at the repo root, and CI
+re-validates both the freshly emitted file and the committed ones — so
+a schema change that would silently orphan historical numbers fails
+the build instead (tools/check_bench.py).
+
+Deliberately **stdlib-only at import time**: the CI checker loads this
+file by path via importlib, outside the jax-heavy ``repro`` package,
+so validation runs in a bare interpreter in milliseconds.
+
+Envelope shape (``schema_version`` 1)::
+
+    {
+      "schema_version": 1,
+      "area": "serving",                  # BENCH_<area>.json
+      "spec": { ... BenchSpec.to_dict() ... },
+      "results": [                        # one entry per swept arm
+        {"overload": 1.0, "scheduler": "fifo",
+         "metrics": {requests, completed, timed_out, shed,
+                     ttft_p50_steps, ttft_p99_steps,
+                     itl_p50_s, itl_p99_s,
+                     tokens_per_s, goodput_tokens_per_s,
+                     slo_met_tokens, generated_tokens,
+                     peak_pages, wall_s, ...}},
+        ...
+      ],
+      "throughput": [                     # optional: variant axis
+        {"precision": "fp32", "rank": null,
+         "tokens_per_s": ..., "weight_bytes": ...}, ...
+      ],
+      "entries": [ {...}, ... ]           # optional: table-style rows
+    }
+
+``metrics`` may carry extra keys (per-tenant token counts, cache-page
+stats); the required set above is the floor a trajectory diff can rely
+on across PRs.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+__all__ = ["SCHEMA_VERSION", "ARM_METRIC_KEYS", "THROUGHPUT_KEYS",
+           "bench_envelope", "validate_bench"]
+
+SCHEMA_VERSION = 1
+
+# the metric floor every results arm must report (all numbers)
+ARM_METRIC_KEYS = (
+    "requests",
+    "completed",
+    "timed_out",
+    "shed",
+    "ttft_p50_steps",
+    "ttft_p99_steps",
+    "itl_p50_s",
+    "itl_p99_s",
+    "tokens_per_s",
+    "goodput_tokens_per_s",
+    "slo_met_tokens",
+    "generated_tokens",
+    "peak_pages",
+    "wall_s",
+)
+
+THROUGHPUT_KEYS = ("precision", "rank", "tokens_per_s", "weight_bytes")
+
+
+def bench_envelope(area: str, spec: Dict[str, Any],
+                   results: List[Dict[str, Any]],
+                   throughput: Optional[List[Dict[str, Any]]] = None,
+                   entries: Optional[List[Dict[str, Any]]] = None,
+                   ) -> Dict[str, Any]:
+    """Assemble a schema-valid envelope (and assert it is one — an
+    emitter bug should die here, not in CI)."""
+    doc: Dict[str, Any] = {
+        "schema_version": SCHEMA_VERSION,
+        "area": area,
+        "spec": spec,
+        "results": results,
+    }
+    if throughput is not None:
+        doc["throughput"] = throughput
+    if entries is not None:
+        doc["entries"] = entries
+    errors = validate_bench(doc)
+    if errors:
+        raise ValueError("emitter produced an invalid envelope:\n  "
+                         + "\n  ".join(errors))
+    return doc
+
+
+def _is_num(v: Any) -> bool:
+    return isinstance(v, (int, float)) and not isinstance(v, bool)
+
+
+def validate_bench(doc: Any) -> List[str]:
+    """All schema violations in ``doc`` (empty list = valid). Collects
+    every error instead of stopping at the first, so a drifted file
+    reads as one actionable report."""
+    errs: List[str] = []
+    if not isinstance(doc, dict):
+        return [f"envelope must be a JSON object, got {type(doc).__name__}"]
+    if doc.get("schema_version") != SCHEMA_VERSION:
+        errs.append(f"schema_version must be {SCHEMA_VERSION}, "
+                    f"got {doc.get('schema_version')!r}")
+    if not isinstance(doc.get("area"), str) or not doc.get("area"):
+        errs.append("area must be a non-empty string")
+    if not isinstance(doc.get("spec"), dict):
+        errs.append("spec must be an object (BenchSpec.to_dict())")
+
+    results = doc.get("results", [])
+    if not isinstance(results, list):
+        errs.append("results must be an array of arm objects")
+        results = []
+    for i, arm in enumerate(results):
+        where = f"results[{i}]"
+        if not isinstance(arm, dict):
+            errs.append(f"{where} must be an object")
+            continue
+        if not _is_num(arm.get("overload")):
+            errs.append(f"{where}.overload must be a number")
+        if not isinstance(arm.get("scheduler"), str):
+            errs.append(f"{where}.scheduler must be a string")
+        metrics = arm.get("metrics")
+        if not isinstance(metrics, dict):
+            errs.append(f"{where}.metrics must be an object")
+            continue
+        for key in ARM_METRIC_KEYS:
+            if key not in metrics:
+                errs.append(f"{where}.metrics missing {key!r}")
+            elif metrics[key] is not None and not _is_num(metrics[key]):
+                errs.append(f"{where}.metrics.{key} must be a number "
+                            f"or null, got {type(metrics[key]).__name__}")
+
+    if "throughput" in doc:
+        tp = doc["throughput"]
+        if not isinstance(tp, list):
+            errs.append("throughput must be an array")
+            tp = []
+        for i, row in enumerate(tp):
+            where = f"throughput[{i}]"
+            if not isinstance(row, dict):
+                errs.append(f"{where} must be an object")
+                continue
+            for key in THROUGHPUT_KEYS:
+                if key not in row:
+                    errs.append(f"{where} missing {key!r}")
+            if "precision" in row and not isinstance(row["precision"], str):
+                errs.append(f"{where}.precision must be a string")
+            for key in ("tokens_per_s", "weight_bytes"):
+                if key in row and not _is_num(row[key]):
+                    errs.append(f"{where}.{key} must be a number")
+            if "rank" in row and row["rank"] is not None \
+                    and not _is_num(row["rank"]):
+                errs.append(f"{where}.rank must be a number or null")
+
+    entries = doc.get("entries", [])
+    if not isinstance(entries, list):
+        errs.append("entries must be an array")
+        entries = []
+    else:
+        for i, row in enumerate(entries):
+            if not isinstance(row, dict):
+                errs.append(f"entries[{i}] must be an object")
+    # serving-style benches fill results arms; table-style benches fill
+    # entries rows; an envelope with neither measures nothing
+    if not results and not entries:
+        errs.append("at least one of results / entries must be non-empty")
+    return errs

@@ -1,0 +1,134 @@
+"""Deterministic synthetic traffic from a :class:`WorkloadSpec`.
+
+The generator's contract is **body/arrival separation**: request
+*bodies* (tenant, priority, token ids, prompt/output lengths, deadline)
+depend only on ``(spec, seed, geometry)`` — the ``overload`` factor
+scales nothing but the arrival-time process. Two traces at 1× and 2×
+overload therefore contain the *same* requests, just pushed at the
+engine faster, which is what makes goodput-under-overload comparisons
+meaningful: the work offered is identical, only its timing differs.
+
+Arrival processes run in engine-step time (the deterministic clock the
+scheduler's deadlines are measured against):
+
+  * ``poisson``  — arrivals per step ~ Poisson(rate × overload);
+  * ``onoff``    — the bursty variant: Poisson(rate × overload) during
+    ``on_steps``-step bursts, zero arrivals for ``off_steps`` between
+    them (rate is *not* rescaled to preserve the long-run mean — an
+    ON-window at the same instantaneous rate is the point: queueing
+    behaviour under bursts, not under a thinner trickle);
+  * ``fixed``    — evenly spaced, ``rate × overload`` per step.
+
+Lengths are lognormal(mean, cv) — the long-tail shape of production
+prompt/output lengths — clipped to the serving geometry so every
+generated request is admissible (an inadmissible request would wedge
+FIFO admission forever and say nothing about scheduling).
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import numpy as np
+
+from repro.api.specs import SLOSpec, WorkloadSpec
+from repro.serving.scheduler import Request
+
+__all__ = ["generate_requests"]
+
+# seed-stream tags: the body stream must stay byte-identical when the
+# arrival stream changes (overload), so each draws from its own rng
+_BODY_STREAM = 0
+_ARRIVAL_STREAM = 1
+_PREFIX_STREAM = 2
+
+
+def _lognormal_lengths(rng: np.random.Generator, n: int, mean: float,
+                       cv: float) -> np.ndarray:
+    """n integer lengths >= 1 with the requested mean and coefficient
+    of variation; cv=0 pins every draw to the mean exactly."""
+    if cv <= 0:
+        return np.full(n, max(1, int(round(mean))), dtype=np.int64)
+    sigma2 = np.log1p(cv * cv)
+    mu = np.log(mean) - sigma2 / 2.0
+    draws = rng.lognormal(mean=mu, sigma=np.sqrt(sigma2), size=n)
+    return np.maximum(1, np.rint(draws).astype(np.int64))
+
+
+def _arrival_steps(wl: WorkloadSpec, overload: float) -> List[int]:
+    """One engine-step arrival time per request, non-decreasing."""
+    n = wl.requests
+    rate = wl.rate * overload
+    if wl.arrival == "fixed":
+        return [int(i / rate) for i in range(n)]
+    rng = np.random.default_rng([wl.seed, _ARRIVAL_STREAM])
+    arrivals: List[int] = []
+    step = 0
+    period = wl.on_steps + wl.off_steps
+    while len(arrivals) < n:
+        if wl.arrival == "onoff" and (step % period) >= wl.on_steps:
+            step += 1
+            continue
+        count = rng.poisson(rate)
+        arrivals.extend([step] * int(count))
+        step += 1
+    return arrivals[:n]
+
+
+def generate_requests(wl: WorkloadSpec, slo: Optional[SLOSpec] = None, *,
+                      vocab: int, max_total: int,
+                      overload: float = 1.0) -> List[Request]:
+    """The trace for one bench arm: ``wl.requests`` scheduler Requests,
+    arrival-stamped by the spec's process at ``overload`` times the
+    nominal rate.
+
+    ``vocab`` bounds the token ids; ``max_total`` is the serving
+    geometry's per-sequence capacity (pages_per_seq × page_size) —
+    prompt + generation budget are clipped under it. Deadlines come
+    from ``slo.deadline_for(priority)``; tenants get ids ``t0..tN`` and
+    a per-tenant shared system prefix of ``wl.shared_prefix`` tokens.
+    """
+    if max_total < wl.shared_prefix + 2:
+        raise ValueError(
+            f"geometry max_total={max_total} cannot fit shared_prefix="
+            f"{wl.shared_prefix} plus a 1-token tail and 1 generated token")
+    slo = slo if slo is not None else SLOSpec()
+    n = wl.requests
+    body = np.random.default_rng([wl.seed, _BODY_STREAM])
+
+    tw = np.asarray(wl.tenant_weights(), dtype=np.float64)
+    pw = np.asarray(wl.priority_weights(), dtype=np.float64)
+    tenant_idx = body.choice(len(tw), size=n, p=tw / tw.sum())
+    priorities = body.choice(len(pw), size=n, p=pw / pw.sum())
+
+    # one shared system prompt per tenant, stable across specs that
+    # only differ in arrival shape (own stream, keyed by tenant index)
+    prefixes = [
+        np.random.default_rng([wl.seed, _PREFIX_STREAM, t]).integers(
+            0, vocab, size=wl.shared_prefix, dtype=np.int64)
+        for t in range(len(tw))
+    ]
+
+    tails = _lognormal_lengths(body, n, wl.prompt_mean, wl.prompt_cv)
+    gens = _lognormal_lengths(body, n, wl.gen_mean, wl.gen_cv)
+    # clip to geometry: tail first (keep >= 1), then the gen budget
+    budget = max_total - wl.shared_prefix
+    tails = np.minimum(tails, budget - 1)
+    gens = np.minimum(gens, budget - tails)
+
+    arrivals = _arrival_steps(wl, overload)
+
+    out: List[Request] = []
+    for i in range(n):
+        tail = body.integers(0, vocab, size=int(tails[i]), dtype=np.int64)
+        prompt = np.concatenate([prefixes[tenant_idx[i]], tail])
+        pri = int(priorities[i])
+        out.append(Request(
+            rid=i,
+            prompt=prompt.astype(np.int32),
+            max_new_tokens=int(gens[i]),
+            arrival=int(arrivals[i]),
+            deadline=slo.deadline_for(pri),
+            tenant=f"t{int(tenant_idx[i])}",
+            priority=pri,
+        ))
+    return out

@@ -161,7 +161,9 @@ def run_stream(args, spec: RunSpec, params) -> None:
           f"p99 {st['itl_p99_s'] * 1e3:.1f} ms")
     if args.request_timeout is not None:
         print(f"deadlines: {int(st['timed_out'])} timed out, "
-              f"{int(st['cancelled'])} cancelled")
+              f"{int(st['cancelled'])} cancelled"
+              + (f", {int(st['shed'])} shed" if args.scheduler == "slo"
+                 else ""))
     if args.quantize:
         print(f"weights: {int(st['weight_bytes'])} bytes {args.quantize} "
               f"(fp32 {int(st['weight_bytes_fp'])} bytes, "
@@ -282,6 +284,10 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--request-timeout", type=int, default=None,
                     help="per-request deadline in engine steps; expired "
                          "requests are evicted with their partial output")
+    ap.add_argument("--scheduler", choices=["fifo", "slo"], default="fifo",
+                    help="admission policy: fifo (arrival order) or slo "
+                         "(per-tenant fair share + priority + deadline-"
+                         "aware shedding — serving/scheduler.py)")
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="prepend this many shared system-prompt tokens to "
                          "every request in the trace (the prefix-cache "
@@ -322,6 +328,7 @@ def build_spec(args: argparse.Namespace) -> RunSpec:
             prefix_cache=args.prefix_cache,
             chunked_prefill=args.chunked_prefill,
             request_timeout=args.request_timeout,
+            scheduler=args.scheduler,
             quantize=args.quantize,
             rank=args.serve_rank,
             batch=args.batch,

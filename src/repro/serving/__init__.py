@@ -28,6 +28,7 @@ from repro.serving.scheduler import (
     ContinuousBatchingScheduler,
     PrefixCache,
     Request,
+    SLOScheduler,
 )
 
 __all__ = [
@@ -49,6 +50,7 @@ __all__ = [
     "slot_read",
     "slot_write",
     "ContinuousBatchingScheduler",
+    "SLOScheduler",
     "Request",
     "ServingEngine",
 ]

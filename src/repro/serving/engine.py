@@ -50,7 +50,12 @@ from repro.models.model import (
     prefill_chunk_paged,
 )
 from repro.serving.paged_cache import PagedCacheConfig, paged_write_pages, slot_write
-from repro.serving.scheduler import ContinuousBatchingScheduler, Request, SeqState
+from repro.serving.scheduler import (
+    ContinuousBatchingScheduler,
+    Request,
+    SeqState,
+    SLOScheduler,
+)
 
 # inter-token latency samples kept for percentile stats; bounded so a
 # long-lived engine under continuous traffic cannot leak host memory
@@ -95,7 +100,9 @@ class ServingEngine:
                  prefill_token_budget: Optional[int] = None,
                  quantize: Optional[str] = None,
                  prefix_cache: bool = False,
-                 chunked_prefill: bool = False):
+                 chunked_prefill: bool = False,
+                 scheduler: str = "fifo",
+                 shed: bool = True):
         if cfg.family == "encdec":
             raise NotImplementedError("paged serving targets decoder-only families")
         self.cfg = cfg
@@ -121,8 +128,17 @@ class ServingEngine:
         self.prefix_cache = bool(prefix_cache) and self._offset_prefill
         self.chunked_prefill = bool(chunked_prefill) and self._offset_prefill
         self.state = init_paged_state(cfg, pcfg)
-        self.sched = ContinuousBatchingScheduler(
-            pcfg, prefill_token_budget, prefix_sharing=self.prefix_cache)
+        if scheduler == "slo":
+            self.sched: ContinuousBatchingScheduler = SLOScheduler(
+                pcfg, prefill_token_budget, prefix_sharing=self.prefix_cache,
+                shed=shed)
+        elif scheduler == "fifo":
+            self.sched = ContinuousBatchingScheduler(
+                pcfg, prefill_token_budget, prefix_sharing=self.prefix_cache)
+        else:
+            raise ValueError(f"unknown scheduler {scheduler!r}; options: "
+                             f"fifo, slo")
+        self.scheduler = scheduler
         self._next_input = np.zeros((pcfg.max_slots,), dtype=np.int32)
 
         self._decode_fn = jax.jit(
@@ -163,8 +179,17 @@ class ServingEngine:
         self.generated_total = 0
         self.cancelled = 0
         self.timed_out = 0
+        self.shed = 0
+        self.peak_pages = 0              # max pool pages resident at once
         self.wall_s = 0.0
         self.step_times: Deque[float] = deque(maxlen=LATENCY_WINDOW)
+        # per-request completion records (rid, tenant, TTFT, SLO-met, ...)
+        # — what bench/runner.py aggregates into goodput/TTFT percentiles.
+        # Bounded like the latency window: a long-lived engine keeps the
+        # most recent LATENCY_WINDOW completions
+        self.request_log: Deque[Dict] = deque(maxlen=LATENCY_WINDOW)
+        self._arrive_wall: Dict[int, float] = {}   # rid -> submit wall time
+        self._first_tok_wall: Dict[int, float] = {}
         self.last_statuses: Dict[int, str] = {}
         # completions drained from the scheduler but not yet handed to a
         # consumer — survives an abandoned serve() generator (several
@@ -252,11 +277,15 @@ class ServingEngine:
             yield from self._deliver()
             while self._backlog or self.sched.has_work:
                 while self._backlog and self._backlog[0].arrival <= self._clock:
-                    self.sched.submit(self._backlog.pop(0))
+                    req = self._backlog.pop(0)
+                    self._arrive_wall[req.rid] = time.time()
+                    self.sched.submit(req)
                 self.sched.expire_deadlines(self._clock)
                 for seq in self.sched.admit():
                     self.prompt_tokens += seq.request.prompt_len
                     self.prefix_shared_tokens += seq.shared_len
+                self.peak_pages = max(self.peak_pages,
+                                      self.sched.pool.allocated_count)
                 self._prefill_step()
                 if any(s.status == "decoding" for s in self.sched.active.values()):
                     self._decode_once()
@@ -322,7 +351,43 @@ class ServingEngine:
                 self.cancelled += 1
             elif seq.status == "timeout":
                 self.timed_out += 1
+            elif seq.status == "shed":
+                self.shed += 1
+            self.request_log.append(self._record(seq))
         return drained
+
+    def _record(self, seq: SeqState) -> Dict:
+        """One completion record for :attr:`request_log`: identity,
+        outcome, clock-domain latencies (deterministic: engine steps),
+        wall-clock TTFT, and the SLO verdict. ``slo_met`` is True only
+        for requests that finished inside their deadline — deadline
+        eviction makes finishing imply that, but the record states it
+        explicitly so consumers needn't know the eviction contract."""
+        req = seq.request
+        arrive_wall = self._arrive_wall.pop(req.rid, None)
+        first_wall = self._first_tok_wall.pop(req.rid, None)
+        finish = self._clock
+        return {
+            "rid": req.rid,
+            "tenant": req.tenant,
+            "priority": req.priority,
+            "status": seq.status,
+            "arrival": req.arrival,
+            "deadline": req.deadline,
+            "admit_clock": seq.admit_clock,
+            "first_token_clock": seq.first_token_clock,
+            "finish_clock": finish,
+            "ttft_steps": (seq.first_token_clock - req.arrival
+                           if seq.first_token_clock is not None else None),
+            "ttft_s": (first_wall - arrive_wall
+                       if first_wall is not None and arrive_wall is not None
+                       else None),
+            "prompt_tokens": req.prompt_len,
+            "new_tokens": len(seq.generated),
+            "slo_met": (seq.status == "finished"
+                        and (req.deadline is None
+                             or finish - req.arrival <= req.deadline)),
+        }
 
     # ------------------------------------------------------------- steps --
     def _prefill_step(self) -> None:
@@ -362,6 +427,7 @@ class ServingEngine:
     def _complete_prefill(self, seq: SeqState, logits) -> None:
         tok = int(np.asarray(jnp.argmax(logits[0, -1])))
         self._next_input[seq.slot] = tok
+        self._first_tok_wall.setdefault(seq.request.rid, time.time())
         self.sched.finish_prefill(seq.slot)
         self.sched.on_prefill_token(seq.slot, tok)
 
@@ -435,6 +501,8 @@ class ServingEngine:
             "requests": float(self.requests_done),
             "cancelled": float(self.cancelled),
             "timed_out": float(self.timed_out),
+            "shed": float(self.shed),
+            "peak_pages": float(self.peak_pages),
             "prefill_tokens": float(self.prefill_tokens),
             "prompt_tokens": float(self.prompt_tokens),
             "prefix_shared_tokens": float(self.prefix_shared_tokens),
@@ -451,4 +519,6 @@ class ServingEngine:
         if self.sched.prefix_cache is not None:
             out.update({k: float(v)
                         for k, v in self.sched.prefix_cache.stats().items()})
+        if isinstance(self.sched, SLOScheduler):
+            out.update({k: float(v) for k, v in self.sched.stats().items()})
         return out

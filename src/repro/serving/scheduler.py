@@ -59,13 +59,20 @@ class Request:
     (engine steps after arrival) bounds total service time: a request
     still unfinished when it expires is evicted with status
     ``"timeout"`` and whatever tokens it produced. ``rid`` keys the
-    result dict ``ServingEngine.run`` returns."""
+    result dict ``ServingEngine.run`` returns.
+
+    ``tenant`` and ``priority`` are scheduling metadata the
+    :class:`SLOScheduler` consumes (per-tenant fair share; priority
+    class 0 is the most urgent) — the FIFO scheduler carries them
+    through untouched."""
     rid: int
     prompt: np.ndarray                 # (prompt_len,) int32 token ids
     max_new_tokens: int
     arrival: int = 0                   # engine step at which it enters the queue
     eos_id: Optional[int] = None
     deadline: Optional[int] = None     # max engine steps after arrival
+    tenant: str = "default"
+    priority: int = 0                  # 0 = most urgent class
 
     @property
     def prompt_len(self) -> int:
@@ -85,8 +92,11 @@ class SeqState:
     reserved_pages: int                # worst-case commitment at admission
     shared_len: int = 0                # prefix tokens mapped from the cache
     prefill_pos: int = 0               # prompt tokens cached so far
-    status: str = "prefilling"         # prefilling|decoding|finished|cancelled|timeout
+    status: str = "prefilling"         # prefilling|decoding|finished|cancelled|
+                                       # timeout|shed
     generated: List[int] = dataclasses.field(default_factory=list)
+    admit_clock: Optional[int] = None  # engine step of admission
+    first_token_clock: Optional[int] = None  # engine step of the first token
 
     @property
     def finished(self) -> bool:
@@ -239,6 +249,7 @@ class ContinuousBatchingScheduler:
         self._finished_step: List[SeqState] = []       # drained every step
         self.finished_count = 0
         self.cow_forks = 0
+        self._now = 0                  # engine-step clock (expire_deadlines)
 
     # ------------------------------------------------------------- api --
     def submit(self, req: Request) -> None:
@@ -264,26 +275,50 @@ class ContinuousBatchingScheduler:
             self.prefix_cache.evict(short)
         return self.pool.alloc(n)
 
+    def _next_request(self) -> Optional[Request]:
+        """The admission-policy hook: the next waiting request to try,
+        or None to stop admitting this step. FIFO (this class) always
+        answers the queue head — later requests never jump it. The
+        :class:`SLOScheduler` overrides this with fair-share/priority/
+        deadline selection (and sheds doomed requests as a side
+        effect)."""
+        return self.waiting[0] if self.waiting else None
+
+    def _remove_waiting(self, req: Request) -> None:
+        for i, r in enumerate(self.waiting):
+            if r is req:
+                del self.waiting[i]
+                return
+        raise AssertionError(f"request {req.rid} not in the waiting queue")
+
+    def _on_admitted(self, seq: SeqState) -> None:
+        """Post-admission hook (SLO fair-share accounting)."""
+
     def admit(self) -> List[SeqState]:
-        """Admit from the queue head while slot/pages/budget allow.
-        Returns newly admitted sequences in ``prefilling`` status, with
-        any cached prefix already mapped (the engine prefills the tail
-        from ``prefill_pos``)."""
+        """Admit from the queue while slot/pages/budget allow, in the
+        order :meth:`_next_request` dictates (FIFO here). Returns newly
+        admitted sequences in ``prefilling`` status, with any cached
+        prefix already mapped (the engine prefills the tail from
+        ``prefill_pos``). The selected request admits or blocks — when
+        it doesn't fit, nothing behind it is admitted either, so big
+        requests cannot be starved by small ones under any policy."""
         admitted: List[SeqState] = []
         budget = self.prefill_token_budget
         spent = 0
         while self.waiting and self._free_slots:
-            req = self.waiting[0]
+            req = self._next_request()
+            if req is None:
+                break
             need = self.pcfg.pages_for(req.max_total_len)
             if self._reserved_total + need > self.pcfg.num_pages:
-                break                                   # head waits; no queue-jumping
+                break                                   # selected waits; no queue-jumping
             shared = (self.prefix_cache.lookup(req.prompt)
                       if self.prefix_cache is not None else [])
             shared_len = len(shared) * self.pcfg.page_size
             tail = req.prompt_len - shared_len
             if budget is not None and spent and spent + tail > budget:
                 if self.prefix_cache is not None:
-                    # the head wasn't admitted — it will be looked up
+                    # the request wasn't admitted — it will be looked up
                     # again next step, so roll this probe back out of
                     # the hit-rate stats (the LRU touch is harmless)
                     n = (req.prompt_len - 1) // self.pcfg.page_size
@@ -292,7 +327,7 @@ class ContinuousBatchingScheduler:
                 break                                   # budget bounds each step, but
                                                         # never blocks the first admit
                                                         # (progress guarantee)
-            self.waiting.popleft()
+            self._remove_waiting(req)
             slot = self._free_slots.pop()
             self.pool.share(shared)
             fresh = self._alloc(self.pcfg.pages_for(req.prompt_len) - len(shared))
@@ -300,12 +335,14 @@ class ContinuousBatchingScheduler:
             self._reserved_total += need
             seq = SeqState(request=req, slot=slot, seq_len=0,
                            pages=pages, reserved_pages=need,
-                           shared_len=shared_len, prefill_pos=shared_len)
+                           shared_len=shared_len, prefill_pos=shared_len,
+                           admit_clock=self._now)
             self.active[slot] = seq
             self.block_table[slot, :len(pages)] = pages
             self.seq_lens[slot] = 0                     # decode-invisible until
             spent += tail                               # finish_prefill
             admitted.append(seq)
+            self._on_admitted(seq)
         return admitted
 
     def prefilling(self) -> List[SeqState]:
@@ -381,6 +418,8 @@ class ContinuousBatchingScheduler:
         """Record the token produced by prefill (not yet in the cache —
         the next decode step appends it)."""
         seq = self.active[slot]
+        if seq.first_token_clock is None:
+            seq.first_token_clock = self._now
         seq.generated.append(int(token))
         if seq.finished:                                 # max_new_tokens == 1
             self._evict(seq, "finished")
@@ -412,7 +451,10 @@ class ContinuousBatchingScheduler:
         arrival) has passed — waiting or active. Called once per engine
         step with the current clock. Returns the number expired; the
         sequences themselves surface through :meth:`drain_finished`
-        with status ``"timeout"``."""
+        with status ``"timeout"``. Also advances the scheduler's notion
+        of *now* — the clock admission policies (SLO shedding,
+        ``admit_clock``) reason against."""
+        self._now = clock
         expired = [r.rid for r in list(self.waiting)
                    if r.deadline is not None and clock - r.arrival >= r.deadline]
         expired += [s.request.rid for s in list(self.active.values())
@@ -476,3 +518,115 @@ class ContinuousBatchingScheduler:
             assert list(used) == seq.pages
             if seq.status == "prefilling":
                 assert seq.shared_len <= seq.prefill_pos <= seq.request.prompt_len
+
+
+class SLOScheduler(ContinuousBatchingScheduler):
+    """SLO-aware multi-tenant admission on top of the continuous-batching
+    machinery. Page accounting, prefill chunking, COW, deadlines, and
+    eviction are all inherited — only *which waiting request admits
+    next* changes, plus deadline-aware shedding:
+
+      * **per-tenant fair share** — every token served (prompt tail
+        prefill + each generated token) is charged to its request's
+        tenant; admission always picks from the tenant with the least
+        service so far. A tenant that stops being served stops
+        accumulating charge and therefore becomes the minimum — no
+        tenant can be starved by another's volume, however sustained
+        the overload (the fuzzed property in
+        tests/test_slo_scheduler.py).
+      * **priority classes** — within the selected tenant's requests,
+        lower ``Request.priority`` admits first (class 0 is
+        interactive traffic). Priority deliberately ranks *below*
+        tenant fairness: one tenant marking everything urgent must not
+        crowd out the rest.
+      * **deadline-aware admission / shedding** — among equal
+        priorities, the earliest absolute deadline admits first (EDF),
+        and with ``shed=True`` a request that provably cannot finish
+        inside its deadline — fewer steps remain than tokens it must
+        generate, even served ideally — is refused admission with
+        status ``"shed"`` instead of burning a decode slot until it
+        times out. Shedding is what converts overload from "everyone
+        misses" into "feasible work still lands": goodput (SLO-met
+        tokens/s) degrades gracefully instead of collapsing
+        (bench/runner.py measures exactly this against FIFO).
+
+    When no request is shed (deadlines absent or loose), admission
+    *order* is the only difference from FIFO — and greedy decoding is
+    per-request, so outputs stay token-identical to the static oracle
+    (the no-shedding equivalence test)."""
+
+    def __init__(self, pcfg: PagedCacheConfig,
+                 prefill_token_budget: Optional[int] = None,
+                 prefix_sharing: bool = False, *,
+                 shed: bool = True):
+        super().__init__(pcfg, prefill_token_budget,
+                         prefix_sharing=prefix_sharing)
+        self.shed = shed
+        self.served_tokens: Dict[str, int] = {}        # tenant -> tokens charged
+        self.shed_count = 0
+
+    # ---------------------------------------------------- accounting --
+    def _charge(self, tenant: str, tokens: int) -> None:
+        self.served_tokens[tenant] = self.served_tokens.get(tenant, 0) + tokens
+
+    def _on_admitted(self, seq: SeqState) -> None:
+        # the prefill work this admission buys: the uncached prompt tail
+        self._charge(seq.request.tenant,
+                     seq.request.prompt_len - seq.shared_len)
+
+    def on_token(self, slot: int, token: int) -> Optional[SeqState]:
+        self._charge(self.active[slot].request.tenant, 1)
+        return super().on_token(slot, token)
+
+    def on_prefill_token(self, slot: int, token: int) -> Optional[SeqState]:
+        self._charge(self.active[slot].request.tenant, 1)
+        return super().on_prefill_token(slot, token)
+
+    # ----------------------------------------------------- admission --
+    def _doomed(self, req: Request) -> bool:
+        """Provably cannot meet its deadline: even admitted now, with
+        prefill completing this very step and one token landing every
+        step after, the last token would arrive at or past expiry.
+        Best-case finish is ``now + max_new_tokens - 1``; the request
+        dies when ``clock - arrival >= deadline``."""
+        if req.deadline is None:
+            return False
+        remaining = req.arrival + req.deadline - self._now
+        return remaining < req.max_new_tokens
+
+    def _shed_doomed(self) -> None:
+        """Refuse every waiting request that can no longer make its
+        deadline. Runs both at selection time and on every clock tick
+        (:meth:`expire_deadlines`) — admission only scans the queue
+        while a decode slot is free, so a request doomed *while queued
+        behind long-running work* must be shed from the tick path or it
+        would sit until the deadline machinery times it out."""
+        if not self.shed:
+            return
+        for req in [r for r in self.waiting if self._doomed(r)]:
+            self.cancel(req.rid, status="shed")
+            self.shed_count += 1
+
+    def expire_deadlines(self, clock: int) -> int:
+        self._now = clock
+        self._shed_doomed()
+        return super().expire_deadlines(clock)
+
+    def _next_request(self) -> Optional[Request]:
+        self._shed_doomed()
+        if not self.waiting:
+            return None
+        return min(
+            enumerate(self.waiting),
+            key=lambda iv: (self.served_tokens.get(iv[1].tenant, 0),
+                            iv[1].priority,
+                            (iv[1].arrival + iv[1].deadline
+                             if iv[1].deadline is not None else float("inf")),
+                            iv[0]),
+        )[1]
+
+    def stats(self) -> Dict[str, int]:
+        out = {"shed": self.shed_count}
+        for tenant, tokens in sorted(self.served_tokens.items()):
+            out[f"tenant_{tenant}_tokens"] = tokens
+        return out

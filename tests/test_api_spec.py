@@ -12,6 +12,7 @@ except ModuleNotFoundError:  # container without hypothesis: deterministic shim
     from _hypothesis_fallback import given, settings, st
 
 from repro.api import (
+    BenchSpec,
     CheckpointSpec,
     ModelSpec,
     PrecisionSpec,
@@ -19,7 +20,9 @@ from repro.api import (
     RunSpec,
     ServeSpec,
     ShardingSpec,
+    SLOSpec,
     TrainSpec,
+    WorkloadSpec,
 )
 from repro.core.precision import LEGACY, POLICIES, PrecisionPolicy, precision_policy
 
@@ -155,6 +158,119 @@ def test_serve_spec_paged_config_geometry():
     assert (pcfg.page_size, pcfg.num_pages, pcfg.max_slots,
             pcfg.max_pages_per_seq) == (8, 20, 3, 5)
     assert pcfg.max_seq == 40
+
+
+def test_serve_spec_slo_fields_round_trip():
+    sv = ServeSpec(scheduler="slo", shed=False, tenant="acme", priority=2,
+                   default_deadline=40, request_timeout=64)
+    restored = ServeSpec.from_json(sv.to_json())
+    assert restored == sv
+    assert restored.to_json() == sv.to_json()
+    assert (restored.scheduler, restored.tenant, restored.priority,
+            restored.default_deadline) == ("slo", "acme", 2, 40)
+    # the submit-time deadline default prefers default_deadline, then
+    # falls back to the pre-SLO request_timeout flag
+    assert sv.effective_deadline == 40
+    assert ServeSpec(request_timeout=64).effective_deadline == 64
+    assert ServeSpec().effective_deadline is None
+
+
+def test_serve_spec_slo_field_validation():
+    with pytest.raises(ValueError, match="scheduler"):
+        ServeSpec(scheduler="lifo")
+    with pytest.raises(ValueError, match="priority"):
+        ServeSpec(priority=-1)
+    with pytest.raises(ValueError, match="tenant"):
+        ServeSpec(tenant="")
+    good = RunSpec().to_dict()
+    with pytest.raises(ValueError, match="ServeSpec: unknown key"):
+        RunSpec.from_dict({**good, "serve": {**good["serve"], "tennant": "x"}})
+    with pytest.raises(ValueError, match="scheduler"):
+        RunSpec.from_dict({**good,
+                           "serve": {**good["serve"], "scheduler": "edf"}})
+
+
+@settings(max_examples=40, deadline=None)
+@given(arrival_i=st.integers(0, 10), rate=st.floats(0.05, 4.0),
+       requests=st.integers(1, 200), seed=st.integers(0, 2**31 - 1),
+       tenants_i=st.integers(0, 10), prefix=st.integers(0, 32),
+       deadlines_i=st.integers(0, 10), shed=st.booleans(),
+       overloads_i=st.integers(0, 10), scheds_i=st.integers(0, 10))
+def test_bench_spec_round_trip_bit_exact(arrival_i, rate, requests, seed,
+                                         tenants_i, prefix, deadlines_i,
+                                         shed, overloads_i, scheds_i):
+    bench = BenchSpec(
+        workload=WorkloadSpec(
+            arrival=["poisson", "onoff", "fixed"][arrival_i % 3],
+            rate=rate, requests=requests, seed=seed,
+            tenants=["1", "2,1", "1,1,1"][tenants_i % 3],
+            shared_prefix=prefix),
+        slo=SLOSpec(deadlines=[None, "64", "0=32,1=96"][deadlines_i % 3],
+                    shed=shed),
+        overloads=["1", "1,2", "1,1.5,2"][overloads_i % 3],
+        schedulers=["fifo", "slo", "fifo,slo"][scheds_i % 3],
+    )
+    text = bench.to_json()
+    restored = BenchSpec.from_json(text)
+    assert restored == bench
+    assert restored.to_json() == text
+    assert BenchSpec.from_dict(json.loads(json.dumps(bench.to_dict()))) == bench
+
+
+def test_bench_spec_unknown_keys_rejected_at_every_level():
+    good = BenchSpec().to_dict()
+    with pytest.raises(ValueError, match="unknown key"):
+        BenchSpec.from_dict({**good, "extra": 1})
+    with pytest.raises(ValueError, match="WorkloadSpec: unknown key"):
+        BenchSpec.from_dict(
+            {**good, "workload": {**good["workload"], "ratez": 1.0}})
+    with pytest.raises(ValueError, match="SLOSpec: unknown key"):
+        BenchSpec.from_dict({**good, "slo": {**good["slo"], "ttf": 4}})
+
+
+def test_bench_spec_validation_and_replace():
+    with pytest.raises(ValueError, match="arrival"):
+        WorkloadSpec(arrival="bursty")
+    with pytest.raises(ValueError, match="rate"):
+        WorkloadSpec(rate=0)
+    with pytest.raises(ValueError, match="tenants"):
+        WorkloadSpec(tenants="1,-2")
+    with pytest.raises(ValueError, match="deadlines"):
+        SLOSpec(deadlines="fast")
+    with pytest.raises(ValueError, match="scheduler"):
+        BenchSpec(schedulers="fifo,edf")
+    with pytest.raises(ValueError, match="overloads"):
+        BenchSpec(overloads="")
+    # replace: dict-merge and dotted forms, same semantics as RunSpec
+    bench = BenchSpec()
+    b2 = bench.replace(workload={"rate": 2.0}, **{"slo.deadlines": "32"})
+    assert b2.workload.rate == 2.0
+    assert b2.workload.requests == bench.workload.requests
+    assert b2.slo.deadlines == "32"
+    assert bench.slo.deadlines is None          # original frozen
+    with pytest.raises(ValueError, match="unknown field"):
+        bench.replace(**{"workload.ratez": 3})
+
+
+def test_slo_spec_deadline_semantics():
+    assert SLOSpec().deadline_for(0) is None
+    flat = SLOSpec(deadlines="64")
+    assert flat.deadline_for(0) == 64 and flat.deadline_for(3) == 64
+    per = SLOSpec(deadlines="0=32,1=96")
+    assert per.deadline_for(0) == 32 and per.deadline_for(1) == 96
+    # classes beyond the map inherit the lowest-urgency entry
+    assert per.deadline_for(5) == 96
+    assert per.deadline_map() == {0: 32, 1: 96}
+
+
+def test_workload_spec_weight_parsing():
+    assert WorkloadSpec(tenants="2,1").tenant_weights() == [2.0, 1.0]
+    assert WorkloadSpec(priority_mix="1,1,2").priority_weights() == \
+        [1.0, 1.0, 2.0]
+    assert BenchSpec(overloads="1,1.5,2").overload_factors() == [1.0, 1.5, 2.0]
+    assert BenchSpec(ranks="8,16").rank_arms() == [8, 16]
+    with pytest.raises(ValueError, match="ranks"):
+        BenchSpec(ranks="8,x")
 
 
 def test_sharding_spec_single_device_mesh_is_none():

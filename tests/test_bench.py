@@ -1,0 +1,245 @@
+"""The traffic harness: workload generator determinism, the
+BENCH_<area>.json schema contract, and an end-to-end tiny bench run.
+
+The load generator's central promise is body/arrival separation — the
+*same* requests are offered at every overload factor, only their
+arrival stamps change — because that is what makes FIFO-vs-SLO goodput
+at 2x a controlled comparison rather than two different workloads.
+These tests pin that promise, the arrival processes' shapes, the
+geometry clipping that keeps every request admissible, and the schema
+validator both ways (accepts the emitter's output, rejects drift).
+"""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.api.specs import BenchSpec, ModelSpec, SLOSpec, WorkloadSpec
+from repro.bench import (
+    bench_envelope,
+    generate_requests,
+    run_bench,
+    validate_bench,
+    write_bench,
+)
+from repro.bench.schema import ARM_METRIC_KEYS
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+VOCAB = 256
+MAX_TOTAL = 128
+
+
+def _bodies(reqs):
+    """Everything about a request except its arrival stamp."""
+    return [(r.rid, r.prompt.tolist(), r.max_new_tokens, r.deadline,
+             r.tenant, r.priority) for r in reqs]
+
+
+# ------------------------------------------------------------ workload --
+
+def test_bodies_identical_across_overload_factors():
+    wl = WorkloadSpec(requests=24, tenants="2,1", priority_mix="3,1",
+                      shared_prefix=8, seed=7)
+    slo = SLOSpec(deadlines="0=20,1=40")
+    one = generate_requests(wl, slo, vocab=VOCAB, max_total=MAX_TOTAL,
+                            overload=1.0)
+    two = generate_requests(wl, slo, vocab=VOCAB, max_total=MAX_TOTAL,
+                            overload=2.0)
+    assert _bodies(one) == _bodies(two)
+    # ... and the trace itself is reproducible end to end
+    again = generate_requests(wl, slo, vocab=VOCAB, max_total=MAX_TOTAL,
+                              overload=1.0)
+    assert _bodies(one) == _bodies(again)
+    assert [r.arrival for r in one] == [r.arrival for r in again]
+
+
+def test_overload_compresses_arrivals():
+    wl = WorkloadSpec(arrival="fixed", rate=0.25, requests=16)
+    one = generate_requests(wl, vocab=VOCAB, max_total=MAX_TOTAL,
+                            overload=1.0)
+    four = generate_requests(wl, vocab=VOCAB, max_total=MAX_TOTAL,
+                             overload=4.0)
+    assert one[-1].arrival == 4 * four[-1].arrival
+    for reqs in (one, four):
+        arr = [r.arrival for r in reqs]
+        assert arr == sorted(arr)
+        assert arr[0] == 0
+
+
+def test_onoff_arrivals_respect_silent_windows():
+    wl = WorkloadSpec(arrival="onoff", rate=2.0, requests=64,
+                      on_steps=4, off_steps=4, seed=3)
+    reqs = generate_requests(wl, vocab=VOCAB, max_total=MAX_TOTAL)
+    period = wl.on_steps + wl.off_steps
+    assert all(r.arrival % period < wl.on_steps for r in reqs)
+    # poisson at the same rate does land arrivals inside those windows
+    wl_p = wl.replace(arrival="poisson")
+    reqs_p = generate_requests(wl_p, vocab=VOCAB, max_total=MAX_TOTAL)
+    assert any(r.arrival % period >= wl.on_steps for r in reqs_p)
+
+
+def test_geometry_clipping_and_shared_prefixes():
+    wl = WorkloadSpec(requests=32, tenants="1,1", shared_prefix=16,
+                      prompt_mean=200, prompt_cv=2.0, gen_mean=200,
+                      gen_cv=2.0, seed=11)
+    reqs = generate_requests(wl, vocab=VOCAB, max_total=MAX_TOTAL)
+    prefixes = {}
+    for r in reqs:
+        assert r.prompt_len + r.max_new_tokens <= MAX_TOTAL
+        assert r.prompt_len > wl.shared_prefix      # prefix + >=1 tail token
+        assert r.max_new_tokens >= 1
+        head = r.prompt[:wl.shared_prefix].tolist()
+        prefixes.setdefault(r.tenant, head)
+        # one stable system prompt per tenant, distinct across tenants
+        assert prefixes[r.tenant] == head
+    assert len(prefixes) == 2
+    assert prefixes["t0"] != prefixes["t1"]
+
+
+def test_deadlines_follow_priority_classes():
+    wl = WorkloadSpec(requests=48, priority_mix="1,1", seed=5)
+    slo = SLOSpec(deadlines="0=10,1=99")
+    reqs = generate_requests(wl, slo, vocab=VOCAB, max_total=MAX_TOTAL)
+    seen = {r.priority for r in reqs}
+    assert seen == {0, 1}
+    for r in reqs:
+        assert r.deadline == {0: 10, 1: 99}[r.priority]
+    # no SLOSpec -> unbounded requests
+    assert all(r.deadline is None
+               for r in generate_requests(wl, vocab=VOCAB,
+                                          max_total=MAX_TOTAL))
+
+
+def test_geometry_too_small_for_prefix_rejected():
+    wl = WorkloadSpec(shared_prefix=30)
+    with pytest.raises(ValueError, match="shared_prefix"):
+        generate_requests(wl, vocab=VOCAB, max_total=31)
+
+
+# -------------------------------------------------------------- schema --
+
+def _valid_arm():
+    return {"overload": 1.0, "scheduler": "fifo",
+            "metrics": {k: 0.0 for k in ARM_METRIC_KEYS}}
+
+
+def test_envelope_builder_emits_valid_doc():
+    doc = bench_envelope("serving", BenchSpec().to_dict(), [_valid_arm()])
+    assert validate_bench(doc) == []
+    # round-trips through the committed-file formatting
+    assert validate_bench(json.loads(json.dumps(doc))) == []
+
+
+def test_validator_collects_all_drift():
+    arm = _valid_arm()
+    del arm["metrics"]["goodput_tokens_per_s"]
+    arm["metrics"]["tokens_per_s"] = "fast"
+    doc = {"schema_version": 99, "area": "", "spec": [],
+           "results": [arm]}
+    errs = validate_bench(doc)
+    assert any("schema_version" in e for e in errs)
+    assert any("area" in e for e in errs)
+    assert any("spec" in e for e in errs)
+    assert any("goodput_tokens_per_s" in e for e in errs)
+    assert any("tokens_per_s" in e for e in errs)
+
+
+def test_envelope_without_measurements_rejected():
+    with pytest.raises(ValueError, match="results / entries"):
+        bench_envelope("serving", {}, [])
+    # table-style envelopes may carry entries instead of arms
+    doc = bench_envelope("table3", {}, [], entries=[{"kind": "config"}])
+    assert validate_bench(doc) == []
+
+
+def test_null_percentiles_are_legal():
+    # an arm where nothing completed reports null percentiles, not NaN
+    arm = _valid_arm()
+    arm["metrics"]["ttft_p50_steps"] = None
+    arm["metrics"]["itl_p99_s"] = None
+    assert validate_bench(
+        bench_envelope("serving", {}, [_valid_arm(), arm])) == []
+
+
+# ------------------------------------------------------- end to end --
+
+def _tiny_bench():
+    return BenchSpec(
+        model=ModelSpec("smollm2-135m", reduced=True),
+        workload=WorkloadSpec(requests=6, prompt_mean=8, gen_mean=4,
+                              rate=0.5, tenants="1,1"),
+        slo=SLOSpec(deadlines="24"),
+        overloads="1,2",
+        schedulers="fifo,slo",
+    )
+
+
+def test_run_bench_tiny_envelope_validates(tmp_path):
+    doc = run_bench(_tiny_bench())
+    assert validate_bench(doc) == []
+    assert len(doc["results"]) == 4                # 2 overloads x 2 arms
+    assert "throughput" not in doc                 # single fp32 variant
+    for arm in doc["results"]:
+        m = arm["metrics"]
+        assert m["requests"] == 6.0
+        assert m["completed"] + m["timed_out"] + m["shed"] == 6.0
+        # tenant fair-share accounting rides along on the slo arms
+        if arm["scheduler"] == "slo":
+            assert "tenant_t0_tokens" in m or "tenant_t1_tokens" in m
+    out = tmp_path / "BENCH_tiny.json"
+    write_bench(doc, str(out))
+    assert validate_bench(json.loads(out.read_text())) == []
+    assert out.read_text().endswith("\n")
+
+
+# ------------------------------------------------------- dispatcher --
+
+def test_bench_dispatcher_dump_spec_round_trips():
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro", "bench", "serving", "--dump-spec",
+         "--overloads", "1,3", "--schedulers", "slo",
+         "--tenants", "2,1", "--rate", "0.125"],
+        capture_output=True, text=True, cwd=str(REPO_ROOT),
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"},
+    )
+    assert proc.returncode == 0, proc.stderr
+    spec = BenchSpec.from_json(proc.stdout)
+    assert spec.overload_factors() == [1.0, 3.0]
+    assert spec.scheduler_arms() == ["slo"]
+    assert spec.workload.tenants == "2,1"
+    assert spec.workload.rate == 0.125
+    # the committed BENCH_serving.json stays schema-valid in-tree
+    committed = REPO_ROOT / "BENCH_serving.json"
+    if committed.exists():
+        assert validate_bench(json.loads(committed.read_text())) == []
+
+
+def test_committed_bench_matches_dispatcher_defaults():
+    """BENCH_serving.json must be regenerable: its embedded spec equals
+    the dispatcher's default spec, so `python -m repro bench serving`
+    reproduces the committed numbers (same seed, same trace)."""
+    committed = REPO_ROOT / "BENCH_serving.json"
+    if not committed.exists():
+        pytest.skip("no committed BENCH_serving.json")
+    doc = json.loads(committed.read_text())
+    spec = BenchSpec.from_dict(doc["spec"])
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro", "bench", "serving", "--dump-spec"],
+        capture_output=True, text=True, cwd=str(REPO_ROOT),
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"},
+    )
+    assert proc.returncode == 0, proc.stderr
+    assert BenchSpec.from_json(proc.stdout) == spec
+
+
+def test_workload_draws_cover_weighted_classes():
+    wl = WorkloadSpec(requests=64, tenants="1,1,1", priority_mix="1,1",
+                      seed=2)
+    reqs = generate_requests(wl, vocab=VOCAB, max_total=MAX_TOTAL)
+    assert {r.tenant for r in reqs} == {"t0", "t1", "t2"}
+    counts = np.bincount([r.priority for r in reqs], minlength=2)
+    assert counts.min() > 0

@@ -1,0 +1,65 @@
+#!/usr/bin/env python3
+"""Validate committed ``BENCH_<area>.json`` files against the envelope
+schema — the CI tripwire that keeps the perf trajectory machine-readable.
+
+Usage::
+
+    python tools/check_bench.py [FILE...]
+
+With no arguments, validates every ``BENCH_*.json`` at the repo root.
+Exit 0 when every file is schema-valid, 1 with a per-file error report
+otherwise (every violation listed, not just the first).
+
+Deliberately dependency-free: the schema module
+(src/repro/bench/schema.py) is stdlib-only at import time and is loaded
+here by file path, so this check runs in a bare interpreter without
+jax or the ``repro`` package installed — a milliseconds-long CI step.
+"""
+from __future__ import annotations
+
+import importlib.util
+import json
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+SCHEMA_PATH = REPO_ROOT / "src" / "repro" / "bench" / "schema.py"
+
+
+def _load_schema():
+    spec = importlib.util.spec_from_file_location("bench_schema", SCHEMA_PATH)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def main(argv: list[str]) -> int:
+    schema = _load_schema()
+    paths = [Path(a) for a in argv] or sorted(REPO_ROOT.glob("BENCH_*.json"))
+    if not paths:
+        print("check_bench: no BENCH_*.json files found", file=sys.stderr)
+        return 1
+    failed = False
+    for path in paths:
+        try:
+            doc = json.loads(path.read_text())
+        except (OSError, json.JSONDecodeError) as exc:
+            print(f"FAIL {path}: {exc}")
+            failed = True
+            continue
+        errors = schema.validate_bench(doc)
+        if errors:
+            failed = True
+            print(f"FAIL {path}:")
+            for err in errors:
+                print(f"  - {err}")
+        else:
+            arms = len(doc.get("results", []))
+            rows = len(doc.get("entries", []))
+            print(f"ok   {path} (schema_version {doc['schema_version']}, "
+                  f"{arms} arms, {rows} entries)")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
