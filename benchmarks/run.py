@@ -31,6 +31,8 @@ usage: python -m repro bench [<name>] [flags...]
 
   (no name)   run every suite, print the consolidated CSV
   serving     SLO/traffic harness -> BENCH_serving.json (--help for knobs)
+  speculative rank-ladder self-speculation vs plain decode ->
+              BENCH_speculative.json (acceptance rate, tokens/step)
   table3      rank sweep (--ranks/--steps/--batch/--seq/--json-out)
   table1 table2 table4 kernels roofline
               single paper-table / micro-bench suites
@@ -148,6 +150,11 @@ def build_serving_parser() -> argparse.ArgumentParser:
                     help="envelope path ('' to skip writing)")
     ap.add_argument("--dump-spec", action="store_true",
                     help="print the resolved BenchSpec JSON and exit")
+    ap.add_argument("--spec-from", default=None, metavar="FILE",
+                    help="ignore the flags above and rerun the BenchSpec "
+                         "embedded in this BENCH_*.json envelope — the "
+                         "regenerate-and-diff path tools/check_bench.py "
+                         "--diff closes in CI")
     # legacy workloads (benchmarks/bench_serving.py, unchanged flags)
     ap.add_argument("--shared-prefix", action="store_true",
                     help="legacy shared-system-prompt bench: prefix "
@@ -206,6 +213,20 @@ def serving_bench_from_args(args: argparse.Namespace):
     )
 
 
+def _bench_from_envelope(path: str):
+    """BenchSpec embedded in a committed BENCH_*.json envelope — the
+    spec IS the benchmark, so rerunning it reproduces the arms."""
+    import json
+
+    from repro.api import BenchSpec
+
+    with open(path) as f:
+        doc = json.load(f)
+    if not isinstance(doc, dict) or not isinstance(doc.get("spec"), dict):
+        raise SystemExit(f"{path}: not a BENCH envelope (no spec object)")
+    return BenchSpec.from_dict(doc["spec"])
+
+
 def cmd_serving(argv: Sequence[str]) -> int:
     args = build_serving_parser().parse_args(argv)
     if args.shared_prefix or args.compare_static:
@@ -220,7 +241,8 @@ def cmd_serving(argv: Sequence[str]) -> int:
             bench_serving.run()
         return 0
 
-    bench = serving_bench_from_args(args)
+    bench = (_bench_from_envelope(args.spec_from) if args.spec_from
+             else serving_bench_from_args(args))
     if args.dump_spec:
         print(bench.to_json(indent=2))
         return 0
@@ -240,6 +262,113 @@ def cmd_serving(argv: Sequence[str]) -> int:
         print(f"throughput {row['precision']:5s} rank={row['rank']}: "
               f"{row['tokens_per_s']:.1f} tok/s, "
               f"{int(row['weight_bytes'])} weight bytes")
+    if args.json_out:
+        write_bench(doc, args.json_out)
+        print(f"wrote {args.json_out}")
+    return 0
+
+
+# --------------------------------------------------------- speculative --
+
+def build_speculative_parser() -> argparse.ArgumentParser:
+    """Baseline-vs-speculative harness knobs; defaults are the
+    committed BENCH_speculative.json configuration (reduced rank-16
+    model, half-rank drafter)."""
+    ap = argparse.ArgumentParser(
+        prog="repro bench speculative",
+        description="rank-ladder self-speculative decoding vs plain "
+                    "greedy decode over one workload: acceptance rate, "
+                    "tokens/decode-step, token-identity gate, "
+                    "BENCH_speculative.json out")
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--full", action="store_true",
+                    help="full-size config (default: reduced, CPU-scale)")
+    ap.add_argument("--speculative-rank", default="8",
+                    help="drafter rank ladder, lowest first ('8', '4,8')")
+    ap.add_argument("--draft-tokens", type=int, default=4)
+    # serving geometry
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--num-pages", type=int, default=64)
+    ap.add_argument("--pages-per-seq", type=int, default=8)
+    ap.add_argument("--prefill-budget", type=int, default=64)
+    ap.add_argument("--scheduler", choices=["fifo", "slo"], default="fifo")
+    # workload (deterministic by default: fixed arrivals, pinned lengths)
+    ap.add_argument("--arrival", choices=["poisson", "onoff", "fixed"],
+                    default="fixed")
+    ap.add_argument("--rate", type=float, default=0.5)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--prompt-mean", type=int, default=16)
+    ap.add_argument("--prompt-cv", type=float, default=0.5)
+    ap.add_argument("--gen-mean", type=int, default=16)
+    ap.add_argument("--gen-cv", type=float, default=0.0)
+    # output
+    ap.add_argument("--json-out", default="BENCH_speculative.json",
+                    help="envelope path ('' to skip writing)")
+    ap.add_argument("--dump-spec", action="store_true",
+                    help="print the resolved BenchSpec JSON and exit")
+    ap.add_argument("--spec-from", default=None, metavar="FILE",
+                    help="rerun the BenchSpec embedded in this envelope "
+                         "(the CI regenerate-and-diff path)")
+    return ap
+
+
+def speculative_bench_from_args(args: argparse.Namespace):
+    from repro.api import BenchSpec, ModelSpec, ServeSpec, WorkloadSpec
+
+    return BenchSpec(
+        name="speculative",
+        model=ModelSpec(args.arch, reduced=not args.full),
+        serve=ServeSpec(
+            slots=args.slots,
+            page_size=args.page_size,
+            num_pages=args.num_pages,
+            pages_per_seq=args.pages_per_seq,
+            prefill_budget=args.prefill_budget,
+            scheduler=args.scheduler,
+            speculative_rank=args.speculative_rank,
+            draft_tokens=args.draft_tokens,
+        ),
+        workload=WorkloadSpec(
+            arrival=args.arrival,
+            rate=args.rate,
+            requests=args.requests,
+            seed=args.seed,
+            prompt_mean=args.prompt_mean,
+            prompt_cv=args.prompt_cv,
+            gen_mean=args.gen_mean,
+            gen_cv=args.gen_cv,
+        ),
+        overloads="1",
+        schedulers=args.scheduler,
+    )
+
+
+def cmd_speculative(argv: Sequence[str]) -> int:
+    args = build_speculative_parser().parse_args(argv)
+    bench = (_bench_from_envelope(args.spec_from) if args.spec_from
+             else speculative_bench_from_args(args))
+    if args.dump_spec:
+        print(bench.to_json(indent=2))
+        return 0
+
+    from repro.bench import run_speculative_bench, write_bench
+
+    doc = run_speculative_bench(
+        bench, log=lambda s: print(f"[bench] {s}", flush=True))
+    for arm in doc["results"]:
+        m = arm["metrics"]
+        line = (f"{arm['variant']:11s}: "
+                f"{int(m['completed'])}/{int(m['requests'])} completed | "
+                f"{m['tokens_per_step']:.2f} tokens/decode-step | "
+                f"ttft p50 {m['ttft_p50_steps']} steps")
+        if arm["variant"] == "speculative":
+            line += (f" | acceptance {m['acceptance_rate']:.2f} "
+                     f"({int(m['draft_accepted'])}/"
+                     f"{int(m['draft_proposed'])} drafted tokens)")
+        print(line)
+    print("outputs token-identical across arms")
     if args.json_out:
         write_bench(doc, args.json_out)
         print(f"wrote {args.json_out}")
@@ -294,6 +423,7 @@ def _simple_suite(name: str, arch: str):
 
 COMMANDS = {
     "serving": cmd_serving,
+    "speculative": cmd_speculative,
     "table3": cmd_table3,
     "table1": _simple_suite("table1", "smollm2-1.7b"),
     "table2": _simple_suite("table2", "llama3.1-70b"),

@@ -61,7 +61,8 @@ class Server:
     the engine's runtime (the static dense-cache path stays a
     launcher/test oracle, not a production server)."""
 
-    def __init__(self, spec: RunSpec, params: Any = None):
+    def __init__(self, spec: RunSpec, params: Any = None,
+                 drafter_params: Optional[Sequence[Any]] = None):
         if spec.serve.mode != "paged":
             raise ValueError(
                 f"Server drives the paged engine; serve.mode is "
@@ -76,8 +77,7 @@ class Server:
         if params is None:
             params = init_model(jax.random.PRNGKey(spec.train.seed), self.cfg)
         sv = spec.serve
-        self.engine = ServingEngine(
-            self.cfg, params, sv.paged_config(),
+        common = dict(
             prefill_token_budget=sv.prefill_budget,
             quantize=sv.quantize,
             prefix_cache=sv.prefix_cache,
@@ -85,6 +85,25 @@ class Server:
             scheduler=sv.scheduler,
             shed=sv.shed,
         )
+        if sv.speculative_rank is not None:
+            from repro.serving.speculative import SpeculativeEngine
+
+            # drafter_params=None derives the ladder by shrinking
+            # ``params`` — identical factors to a per-rank checkpoint
+            # restore (from_checkpoint passes the restored trees in)
+            self.engine: ServingEngine = SpeculativeEngine(
+                self.cfg, params, sv.paged_config(),
+                speculative_ranks=sv.speculative_ladder(),
+                draft_tokens=sv.draft_tokens,
+                drafter_params=drafter_params,
+                **common,
+            )
+        else:
+            if drafter_params is not None:
+                raise ValueError("drafter_params given but "
+                                 "serve.speculative_rank is unset")
+            self.engine = ServingEngine(self.cfg, params, sv.paged_config(),
+                                        **common)
         self.checkpoint_step: Optional[int] = None
         self._pending: List[Request] = []
         self._next_rid = 0
@@ -113,7 +132,15 @@ class Server:
         # same snapshot (they can disagree on rank otherwise)
         _, params = params_from_checkpoint(ckpt_dir, rank=spec.serve.rank,
                                            step=step)
-        server = cls(spec, params)
+        # speculative serving restores the SAME snapshot once more per
+        # ladder rank — the checkpoint manager's resize-on-restore path
+        # is the paper-exact rank truncation, so one checkpoint yields
+        # the whole drafter/verifier ladder
+        drafters = None
+        if spec.serve.speculative_rank is not None:
+            drafters = [params_from_checkpoint(ckpt_dir, rank=k, step=step)[1]
+                        for k in spec.serve.speculative_ladder()]
+        server = cls(spec, params, drafter_params=drafters)
         server.checkpoint_step = step
         return server
 

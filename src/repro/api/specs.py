@@ -245,7 +245,18 @@ class ServeSpec(_Spec):
     per-request defaults :meth:`Server.submit` stamps onto requests
     that don't say otherwise (priority 0 is the most urgent class;
     ``default_deadline`` falls back to ``request_timeout`` when None,
-    keeping the pre-SLO flag meaningful)."""
+    keeping the pre-SLO flag meaningful).
+
+    Self-speculative decoding: ``speculative_rank`` names the rank
+    ladder as a grammar string — ``"32"`` drafts at rank 32 and
+    verifies at full rank; ``"32,128"`` adds a rank-128 intermediate
+    verification stage (comma-separated, non-decreasing, drafter
+    first; the full-rank target is always implicit). The drafters are
+    rank-truncations of the *same* checkpoint (the paper's rank-sweep
+    result is what makes them usable for free); ``draft_tokens`` is
+    the burst length the drafter proposes per engine step. Requires
+    ``mode="paged"`` and is mutually exclusive with ``prefix_cache``
+    (serving/speculative.py explains both)."""
     mode: str = "paged"
     slots: int = 4
     page_size: int = 16
@@ -265,6 +276,8 @@ class ServeSpec(_Spec):
     tenant: str = "default"
     priority: int = 0
     default_deadline: Optional[int] = None
+    speculative_rank: Optional[str] = None
+    draft_tokens: int = 4
 
     def __post_init__(self):
         if self.mode not in ("paged", "static"):
@@ -279,6 +292,26 @@ class ServeSpec(_Spec):
                              f"(0 is the most urgent class)")
         if not self.tenant:
             raise ValueError("tenant must be a non-empty string")
+        if self.draft_tokens < 1:
+            raise ValueError(f"draft_tokens {self.draft_tokens} must be >= 1")
+        if self.speculative_rank is not None:
+            if self.mode != "paged":
+                raise ValueError("speculative decoding needs mode='paged'")
+            if self.prefix_cache:
+                raise ValueError(
+                    "speculative_rank and prefix_cache are mutually "
+                    "exclusive (an index page holds one ladder level's KV; "
+                    "a speculative sequence needs every level's)")
+            self.speculative_ladder()   # grammar errors at build time
+
+    def speculative_ladder(self) -> list:
+        """The parsed rank ladder (drafter first), or ``[]`` when
+        speculation is off — serving/speculative.py owns the grammar."""
+        if self.speculative_rank is None:
+            return []
+        from repro.serving.speculative import parse_ladder
+
+        return parse_ladder(self.speculative_rank)
 
     @property
     def effective_deadline(self) -> Optional[int]:

@@ -18,7 +18,12 @@ from repro.bench.schema import (
     validate_bench,
 )
 from repro.bench.workload import generate_requests
-from repro.bench.runner import arm_metrics, run_bench, write_bench
+from repro.bench.runner import (
+    arm_metrics,
+    run_bench,
+    run_speculative_bench,
+    write_bench,
+)
 
 __all__ = [
     "SCHEMA_VERSION",
@@ -28,5 +33,6 @@ __all__ = [
     "generate_requests",
     "arm_metrics",
     "run_bench",
+    "run_speculative_bench",
     "write_bench",
 ]

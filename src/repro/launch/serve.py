@@ -34,6 +34,14 @@ engine steps (expired requests are evicted with their partial output).
 Recurrent families opt out of prefix sharing/chunking — see
 docs/serving.md.
 
+Self-speculative decoding (streaming mode): ``--speculative-rank 8``
+drafts each burst with a rank-8 truncation of the same weights and
+verifies at full rank (``--speculative-rank 4,8`` stages the
+verification through a rank ladder); ``--draft-tokens`` sets the burst
+length. Output is the target's greedy decode token for token —
+``--verify`` applies unchanged — and the run prints the acceptance
+rate and tokens per decode step (docs/serving.md has the full story).
+
 Int8 serving (``--quantize int8``, either mode): spectral factors and
 dense projections are quantized per-channel to int8
 (serving/quantize.py) and dequantized on the fly at apply time. With
@@ -159,6 +167,16 @@ def run_stream(args, spec: RunSpec, params) -> None:
                  " [family opted out: recurrent state, exact-match only]"))
     print(f"inter-token latency: p50 {st['itl_p50_s'] * 1e3:.1f} ms, "
           f"p99 {st['itl_p99_s'] * 1e3:.1f} ms")
+    if args.speculative_rank is not None:
+        # speculative output IS the target's greedy output (acceptance
+        # only moves latency), so --verify below applies unchanged
+        print(f"speculative (ranks {args.speculative_rank} -> full, "
+              f"{int(st['draft_tokens'])} draft tokens/burst): "
+              f"acceptance {st['acceptance_rate']:.2f} "
+              f"({int(st['draft_accepted'])}/{int(st['draft_proposed'])} "
+              f"drafted tokens kept), "
+              f"{st['tokens_per_step']:.2f} tokens/decode-step "
+              f"over {int(st['decode_steps'])} steps")
     if args.request_timeout is not None:
         print(f"deadlines: {int(st['timed_out'])} timed out, "
               f"{int(st['cancelled'])} cancelled"
@@ -288,6 +306,15 @@ def build_parser() -> argparse.ArgumentParser:
                     help="admission policy: fifo (arrival order) or slo "
                          "(per-tenant fair share + priority + deadline-"
                          "aware shedding — serving/scheduler.py)")
+    ap.add_argument("--speculative-rank", default=None,
+                    help="self-speculative decoding: draft at these spectral "
+                         "ranks (comma-separated ladder, lowest first, e.g. "
+                         "'8' or '4,8') and verify at full rank — the "
+                         "drafters are rank-truncations of the same weights "
+                         "(serving/speculative.py)")
+    ap.add_argument("--draft-tokens", type=int, default=4,
+                    help="tokens the drafter proposes per engine step "
+                         "(with --speculative-rank)")
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="prepend this many shared system-prompt tokens to "
                          "every request in the trace (the prefix-cache "
@@ -334,6 +361,8 @@ def build_spec(args: argparse.Namespace) -> RunSpec:
             batch=args.batch,
             prompt_len=args.prompt_len,
             gen=args.gen,
+            speculative_rank=args.speculative_rank,
+            draft_tokens=args.draft_tokens,
         ),
     )
 
@@ -345,6 +374,8 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
         raise SystemExit("--paged and --stream go together (static mode: neither)")
     if args.serve_rank is not None and args.ckpt_dir is None:
         raise SystemExit("--serve-rank needs --ckpt-dir")
+    if args.speculative_rank is not None and not args.paged:
+        raise SystemExit("--speculative-rank needs --paged --stream")
 
     spec = build_spec(args)
     if args.dump_spec:

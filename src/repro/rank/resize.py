@@ -127,8 +127,13 @@ def grow_group(key: jax.Array, group: Dict[str, jax.Array], new_k: int, *,
 def resize_group(key: jax.Array, group: Dict[str, jax.Array], new_k: int, *,
                  retraction: str = "qr") -> Dict[str, jax.Array]:
     """Dispatch: shrink when ``new_k`` is below the current rank, grow
-    when above, identity (copy) when equal."""
+    when above, and an explicit bit-exact no-op when equal — same-rank
+    targets come from config-driven callers (a degenerate speculative
+    ladder like ``[128, 128]``, a schedule that re-states the current
+    rank) and must neither gather nor re-retract the factors."""
     k = group["s"].shape[-1]
+    if new_k == k:
+        return dict(group)
     if new_k < k:
         return shrink_group(group, new_k)[0]
     return grow_group(key, group, new_k, retraction=retraction)

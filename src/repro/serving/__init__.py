@@ -53,6 +53,7 @@ __all__ = [
     "SLOScheduler",
     "Request",
     "ServingEngine",
+    "SpeculativeEngine",
 ]
 
 
@@ -60,4 +61,7 @@ def __getattr__(name):
     if name == "ServingEngine":
         from repro.serving.engine import ServingEngine
         return ServingEngine
+    if name == "SpeculativeEngine":
+        from repro.serving.speculative import SpeculativeEngine
+        return SpeculativeEngine
     raise AttributeError(name)

@@ -180,7 +180,6 @@ class ServingEngine:
         self.cancelled = 0
         self.timed_out = 0
         self.shed = 0
-        self.peak_pages = 0              # max pool pages resident at once
         self.wall_s = 0.0
         self.step_times: Deque[float] = deque(maxlen=LATENCY_WINDOW)
         # per-request completion records (rid, tenant, TTFT, SLO-met, ...)
@@ -279,13 +278,14 @@ class ServingEngine:
                 while self._backlog and self._backlog[0].arrival <= self._clock:
                     req = self._backlog.pop(0)
                     self._arrive_wall[req.rid] = time.time()
-                    self.sched.submit(req)
+                    # submit-time clock anchors the relative deadline: a
+                    # reused engine's clock never reset, and the request
+                    # must not inherit steps it was never alive for
+                    self.sched.submit(req, now=self._clock)
                 self.sched.expire_deadlines(self._clock)
                 for seq in self.sched.admit():
                     self.prompt_tokens += seq.request.prompt_len
                     self.prefix_shared_tokens += seq.shared_len
-                self.peak_pages = max(self.peak_pages,
-                                      self.sched.pool.allocated_count)
                 self._prefill_step()
                 if any(s.status == "decoding" for s in self.sched.active.values()):
                     self._decode_once()
@@ -315,6 +315,15 @@ class ServingEngine:
         (first token from prefill, rest from decode). The batch wrapper
         over :meth:`serve`."""
         return {rid: tokens for rid, tokens, _ in self.serve(requests)}
+
+    @property
+    def peak_pages(self) -> int:
+        """Max pool pages ever resident at once. Read from the pool's
+        own allocation-site high-water mark, so pages allocated and
+        released *within* one engine step (COW forks, a decode-time
+        boundary page on a sequence that finishes the same step) count —
+        a per-step poll of ``allocated_count`` missed those."""
+        return self.sched.pool.peak_allocated
 
     @property
     def has_pending_work(self) -> bool:
@@ -367,6 +376,10 @@ class ServingEngine:
         arrive_wall = self._arrive_wall.pop(req.rid, None)
         first_wall = self._first_tok_wall.pop(req.rid, None)
         finish = self._clock
+        # clock-domain latencies measure from the deadline anchor
+        # (submit-time clock, == arrival on any fresh trace) so engine
+        # reuse cannot charge a request for steps before it existed
+        anchor = req.deadline_anchor
         return {
             "rid": req.rid,
             "tenant": req.tenant,
@@ -377,7 +390,7 @@ class ServingEngine:
             "admit_clock": seq.admit_clock,
             "first_token_clock": seq.first_token_clock,
             "finish_clock": finish,
-            "ttft_steps": (seq.first_token_clock - req.arrival
+            "ttft_steps": (seq.first_token_clock - anchor
                            if seq.first_token_clock is not None else None),
             "ttft_s": (first_wall - arrive_wall
                        if first_wall is not None and arrive_wall is not None
@@ -386,7 +399,7 @@ class ServingEngine:
             "new_tokens": len(seq.generated),
             "slo_met": (seq.status == "finished"
                         and (req.deadline is None
-                             or finish - req.arrival <= req.deadline)),
+                             or finish - anchor <= req.deadline)),
         }
 
     # ------------------------------------------------------------- steps --

@@ -183,6 +183,12 @@ class PagePool:
         self.num_pages = num_pages
         self._free: List[int] = list(range(num_pages - 1, -1, -1))
         self._refs: Dict[int, int] = {}
+        # high-water mark of concurrently allocated pages, maintained at
+        # the allocation site itself — callers that sample residency at
+        # one point in their loop (the engine's per-step stat) would miss
+        # pages allocated and released between samples (COW forks,
+        # decode-time boundary appends on a finishing sequence)
+        self.peak_allocated = 0
 
     @property
     def free_count(self) -> int:
@@ -204,6 +210,7 @@ class PagePool:
         out = [self._free.pop() for _ in range(n)]
         for p in out:
             self._refs[p] = 1
+        self.peak_allocated = max(self.peak_allocated, len(self._refs))
         return out
 
     def share(self, page_ids: Sequence[int]) -> None:

@@ -64,15 +64,32 @@ class Request:
     ``tenant`` and ``priority`` are scheduling metadata the
     :class:`SLOScheduler` consumes (per-tenant fair share; priority
     class 0 is the most urgent) — the FIFO scheduler carries them
-    through untouched."""
+    through untouched.
+
+    ``submit_clock`` is stamped by the scheduler when the request is
+    actually handed over (:meth:`ContinuousBatchingScheduler.submit`),
+    and relative deadlines are measured from
+    :attr:`deadline_anchor` = ``max(arrival, submit_clock)`` — on a
+    reused engine whose step clock never reset, a fresh request with
+    ``arrival=0`` must not inherit steps it was never alive for."""
     rid: int
     prompt: np.ndarray                 # (prompt_len,) int32 token ids
     max_new_tokens: int
     arrival: int = 0                   # engine step at which it enters the queue
     eos_id: Optional[int] = None
-    deadline: Optional[int] = None     # max engine steps after arrival
+    deadline: Optional[int] = None     # max engine steps after deadline_anchor
     tenant: str = "default"
     priority: int = 0                  # 0 = most urgent class
+    submit_clock: Optional[int] = None  # engine step of scheduler hand-over
+
+    @property
+    def deadline_anchor(self) -> int:
+        """The step relative deadlines count from: submit time, never
+        earlier than the declared arrival (a future-arrival request's
+        deadline still starts at its arrival)."""
+        if self.submit_clock is None:
+            return self.arrival
+        return max(self.arrival, self.submit_clock)
 
     @property
     def prompt_len(self) -> int:
@@ -252,7 +269,14 @@ class ContinuousBatchingScheduler:
         self._now = 0                  # engine-step clock (expire_deadlines)
 
     # ------------------------------------------------------------- api --
-    def submit(self, req: Request) -> None:
+    def submit(self, req: Request, now: Optional[int] = None) -> None:
+        """Queue one request. ``now`` is the submitter's engine-step
+        clock; it anchors the request's relative deadline (see
+        :attr:`Request.deadline_anchor`). When omitted, the scheduler's
+        own clock is used — an explicit ``submit_clock`` already on the
+        request is respected either way."""
+        if req.submit_clock is None:
+            req.submit_clock = self._now if now is None else int(now)
         need = self.pcfg.pages_for(req.max_total_len)
         if need > self.pcfg.max_pages_per_seq:
             raise ValueError(
@@ -380,25 +404,45 @@ class ContinuousBatchingScheduler:
         forked copy-on-write. Returns ``(slot, src_page, dst_page)``
         forks for the engine to copy device-side (empty under the
         full-page sharing policy — see class docstring)."""
+        return self.ensure_burst_capacity(
+            {slot: 1 for slot, seq in self.active.items()
+             if seq.status == "decoding"})
+
+    def ensure_burst_capacity(self, burst: Dict[int, int]
+                              ) -> List[Tuple[int, int, int]]:
+        """Generalized :meth:`ensure_append_capacity` for multi-token
+        draft/verify bursts: each decoding slot in ``burst`` must own —
+        with refcount 1 — every page covering the ``burst[slot]`` token
+        positions ``[seq_len, seq_len + n)`` the burst will write.
+        Missing pages are allocated from the reservation (the caller
+        caps ``n`` at the sequence's remaining token budget, so the
+        reservation always covers the burst); a shared page in the
+        write range forks copy-on-write. Returns ``(slot, src, dst)``
+        forks for the engine to copy device-side — in every ladder
+        level's pool, for a speculative engine."""
         forks: List[Tuple[int, int, int]] = []
-        for seq in self.active.values():
-            if seq.status != "decoding":
+        ps = self.pcfg.page_size
+        for slot, n in burst.items():
+            seq = self.active[slot]
+            if seq.status != "decoding" or n < 1:
                 continue
-            page_idx = seq.seq_len // self.pcfg.page_size
-            if page_idx >= len(seq.pages):
-                assert len(seq.pages) < seq.reserved_pages, (
-                    f"seq {seq.request.rid} outgrew its reservation")
-                (page,) = self._alloc(1)
-                seq.pages.append(page)
-                self.block_table[seq.slot, page_idx] = page
-            elif self.pool.is_shared(seq.pages[page_idx]):
-                src = seq.pages[page_idx]
-                (dst,) = self._alloc(1)
-                self.pool.release([src])
-                seq.pages[page_idx] = dst
-                self.block_table[seq.slot, page_idx] = dst
-                self.cow_forks += 1
-                forks.append((seq.slot, src, dst))
+            first = seq.seq_len // ps
+            last = (seq.seq_len + n - 1) // ps
+            for page_idx in range(first, last + 1):
+                if page_idx >= len(seq.pages):
+                    assert len(seq.pages) < seq.reserved_pages, (
+                        f"seq {seq.request.rid} outgrew its reservation")
+                    (page,) = self._alloc(1)
+                    seq.pages.append(page)
+                    self.block_table[slot, page_idx] = page
+                elif self.pool.is_shared(seq.pages[page_idx]):
+                    src = seq.pages[page_idx]
+                    (dst,) = self._alloc(1)
+                    self.pool.release([src])
+                    seq.pages[page_idx] = dst
+                    self.block_table[slot, page_idx] = dst
+                    self.cow_forks += 1
+                    forks.append((slot, src, dst))
         return forks
 
     def on_token(self, slot: int, token: int) -> Optional[SeqState]:
@@ -447,19 +491,22 @@ class ContinuousBatchingScheduler:
         return False
 
     def expire_deadlines(self, clock: int) -> int:
-        """Evict every request whose deadline (engine steps since
-        arrival) has passed — waiting or active. Called once per engine
-        step with the current clock. Returns the number expired; the
-        sequences themselves surface through :meth:`drain_finished`
-        with status ``"timeout"``. Also advances the scheduler's notion
-        of *now* — the clock admission policies (SLO shedding,
-        ``admit_clock``) reason against."""
+        """Evict every request whose deadline (engine steps since its
+        :attr:`Request.deadline_anchor` — submit time, not raw arrival,
+        so engine reuse cannot dilate a relative deadline) has passed —
+        waiting or active. Called once per engine step with the current
+        clock. Returns the number expired; the sequences themselves
+        surface through :meth:`drain_finished` with status
+        ``"timeout"``. Also advances the scheduler's notion of *now* —
+        the clock admission policies (SLO shedding, ``admit_clock``)
+        reason against."""
         self._now = clock
         expired = [r.rid for r in list(self.waiting)
-                   if r.deadline is not None and clock - r.arrival >= r.deadline]
+                   if r.deadline is not None
+                   and clock - r.deadline_anchor >= r.deadline]
         expired += [s.request.rid for s in list(self.active.values())
                     if s.request.deadline is not None
-                    and clock - s.request.arrival >= s.request.deadline]
+                    and clock - s.request.deadline_anchor >= s.request.deadline]
         for rid in expired:
             self.cancel(rid, status="timeout")
         return len(expired)
@@ -591,7 +638,7 @@ class SLOScheduler(ContinuousBatchingScheduler):
         dies when ``clock - arrival >= deadline``."""
         if req.deadline is None:
             return False
-        remaining = req.arrival + req.deadline - self._now
+        remaining = req.deadline_anchor + req.deadline - self._now
         return remaining < req.max_new_tokens
 
     def _shed_doomed(self) -> None:
@@ -620,7 +667,7 @@ class SLOScheduler(ContinuousBatchingScheduler):
             enumerate(self.waiting),
             key=lambda iv: (self.served_tokens.get(iv[1].tenant, 0),
                             iv[1].priority,
-                            (iv[1].arrival + iv[1].deadline
+                            (iv[1].deadline_anchor + iv[1].deadline
                              if iv[1].deadline is not None else float("inf")),
                             iv[0]),
         )[1]

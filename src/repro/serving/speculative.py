@@ -1,0 +1,329 @@
+"""Self-speculative decoding via the spectral rank ladder.
+
+The paper's rank-sweep finding — every tested rank converges to the
+same loss floor — makes a rank-shrunk copy of a checkpoint a *free*
+draft model for its own full-rank target: no second model to train,
+load, or keep in sync. ``SpeculativeEngine`` runs a ladder of
+rank-truncated variants of one set of weights over a **shared page
+pool**:
+
+  * the lowest-rank level (the *drafter*) greedy-decodes
+    ``draft_tokens`` tokens with the already-compiled batched
+    ``(max_slots, 1)`` decode step, writing its own KV as it goes;
+  * each higher level *verifies* the previous level's proposal burst in
+    one batched forward — the chunked-prefill offset path
+    (``prefill_chunk_paged`` -> ``paged_write_slice``) scores all burst
+    positions at once while writing that level's KV for them;
+  * the full-rank target verifies last; accepted tokens are committed,
+    and the first rejection replaces the rest of the burst with the
+    target's own greedy token.
+
+**Rollback is free.** Every level's pool keeps stale KV behind the
+attention validity mask (positions past ``seq_len`` are unreachable and
+are overwritten by later writes at the same logical positions), so
+rejecting a suffix of the burst is pure ``seq_len`` accounting — the
+scheduler's block tables and page refcounts are shared by all levels
+and never move backwards.
+
+**Output is exactly the target's greedy decode.** A committed token is
+either a proposal that *matched* the target's greedy prediction for
+its position, or the target's own greedy prediction (the correction at
+the first mismatch). Acceptance rate changes latency, never the token
+stream — the token-for-token property tests against the static oracle
+hold for the speculative engine unchanged.
+
+Cache-validity invariant (why every level can keep serving after a
+partial commit): level ``l`` caches KV for its verify inputs
+``[t0] + P_{l-1}[:-1]`` at positions ``[seq_len, seq_len + |P_{l-1}|)``.
+Each verification preserves the first ``|P_l| - 1`` proposals (a
+correction only ever lands at the *last* index), and proposal lists
+only shrink up the ladder — so for a final commit of ``c`` tokens,
+every level's positions ``[seq_len, seq_len + c)`` hold KV for exactly
+``[t0] + committed[:c-1]``; the last committed token becomes the next
+input and is cached by no level (the same convention the
+non-speculative engine keeps for ``_next_input``).
+
+Family policy: speculation needs the paged offset-prefill path, so it
+is restricted to ``PREFIX_SHARING_FAMILIES`` (GQA dense and MLA MoE
+attention); recurrent families carry state that cannot roll back by
+masking. The prefix *cache* is mutually exclusive with speculation:
+index pages hold one level's KV, but an admitted sequence needs every
+level's KV for its prompt.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.model_config import ModelConfig
+from repro.models.decode import ATTN_STATE_KEYS, supports_prefix_sharing
+from repro.models.model import init_paged_state
+from repro.serving.engine import ServingEngine
+from repro.serving.paged_cache import PagedCacheConfig
+from repro.serving.scheduler import SeqState
+
+__all__ = ["SpeculativeEngine", "derive_drafters", "parse_ladder"]
+
+
+def parse_ladder(spec: Any) -> List[int]:
+    """Rank-ladder grammar -> ordered rank list. Accepts an int, an int
+    sequence, or the ServeSpec string form (``"32"`` or ``"32,128"``).
+    Ranks run drafter-first and must be positive and non-decreasing —
+    equal adjacent ranks are legal (the degenerate ladder the same-rank
+    resize no-op exists for), the full-rank target is implicit."""
+    if isinstance(spec, int):
+        ranks = [spec]
+    elif isinstance(spec, str):
+        try:
+            ranks = [int(r) for r in spec.split(",") if r.strip()]
+        except ValueError:
+            raise ValueError(f"speculative rank ladder {spec!r}: want "
+                             f"comma-separated ints, lowest (drafter) first")
+    else:
+        ranks = [int(r) for r in spec]
+    if not ranks:
+        raise ValueError("speculative rank ladder must name at least one rank")
+    if any(r < 1 for r in ranks):
+        raise ValueError(f"speculative rank ladder {ranks}: ranks must be >= 1")
+    if ranks != sorted(ranks):
+        raise ValueError(f"speculative rank ladder {ranks} must be "
+                         f"non-decreasing (drafter first, target implicit)")
+    return ranks
+
+
+def derive_drafters(params: Any, ranks: Sequence[int]) -> List[Any]:
+    """Rank-shrunk copies of ``params``, one per ladder rank, drafter
+    first. A shrink is pure deterministic column selection (Eckart–Young
+    top-|s|), so this is bit-identical to restoring the same checkpoint
+    at ``target_rank=K`` — ``Server.from_checkpoint`` goes through the
+    checkpoint manager's restore-at-rank path instead, one ``restore``
+    call per level, and lands on the same factors."""
+    from repro.rank.resize import clamp_target, resize_tree
+
+    # shrink never consumes randomness; the key only feeds the (never
+    # taken here) grow path of resize_tree
+    key = jax.random.PRNGKey(0)
+    return [resize_tree(key, params, clamp_target(params, int(r)))
+            for r in ranks]
+
+
+class SpeculativeEngine(ServingEngine):
+    """Continuous-batching engine with rank-ladder self-speculation.
+
+    Construction takes the full-rank ``params`` (the verification
+    target) plus ``speculative_ranks`` — the rank ladder, drafter
+    (lowest) first. Drafter weight trees are derived by shrinking
+    ``params`` unless ``drafter_params`` hands them in explicitly
+    (``Server.from_checkpoint`` restores each ladder rank from the
+    checkpoint). Every level shares the scheduler, block tables, and
+    page-pool accounting; each level owns its own device-side KV pools
+    with identical geometry, so one physical page id addresses the same
+    logical positions at every rank.
+
+    Per engine step, instead of one batched decode: draft
+    ``draft_tokens`` greedily at the lowest rank, verify the burst
+    through each higher rank, verify at full rank, commit the longest
+    target-agreeing prefix (plus the target's correction token at the
+    first mismatch). Verify bursts are charged against the chunked-
+    prefill token budget, so speculation and prompt chunking share one
+    per-step compute bound."""
+
+    def __init__(self, cfg: ModelConfig, params, pcfg: PagedCacheConfig, *,
+                 speculative_ranks, draft_tokens: int = 4,
+                 drafter_params: Optional[Sequence[Any]] = None, **kw):
+        ranks = parse_ladder(speculative_ranks)
+        if draft_tokens < 1:
+            raise ValueError(f"draft_tokens {draft_tokens} must be >= 1")
+        if not supports_prefix_sharing(cfg):
+            raise NotImplementedError(
+                f"speculative decoding needs the paged offset-prefill path; "
+                f"family {cfg.family!r} keeps recurrent state that cannot "
+                f"roll back by seq_len masking")
+        if kw.get("prefix_cache"):
+            raise ValueError(
+                "prefix_cache and speculative decoding are mutually "
+                "exclusive: index pages hold a single level's KV, but a "
+                "speculative sequence needs every ladder level's KV for "
+                "its prompt")
+        if drafter_params is None:
+            drafter_params = derive_drafters(params, ranks)
+        elif len(drafter_params) != len(ranks):
+            raise ValueError(f"{len(drafter_params)} drafter param trees "
+                             f"for a {len(ranks)}-rank ladder")
+        super().__init__(cfg, params, pcfg, **kw)
+        if self.quantize == "int8":
+            # same contract as the target: shrink first, then quantize
+            from repro.serving.quantize import quantize_tree
+
+            drafter_params = [quantize_tree(p) for p in drafter_params]
+        self.speculative_ranks = tuple(ranks)
+        self.draft_tokens = int(draft_tokens)
+        self.ladder_params: List[Any] = list(drafter_params)
+        self.ladder_states: List[Dict] = [init_paged_state(cfg, pcfg)
+                                          for _ in ranks]
+        # speculation counters (stats(): acceptance_rate, tokens_per_step)
+        self.draft_proposed = 0       # drafter tokens offered to the ladder
+        self.draft_accepted = 0       # drafter tokens that survived to commit
+        self.spec_bursts = 0          # draft->verify->commit rounds run
+
+    # ----------------------------------------------------------- prefill --
+    def _run_chunk(self, seq: SeqState, c: int):
+        """Prompt chunks run through *every* level: each rank's pool
+        needs its own prompt KV before it can draft or verify. Only the
+        full-rank logits seed the first generated token."""
+        req = seq.request
+        toks = jnp.asarray(req.prompt[seq.prefill_pos:seq.prefill_pos + c],
+                           dtype=jnp.int32)[None]
+        bt = jnp.asarray(self.sched.block_table[seq.slot:seq.slot + 1])
+        start = jnp.int32(seq.prefill_pos)
+        for i, lp in enumerate(self.ladder_params):
+            _, self.ladder_states[i] = self._chunk_fn(
+                lp, toks, self.ladder_states[i], bt, start)
+        logits, self.state = self._chunk_fn(self.params, toks, self.state,
+                                            bt, start)
+        seq.prefill_pos += c
+        self.prefill_tokens += c
+        return logits
+
+    def _prefill_step(self) -> None:
+        """Verify bursts count against the chunked-prefill token budget:
+        the tokens the coming decode phase will draft+verify shrink this
+        step's prompt-chunk allowance (never below the 1-token progress
+        guarantee), so a speculative engine under chunked prefill keeps
+        the same per-step compute bound as a plain one."""
+        if not self.chunked_prefill:
+            return super()._prefill_step()
+        burst = sum(
+            min(self.draft_tokens,
+                seq.request.max_new_tokens - len(seq.generated))
+            for seq in self.sched.active.values() if seq.status == "decoding")
+        saved = self.prefill_chunk
+        self.prefill_chunk = max(1, saved - burst)
+        try:
+            super()._prefill_step()
+        finally:
+            self.prefill_chunk = saved
+
+    # ------------------------------------------------------------ decode --
+    def _copy_fork_pages(self, src: int, dst: int) -> None:
+        """COW fork lands in every level's pools — the page id is shared
+        across the ladder, so its contents must fork everywhere."""
+        s, d = jnp.int32(src), jnp.int32(dst)
+        for key in ATTN_STATE_KEYS:
+            if key in self.state:
+                self.state[key] = self._copy_page_fn(self.state[key], s, d)
+        for st in self.ladder_states:
+            for key in ATTN_STATE_KEYS:
+                if key in st:
+                    st[key] = self._copy_page_fn(st[key], s, d)
+
+    def _verify(self, vparams, level: Optional[int], seq: SeqState,
+                t0: int, proposals: List[int]) -> List[int]:
+        """Score a proposal burst with one level in a single batched
+        forward. Inputs ``[t0] + proposals[:-1]`` run through the
+        chunked-prefill offset path at ``start=seq_len`` — writing this
+        level's KV for the burst as a side effect — and the greedy
+        prediction after input ``i`` is compared against
+        ``proposals[i]``. Returns the longest accepted prefix, with
+        this level's own greedy token replacing the first mismatch
+        (so the result is never empty and never longer than the
+        input). ``level=None`` is the full-rank target."""
+        if not proposals:
+            return proposals
+        toks = jnp.asarray([t0] + proposals[:-1], dtype=jnp.int32)[None]
+        bt = jnp.asarray(self.sched.block_table[seq.slot:seq.slot + 1])
+        state = self.state if level is None else self.ladder_states[level]
+        logits, state = self._chunk_fn(vparams, toks, state, bt,
+                                       jnp.int32(seq.seq_len))
+        if level is None:
+            self.state = state
+        else:
+            self.ladder_states[level] = state
+        preds = np.asarray(jnp.argmax(logits[0], axis=-1)).astype(np.int32)
+        out: List[int] = []
+        for i, p in enumerate(proposals):
+            if int(preds[i]) == p:
+                out.append(p)
+            else:
+                out.append(int(preds[i]))      # correction: always last
+                break
+        return out
+
+    def _decode_once(self) -> None:
+        """One draft -> staged-verify -> commit round (replaces the
+        single batched decode step)."""
+        decoding = {slot: seq for slot, seq in self.sched.active.items()
+                    if seq.status == "decoding"}
+        if not decoding:
+            return
+        # per-slot burst size: never draft past the sequence's remaining
+        # token budget (the page reservation covers exactly max_total)
+        k_eff = {slot: min(self.draft_tokens,
+                           seq.request.max_new_tokens - len(seq.generated))
+                 for slot, seq in decoding.items()}
+        for _, src, dst in self.sched.ensure_burst_capacity(k_eff):
+            self._copy_fork_pages(src, dst)
+
+        bt_np, sl_np = self.sched.decode_view()
+        bt = jnp.asarray(bt_np)
+        slots = np.fromiter(decoding, dtype=np.int64)
+
+        # ---- draft: k_max greedy steps at the lowest rank, against a
+        # local copy of the fill levels (rollback = never publishing it)
+        k_max = max(k_eff.values())
+        sl_local = sl_np.copy()
+        toks = self._next_input.copy()
+        proposals: Dict[int, List[int]] = {slot: [] for slot in decoding}
+        for _ in range(k_max):
+            logits, self.ladder_states[0] = self._decode_fn(
+                self.ladder_params[0], jnp.asarray(toks)[:, None],
+                self.ladder_states[0], bt, jnp.asarray(sl_local))
+            nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1)).astype(np.int32)
+            for slot in decoding:
+                proposals[slot].append(int(nxt[slot]))
+            toks = nxt
+            sl_local[slots] += 1
+
+        # ---- staged verification up the ladder, then the target commit
+        committed_total = 0
+        for slot, seq in decoding.items():
+            t0 = int(self._next_input[slot])
+            prop = proposals[slot][:k_eff[slot]]
+            self.draft_proposed += len(prop)
+            drafted = list(prop)
+            for level in range(1, len(self.ladder_params)):
+                prop = self._verify(self.ladder_params[level], level,
+                                    seq, t0, prop)
+            final = self._verify(self.params, None, seq, t0, prop)
+            committed: List[int] = []
+            for tok in final:
+                self._next_input[slot] = int(tok)
+                committed.append(int(tok))
+                if self.sched.on_token(slot, int(tok)) is not None:
+                    break                       # finished (EOS / budget): evicted
+            self.draft_accepted += sum(
+                1 for i, t in enumerate(committed)
+                if i < len(drafted) and t == drafted[i])
+            committed_total += len(committed)
+        self.spec_bursts += 1
+        self.decode_steps += 1
+        self.decoded_tokens += committed_total
+
+    # ------------------------------------------------------------- stats --
+    def stats(self) -> Dict[str, float]:
+        out = super().stats()
+        out.update({
+            "draft_proposed": float(self.draft_proposed),
+            "draft_accepted": float(self.draft_accepted),
+            "acceptance_rate": (self.draft_accepted / self.draft_proposed
+                                if self.draft_proposed else 0.0),
+            "tokens_per_step": (self.decoded_tokens / self.decode_steps
+                                if self.decode_steps else 0.0),
+            "spec_bursts": float(self.spec_bursts),
+            "draft_tokens": float(self.draft_tokens),
+            "ladder_levels": float(len(self.ladder_params)),
+        })
+        return out

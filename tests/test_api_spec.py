@@ -279,3 +279,23 @@ def test_sharding_spec_single_device_mesh_is_none():
     assert ShardingSpec(data=1, model=1).mesh(cfg) is None
     with pytest.raises(ValueError, match="devices"):
         ShardingSpec(data=4, model=2).mesh(cfg)
+
+
+def test_serve_spec_speculative_validation():
+    """Speculative-decoding knobs: ladder grammar checked at spec
+    construction, paged-mode and prefix-cache exclusivity enforced, and
+    the ladder round-trips through JSON like every other field."""
+    good = ServeSpec(speculative_rank="8,16", draft_tokens=3)
+    assert good.speculative_ladder() == [8, 16]
+    assert ServeSpec().speculative_ladder() == []    # off by default
+    run = RunSpec(serve=good)
+    assert RunSpec.from_json(run.to_json()) == run
+    for bad in ("16,8", "", "a", "0"):               # decreasing/empty/junk
+        with pytest.raises(ValueError):
+            ServeSpec(speculative_rank=bad)
+    with pytest.raises(ValueError):
+        ServeSpec(speculative_rank="8", prefix_cache=True)
+    with pytest.raises(ValueError):
+        ServeSpec(mode="static", speculative_rank="8")
+    with pytest.raises(ValueError):
+        ServeSpec(draft_tokens=0)

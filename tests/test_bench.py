@@ -243,3 +243,83 @@ def test_workload_draws_cover_weighted_classes():
     assert {r.tenant for r in reqs} == {"t0", "t1", "t2"}
     counts = np.bincount([r.priority for r in reqs], minlength=2)
     assert counts.min() > 0
+
+
+# ------------------------------------------------- speculative bench --
+
+def test_run_speculative_bench_tiny():
+    """Baseline/speculative arms over one tiny workload: schema-valid
+    envelope, acceptance counters on the speculative arm only, and the
+    cross-arm token-identity gate recorded as outputs_match."""
+    from repro.api.specs import ServeSpec
+    from repro.bench import run_speculative_bench
+
+    bench = BenchSpec(
+        name="speculative",
+        model=ModelSpec("llama3.2-1b", reduced=True),
+        workload=WorkloadSpec(requests=4, rate=1.0, prompt_mean=6,
+                              prompt_cv=0.5, gen_mean=5, gen_cv=0.0, seed=0),
+        serve=ServeSpec(slots=2, page_size=8, num_pages=32, pages_per_seq=4,
+                        speculative_rank="8", draft_tokens=3),
+        overloads="1", schedulers="fifo",
+    )
+    doc = run_speculative_bench(bench)
+    assert validate_bench(doc) == []
+    assert [a["variant"] for a in doc["results"]] == \
+        ["baseline", "speculative"]
+    base_m, spec_m = (a["metrics"] for a in doc["results"])
+    assert base_m["tokens_per_step"] > 0
+    assert "acceptance_rate" not in base_m
+    assert spec_m["outputs_match"] == 1.0
+    assert 0.0 <= spec_m["acceptance_rate"] <= 1.0
+    assert spec_m["draft_accepted"] <= spec_m["draft_proposed"]
+    assert spec_m["ladder_levels"] == 1.0
+    with pytest.raises(ValueError, match="speculative_rank"):
+        run_speculative_bench(bench.replace(
+            serve=bench.serve.replace(speculative_rank=None)))
+
+
+# ------------------------------------------------- check_bench --diff --
+
+def _load_check_bench():
+    import importlib.util
+
+    path = REPO_ROOT / "tools" / "check_bench.py"
+    spec = importlib.util.spec_from_file_location("check_bench", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_check_bench_diff_deterministic_columns_only():
+    """The staleness gate: identical envelopes pass, a moved
+    engine-step-clock column fails, wall-clock drift is ignored, and
+    one-sided arms are reported by name."""
+    import copy
+
+    cb = _load_check_bench()
+    arm = {"overload": 1.0, "scheduler": "fifo", "variant": "baseline",
+           "metrics": {k: 1.0 for k in ARM_METRIC_KEYS}}
+    doc = bench_envelope("speculative", {"seed": 0}, [arm])
+    assert cb.diff_envelopes(doc, doc) == []
+
+    moved = copy.deepcopy(doc)
+    moved["results"][0]["metrics"]["peak_pages"] = 7.0
+    assert any("peak_pages" in e for e in cb.diff_envelopes(moved, doc))
+
+    wall = copy.deepcopy(doc)
+    wall["results"][0]["metrics"]["wall_s"] = 99.0
+    wall["results"][0]["metrics"]["tokens_per_s"] = 0.125
+    assert cb.diff_envelopes(wall, doc) == []    # machine-dependent: ignored
+
+    extra = copy.deepcopy(doc)
+    extra["results"].append(
+        {**copy.deepcopy(arm), "variant": "speculative"})
+    assert any("regenerated file only" in e
+               for e in cb.diff_envelopes(extra, doc))
+    assert any("committed file only" in e
+               for e in cb.diff_envelopes(doc, extra))
+
+    other = copy.deepcopy(doc)
+    other["area"] = "serving"
+    assert any("area" in e for e in cb.diff_envelopes(other, doc))

@@ -29,6 +29,7 @@ from repro.rank import (
     grow_group,
     parse_rank_schedule,
     rank_metadata,
+    resize_group,
     resize_train_state,
     resize_tree,
     shrink_group,
@@ -410,3 +411,27 @@ def test_mesh_resize_regenerates_shardings():
     assert payload["resizes"] == [[4, 16, 32]]
     assert payload["ranks"] == [32]
     assert payload["finite"]
+
+
+def test_same_rank_resize_is_bit_exact_noop(key):
+    """Regression: a resize to the current rank (degenerate speculative
+    ladder like [128,128], a schedule re-stating the rank) must neither
+    gather nor re-retract — params come back as the same buffers."""
+    g = {"U": jax.random.normal(key, (6, K)),
+         "s": jnp.abs(jax.random.normal(jax.random.fold_in(key, 1), (K,))),
+         "V": jax.random.normal(jax.random.fold_in(key, 2), (5, K))}
+    same = resize_group(key, g, K)
+    assert same is not g                         # fresh dict, shared leaves
+    for name in ("U", "s", "V"):
+        assert same[name] is g[name]
+
+    cfg = get_config("smollm2-1.7b", reduced=True)
+    opt = make_sct_optimizer(cfg, total_steps=10)
+    state = opt.init(init_model(key, cfg))
+    state["opt"]["mu"] = jax.tree.map(
+        lambda x: jnp.arange(x.size, dtype=x.dtype).reshape(x.shape),
+        state["opt"]["mu"])
+    (k0,) = set(current_ranks(state["params"]))
+    same_state = resize_train_state(key, state, k0)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(same_state)):
+        assert a is b                            # moments included, bit-exact

@@ -428,3 +428,71 @@ def test_streaming_engine_recurrent_family(key):
         ref = solo.run([Request(rid=0, prompt=r.prompt,
                                 max_new_tokens=r.max_new_tokens)])[0]
         np.testing.assert_array_equal(out[r.rid], ref, err_msg=f"request {r.rid}")
+
+
+# ======================================================================
+# Accounting regressions: peak-page high-water and deadline anchoring
+# ======================================================================
+
+def test_page_pool_peak_is_allocation_site_high_water():
+    """peak_allocated is recorded inside alloc(), so it survives
+    releases and only moves when a new allocation exceeds it."""
+    pool = PagePool(8)
+    a = pool.alloc(3)
+    assert pool.peak_allocated == 3
+    pool.release(a)
+    assert pool.allocated_count == 0
+    assert pool.peak_allocated == 3          # high-water survives release
+    b = pool.alloc(2)
+    assert pool.peak_allocated == 3          # below the old peak: unchanged
+    c = pool.alloc(4)
+    assert pool.peak_allocated == 6
+    pool.release(b)
+    pool.release(c)
+    assert pool.peak_allocated == 6
+
+
+def test_engine_peak_pages_counts_mid_step_alloc(key):
+    """Regression: a request whose final engine step both allocates its
+    boundary page and finishes (releasing every page before the step
+    ends) must still report the transient maximum. An end-of-step
+    sample sees one page — or zero — and undercounts capacity."""
+    cfg = get_config("llama3.2-1b", reduced=True).replace(dtype="float32")
+    params = init_model(key, cfg)
+    pcfg = PagedCacheConfig(page_size=4, num_pages=8, max_slots=2,
+                            max_pages_per_seq=3)
+    prompt = np.arange(1, 5, dtype=np.int32)         # exactly one page
+    eng = ServingEngine(cfg, params, pcfg)
+    out = eng.run([Request(rid=0, prompt=prompt, max_new_tokens=2)])
+    assert len(out[0]) == 2
+    assert eng.sched.pool.allocated_count == 0       # fully released
+    assert eng.peak_pages == 2                       # prompt page + boundary
+
+
+def test_deadline_anchors_to_submit_on_reused_engine(key):
+    """Regression: engine reuse must not charge a new request for steps
+    it was never alive for. After a partially-consumed serve() left the
+    clock advanced, a fresh deadline-bearing request's expiry counts
+    from its submit step — anchored at arrival=0 it would time out
+    before ever being served."""
+    cfg = get_config("llama3.2-1b", reduced=True).replace(dtype="float32")
+    params = init_model(key, cfg)
+    pcfg = PagedCacheConfig(page_size=4, num_pages=16, max_slots=2,
+                            max_pages_per_seq=4)
+    eng = ServingEngine(cfg, params, pcfg)
+    rng = np.random.default_rng(0)
+
+    def _req(rid, gen, **kw):
+        prompt = rng.integers(1, cfg.vocab, size=(4,)).astype(np.int32)
+        return Request(rid=rid, prompt=prompt, max_new_tokens=gen, **kw)
+
+    gen = eng.serve([_req(0, 10), _req(1, 12)])
+    next(gen)                    # rid 0 completes; abandon with rid 1 live
+    assert eng.has_pending_work
+    assert eng._clock > 6        # the clock the late request must not inherit
+
+    late = _req(2, 6, deadline=12)
+    out = eng.run([late])        # recovery run: finishes rid 1, serves rid 2
+    assert eng.last_statuses[2] == "finished"
+    assert len(out[2]) == 6
+    assert eng.last_statuses[1] == "finished"

@@ -5,10 +5,23 @@ schema — the CI tripwire that keeps the perf trajectory machine-readable.
 Usage::
 
     python tools/check_bench.py [FILE...]
+    python tools/check_bench.py --diff NEW [COMMITTED]
 
 With no arguments, validates every ``BENCH_*.json`` at the repo root.
 Exit 0 when every file is schema-valid, 1 with a per-file error report
 otherwise (every violation listed, not just the first).
+
+``--diff`` compares the *deterministic* columns of a freshly
+regenerated envelope against a committed one: arms are matched by
+``(overload, scheduler, variant)`` and the clock-domain metrics
+(:data:`DIFF_KEYS` — request counts, completion/timeout/shed tallies,
+TTFT percentiles in engine steps, SLO-met and generated token counts,
+peak pages) must agree exactly. Wall-clock columns (``wall_s``,
+``tokens_per_s``, ITL) are machine-dependent and deliberately ignored.
+``COMMITTED`` defaults to the repo-root file with the regenerated
+envelope's name (``BENCH_<area>.json``). This is the CI
+regenerate-and-diff step: a code change that silently moves the
+committed serving numbers fails here instead of landing as stale data.
 
 Deliberately dependency-free: the schema module
 (src/repro/bench/schema.py) is stdlib-only at import time and is loaded
@@ -25,6 +38,21 @@ from pathlib import Path
 REPO_ROOT = Path(__file__).resolve().parent.parent
 SCHEMA_PATH = REPO_ROOT / "src" / "repro" / "bench" / "schema.py"
 
+# the deterministic (engine-step clock domain) metric columns a
+# regenerated envelope must reproduce exactly; everything wall-clock
+# (wall_s, tokens_per_s, goodput_tokens_per_s, itl_*) varies by machine
+DIFF_KEYS = (
+    "requests",
+    "completed",
+    "timed_out",
+    "shed",
+    "ttft_p50_steps",
+    "ttft_p99_steps",
+    "slo_met_tokens",
+    "generated_tokens",
+    "peak_pages",
+)
+
 
 def _load_schema():
     spec = importlib.util.spec_from_file_location("bench_schema", SCHEMA_PATH)
@@ -33,7 +61,84 @@ def _load_schema():
     return mod
 
 
+def _load_doc(path: Path):
+    return json.loads(path.read_text())
+
+
+def _arm_key(arm: dict) -> tuple:
+    # variant is optional (the speculative bench's baseline/speculative
+    # axis); plain serving arms key on (overload, scheduler) alone
+    return (arm.get("overload"), arm.get("scheduler"),
+            arm.get("variant", ""))
+
+
+def diff_envelopes(new_doc: dict, old_doc: dict) -> list[str]:
+    """Mismatch report between two envelopes' deterministic columns
+    (empty list = they agree). Arms must match one-to-one."""
+    errs: list[str] = []
+    if new_doc.get("area") != old_doc.get("area"):
+        errs.append(f"area: regenerated {new_doc.get('area')!r} != "
+                    f"committed {old_doc.get('area')!r}")
+    new_arms = {_arm_key(a): a for a in new_doc.get("results", [])}
+    old_arms = {_arm_key(a): a for a in old_doc.get("results", [])}
+
+    def _name(key: tuple) -> str:
+        base = f"{key[0]:g}x/{key[1]}"
+        return f"{base}/{key[2]}" if key[2] else base
+
+    for key in sorted(set(old_arms) - set(new_arms), key=str):
+        errs.append(f"arm {_name(key)}: in committed file only")
+    for key in sorted(set(new_arms) - set(old_arms), key=str):
+        errs.append(f"arm {_name(key)}: in regenerated file only")
+    for key in sorted(set(new_arms) & set(old_arms), key=str):
+        new_m = new_arms[key].get("metrics", {})
+        old_m = old_arms[key].get("metrics", {})
+        for col in DIFF_KEYS:
+            if new_m.get(col) != old_m.get(col):
+                errs.append(f"arm {_name(key)}: {col} regenerated "
+                            f"{new_m.get(col)!r} != committed "
+                            f"{old_m.get(col)!r}")
+    return errs
+
+
+def run_diff(argv: list[str]) -> int:
+    if not 1 <= len(argv) <= 2:
+        print("usage: check_bench.py --diff NEW [COMMITTED]",
+              file=sys.stderr)
+        return 2
+    new_path = Path(argv[0])
+    old_path = Path(argv[1]) if len(argv) == 2 else REPO_ROOT / new_path.name
+    schema = _load_schema()
+    docs = {}
+    for path in (new_path, old_path):
+        try:
+            docs[path] = _load_doc(path)
+        except (OSError, json.JSONDecodeError) as exc:
+            print(f"FAIL {path}: {exc}")
+            return 1
+        errors = schema.validate_bench(docs[path])
+        if errors:
+            print(f"FAIL {path}:")
+            for err in errors:
+                print(f"  - {err}")
+            return 1
+    errors = diff_envelopes(docs[new_path], docs[old_path])
+    if errors:
+        print(f"FAIL {old_path} is stale vs regenerated {new_path}:")
+        for err in errors:
+            print(f"  - {err}")
+        print("regenerate the committed envelope (benchmarks/run.py "
+              "--spec-from) and commit the result")
+        return 1
+    n = len(docs[new_path].get("results", []))
+    print(f"ok   {old_path} matches {new_path} on {len(DIFF_KEYS)} "
+          f"deterministic columns across {n} arms")
+    return 0
+
+
 def main(argv: list[str]) -> int:
+    if argv and argv[0] == "--diff":
+        return run_diff(argv[1:])
     schema = _load_schema()
     paths = [Path(a) for a in argv] or sorted(REPO_ROOT.glob("BENCH_*.json"))
     if not paths:
@@ -42,7 +147,7 @@ def main(argv: list[str]) -> int:
     failed = False
     for path in paths:
         try:
-            doc = json.loads(path.read_text())
+            doc = _load_doc(path)
         except (OSError, json.JSONDecodeError) as exc:
             print(f"FAIL {path}: {exc}")
             failed = True
