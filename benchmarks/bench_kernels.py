@@ -1,8 +1,19 @@
-"""Kernel micro-benchmarks (CPU timings are indicative only — the
-kernels target TPU; correctness is the gate, interpret-mode):
-spectral matmul fused kernel vs the unfused jnp chain, flash-attention
-kernel vs direct softmax, plus the analytic VMEM/traffic accounting the
-TPU roofline uses."""
+"""Kernel micro-benchmarks -> ``BENCH_kernels.json``.
+
+Two kinds of columns, deliberately separated:
+
+  * ``deterministic`` — analytic roofline placement of each serving
+    kernel (src/repro/roofline/kernels.py): FLOPs, HBM traffic under the
+    fused-kernel traffic model, arithmetic intensity, compute/memory
+    floors and which bound binds on v5e, plus the traffic-save ratios
+    the fusions buy. Pure arithmetic from the shapes — identical on
+    every machine, so CI regenerates them and diffs exactly
+    (tools/check_bench.py --diff).
+  * ``us_per_call`` — wall-clock of the jnp reference chains on
+    whatever machine ran the bench (CPU timings are indicative only; the
+    kernels target TPU and correctness is gated in interpret mode).
+    Excluded from the diff like every other wall-clock column.
+"""
 from __future__ import annotations
 
 import time
@@ -11,8 +22,59 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.ref import spectral_matmul_ref
 from repro.kernels.flash_ref import flash_attention_ref
+from repro.kernels.ref import spectral_matmul_ref
+from repro.roofline.kernels import (
+    paged_gqa_decode_terms,
+    paged_mla_decode_terms,
+    spectral_matmul_terms,
+)
+
+# Reference serving shapes (bf16 activations/cache, serving-scale):
+SPECTRAL = dict(M=1024, m=2048, n=8192, k=128)
+GQA = dict(b=8, kvh=8, rep=4, hd=64, seq=1024)        # llama-family decode
+MLA = dict(b=8, h=16, lat=512, rope=64, seq=1024)     # deepseek-family decode
+FLASH = dict(B=4, s=1024, d=64)
+
+
+def bench_spec():
+    """The resolved BenchSpec (--dump-spec parity; also embedded in the
+    envelope so --spec-from can rerun it)."""
+    from repro.api import BenchSpec, ModelSpec
+
+    return BenchSpec(name="kernels", model=ModelSpec("smollm2-1.7b",
+                                                     reduced=True),
+                     overloads="1", schedulers="fifo")
+
+
+def deterministic_entries() -> list[dict]:
+    """The analytic rows — everything here must reproduce exactly on
+    any machine (the check_bench --diff contract)."""
+    fp = spectral_matmul_terms(**SPECTRAL)
+    unfused = spectral_matmul_terms(**SPECTRAL, fused=False)
+    fp["hbm_save_vs_unfused"] = round(
+        unfused["hbm_bytes"] / fp["hbm_bytes"], 3)
+
+    q8 = spectral_matmul_terms(**SPECTRAL, factor_bytes=1)
+    q8["hbm_save_vs_fp_fused"] = round(fp["hbm_bytes"] / q8["hbm_bytes"], 3)
+
+    gqa = paged_gqa_decode_terms(**GQA)
+    gqa_gather = paged_gqa_decode_terms(**GQA, paged=False)
+    gqa["hbm_save_vs_gather"] = round(
+        gqa_gather["hbm_bytes"] / gqa["hbm_bytes"], 3)
+
+    mla = paged_mla_decode_terms(**MLA)
+    mla_gather = paged_mla_decode_terms(**MLA, paged=False)
+    mla["hbm_save_vs_gather"] = round(
+        mla_gather["hbm_bytes"] / mla["hbm_bytes"], 3)
+
+    return [
+        {"name": "spectral_fp", "deterministic": fp},
+        {"name": "spectral_q8", "deterministic": q8},
+        {"name": "paged_gqa_decode", "deterministic": gqa},
+        {"name": "paged_mla_decode", "deterministic": mla},
+        {"name": "flash_ref", "deterministic": {"shape": dict(FLASH)}},
+    ]
 
 
 def _time(f, *args, reps=5):
@@ -23,18 +85,20 @@ def _time(f, *args, reps=5):
     return (time.time() - t0) / reps * 1e6
 
 
-def run() -> list[str]:
+def run(json_out: str | None = None) -> list[str]:
     out = []
     key = jax.random.PRNGKey(0)
     print("# Kernel micro-bench (CPU; correctness-gated, TPU is the target)")
+    entries = {e["name"]: e for e in deterministic_entries()}
 
-    M, m, n, k = 1024, 2048, 8192, 128
+    M, m, n, k = (SPECTRAL[d] for d in ("M", "m", "n", "k"))
     ks = jax.random.split(key, 4)
     x = jax.random.normal(ks[0], (M, m), jnp.bfloat16)
     U = jax.random.normal(ks[1], (m, k)) / np.sqrt(m)
     s = jax.random.uniform(ks[2], (k,))
     V = jax.random.normal(ks[3], (n, k)) / np.sqrt(n)
     us_ref = _time(jax.jit(spectral_matmul_ref), x, U, s, V)
+    entries["spectral_fp"]["us_per_call"] = round(us_ref, 1)
     # dense equivalent cost for context
     W = jax.random.normal(ks[1], (m, n)).astype(jnp.bfloat16)
     us_dense = _time(jax.jit(lambda a, b: a @ b), x, W)
@@ -42,23 +106,37 @@ def run() -> list[str]:
           f"dense matmul: {us_dense:.0f}us | flop ratio {m*n/(k*(m+n)):.1f}x")
     out.append(f"kernel_spectral_ref,{us_ref:.0f},dense={us_dense:.0f}us")
 
-    # analytic traffic of the fused kernel vs unfused chain
-    bm, cm, cn = 256, 512, 512
-    unfused = (M * m + m * k + M * k * 2 + n * k + M * n) * 2
-    fused = (M * m + m * k + n * k + M * n) * 2  # h never hits HBM
-    print(f"fused-kernel HBM traffic save: {unfused / fused:.3f}x "
-          f"(h={M}x{k} stays in VMEM)")
-    out.append(f"kernel_spectral_traffic,0,{unfused/fused:.3f}x")
+    for name in ("spectral_fp", "spectral_q8",
+                 "paged_gqa_decode", "paged_mla_decode"):
+        d = entries[name]["deterministic"]
+        save = next((f"{k_}={v}x" for k_, v in d.items()
+                     if k_.startswith("hbm_save")), "")
+        print(f"{name:17s}: {d['intensity_flop_per_byte']:8.1f} FLOP/B "
+              f"({d['bound']}-bound; ridge {d['ridge_flop_per_byte']}) "
+              f"{save}")
+        out.append(f"kernel_{name},0,"
+                   f"intensity={d['intensity_flop_per_byte']}_{d['bound']}")
 
-    B, sq, d = 4, 1024, 64
-    q = jax.random.normal(ks[0], (B, sq, d))
-    kk = jax.random.normal(ks[1], (B, sq, d))
-    v = jax.random.normal(ks[2], (B, sq, d))
-    us_attn = _time(jax.jit(lambda *a: flash_attention_ref(*a, causal=True)), q, kk, v)
-    print(f"attention ref (B={B},s={sq},d={d}): {us_attn:.0f}us")
-    out.append(f"kernel_flash_ref,{us_attn:.0f},B{B}s{sq}d{d}")
+    B, sq, d_ = (FLASH[d] for d in ("B", "s", "d"))
+    q = jax.random.normal(ks[0], (B, sq, d_))
+    kk = jax.random.normal(ks[1], (B, sq, d_))
+    v = jax.random.normal(ks[2], (B, sq, d_))
+    us_attn = _time(jax.jit(lambda *a: flash_attention_ref(*a, causal=True)),
+                    q, kk, v)
+    entries["flash_ref"]["us_per_call"] = round(us_attn, 1)
+    print(f"attention ref (B={B},s={sq},d={d_}): {us_attn:.0f}us")
+    out.append(f"kernel_flash_ref,{us_attn:.0f},B{B}s{sq}d{d_}")
+
+    if json_out:
+        from repro.bench import write_bench
+        from repro.bench.schema import bench_envelope
+
+        doc = bench_envelope("kernels", bench_spec().to_dict(), results=[],
+                             entries=list(entries.values()))
+        write_bench(doc, json_out)
+        print(f"wrote {json_out}")
     return out
 
 
 if __name__ == "__main__":
-    run()
+    run(json_out="BENCH_kernels.json")

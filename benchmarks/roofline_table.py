@@ -1,5 +1,8 @@
 """§Roofline: render the roofline table from the dry-run reports
-(reports/dryrun/*.json). Run the dry-run sweep first:
+(reports/dryrun/*.json), optionally emitting a ``BENCH_roofline.json``
+envelope (one ``entries`` row per (arch, shape, mesh) with the
+per-chip roofline terms as its ``deterministic`` columns). Run the
+dry-run sweep first:
 
   PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all --mesh both
 """
@@ -10,6 +13,11 @@ import json
 import os
 
 REPORT_DIR = os.path.join(os.path.dirname(__file__), "..", "reports", "dryrun")
+
+# the roofline terms that go into an envelope entry (per-chip seconds
+# and derived ratios from the partitioned HLO — machine-independent)
+TERM_KEYS = ("compute_s", "memory_s", "collective_s", "step_time_s",
+             "dominant", "mfu", "useful_fraction")
 
 
 def load_reports(report_dir: str = REPORT_DIR):
@@ -27,6 +35,7 @@ def render(rows, mesh="16x16", variant="baseline"):
            f"{'coll':>9s} {'dominant':>10s} {'MFU':>6s} {'useful':>7s}")
     print(hdr)
     out = []
+    entries = []
     for r in rows:
         if r.get("mesh") != mesh or r.get("variant", "baseline") != variant:
             continue
@@ -46,17 +55,39 @@ def render(rows, mesh="16x16", variant="baseline"):
             f"{t['step_time_s']*1e6:.0f},"
             f"dom={t['dominant']}_mfu={t['mfu']:.3f}"
         )
-    return out
+        entries.append({
+            "name": f"roofline_{r['arch']}_{r['shape']}_{mesh}",
+            "deterministic": {k: t[k] for k in TERM_KEYS if k in t},
+        })
+    return out, entries
 
 
-def run() -> list[str]:
+def bench_spec():
+    from repro.api import BenchSpec, ModelSpec
+
+    return BenchSpec(name="roofline", model=ModelSpec("smollm2-1.7b",
+                                                      reduced=True),
+                     overloads="1", schedulers="fifo")
+
+
+def run(json_out: str | None = None) -> list[str]:
     rows = load_reports()
     if not rows:
         print("no dry-run reports found — run repro.launch.dryrun first")
         return ["roofline,0,no_reports"]
-    out = render(rows, "16x16")
+    out, entries = render(rows, "16x16")
     print()
-    out += render(rows, "2x16x16")
+    out2, entries2 = render(rows, "2x16x16")
+    out += out2
+    entries += entries2
+    if json_out and entries:
+        from repro.bench import write_bench
+        from repro.bench.schema import bench_envelope
+
+        doc = bench_envelope("roofline", bench_spec().to_dict(), results=[],
+                             entries=entries)
+        write_bench(doc, json_out)
+        print(f"wrote {json_out}")
     return out
 
 

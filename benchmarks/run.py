@@ -33,8 +33,11 @@ usage: python -m repro bench [<name>] [flags...]
   serving     SLO/traffic harness -> BENCH_serving.json (--help for knobs)
   speculative rank-ladder self-speculation vs plain decode ->
               BENCH_speculative.json (acceptance rate, tokens/step)
+  kernels     serving-kernel roofline placement + ref timings ->
+              BENCH_kernels.json
+  roofline    dry-run roofline table (--json-out for an envelope)
   table3      rank sweep (--ranks/--steps/--batch/--seq/--json-out)
-  table1 table2 table4 kernels roofline
+  table1 table2 table4
               single paper-table / micro-bench suites
   <a> <b> ..  any list of suite names: legacy multi-suite CSV run
 
@@ -375,6 +378,56 @@ def cmd_speculative(argv: Sequence[str]) -> int:
     return 0
 
 
+# ------------------------------------------------------------- kernels --
+
+def cmd_kernels(argv: Sequence[str]) -> int:
+    """Serving-kernel bench: analytic roofline placement (deterministic,
+    CI-diffed) plus indicative jnp-reference wall timings."""
+    from benchmarks import bench_kernels
+
+    ap = argparse.ArgumentParser(
+        prog="repro bench kernels",
+        description="per-kernel roofline placement + reference timings, "
+                    "BENCH_kernels.json out")
+    ap.add_argument("--json-out", default="BENCH_kernels.json",
+                    help="envelope path ('' to skip writing)")
+    ap.add_argument("--dump-spec", action="store_true",
+                    help="print the resolved BenchSpec JSON and exit")
+    ap.add_argument("--spec-from", default=None, metavar="FILE",
+                    help="rerun the BenchSpec embedded in this envelope "
+                         "(the CI regenerate-and-diff path; the kernels "
+                         "spec carries no sweep knobs, so this validates "
+                         "the embed and reruns the fixed suite)")
+    args = ap.parse_args(argv)
+    if args.spec_from:
+        _bench_from_envelope(args.spec_from)    # must parse as a BenchSpec
+    if args.dump_spec:
+        print(bench_kernels.bench_spec().to_json(indent=2))
+        return 0
+    for r in bench_kernels.run(json_out=args.json_out or None):
+        print(r)
+    return 0
+
+
+def cmd_roofline(argv: Sequence[str]) -> int:
+    from benchmarks import roofline_table
+
+    ap = argparse.ArgumentParser(
+        prog="repro bench roofline",
+        description="roofline table from reports/dryrun/*.json")
+    ap.add_argument("--json-out", default="",
+                    help="optional BENCH_roofline.json envelope path "
+                         "(requires dry-run reports)")
+    ap.add_argument("--dump-spec", action="store_true")
+    args = ap.parse_args(argv)
+    if args.dump_spec:
+        print(roofline_table.bench_spec().to_json(indent=2))
+        return 0
+    for r in roofline_table.run(json_out=args.json_out or None):
+        print(r)
+    return 0
+
+
 # -------------------------------------------------------------- tables --
 
 def _table_bench_spec(name: str, model_arch: str, ranks: str = ""):
@@ -428,8 +481,8 @@ COMMANDS = {
     "table1": _simple_suite("table1", "smollm2-1.7b"),
     "table2": _simple_suite("table2", "llama3.1-70b"),
     "table4": _simple_suite("table4", "smollm2-1.7b"),
-    "kernels": _simple_suite("kernels", "smollm2-1.7b"),
-    "roofline": _simple_suite("roofline", "smollm2-1.7b"),
+    "kernels": cmd_kernels,
+    "roofline": cmd_roofline,
 }
 
 

@@ -30,7 +30,12 @@ Envelope shape (``schema_version`` 1)::
         {"precision": "fp32", "rank": null,
          "tokens_per_s": ..., "weight_bytes": ...}, ...
       ],
-      "entries": [ {...}, ... ]           # optional: table-style rows
+      "entries": [                        # optional: table-style rows
+        {"name": "spectral_q8",           # required when "deterministic"
+         "us_per_call": 123.4,            #   is present (diffed by name)
+         "deterministic": { ... }},       # machine-independent columns:
+        ...                               #   CI diffs these exactly
+      ]
     }
 
 ``metrics`` may carry extra keys (per-tenant token counts, cache-page
@@ -164,6 +169,17 @@ def validate_bench(doc: Any) -> List[str]:
         for i, row in enumerate(entries):
             if not isinstance(row, dict):
                 errs.append(f"entries[{i}] must be an object")
+                continue
+            # rows carrying CI-diffed deterministic columns must be
+            # addressable: check_bench --diff matches entries by name
+            if "deterministic" in row:
+                if not isinstance(row.get("name"), str) or not row["name"]:
+                    errs.append(f"entries[{i}]: rows with a "
+                                "'deterministic' object need a non-empty "
+                                "string 'name'")
+                elif not isinstance(row["deterministic"], dict):
+                    errs.append(f"entries[{i}].deterministic must be an "
+                                "object")
     # serving-style benches fill results arms; table-style benches fill
     # entries rows; an envelope with neither measures nothing
     if not results and not entries:

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 
 from repro.kernels.interpret import resolve_interpret
 from repro.kernels.spectral_matmul import spectral_matmul_pallas
+from repro.kernels.spectral_matmul_q8 import spectral_matmul_q8_pallas
 from repro.kernels.ref import spectral_matmul_ref
 
 
@@ -60,23 +61,61 @@ def spectral_matmul(x, U, s, V):
     return y.reshape(*lead, V.shape[0])
 
 
+def _q8_fwd_2d(x2, U_q8, gain, V_q8):
+    """x2: (M, m) against raw int8 factors. Same pad-to-tile handling as
+    _fwd_2d; int8 zero-padding is exact and the padded k-columns carry
+    zero gain."""
+    M, m = x2.shape
+    n = V_q8.shape[0]
+    bm = 256 if M >= 256 else max(8, 1 << (M - 1).bit_length())
+    cm = 512 if m >= 512 else m
+    cn = 512 if n >= 512 else n
+    x2, M0 = _pad_to(x2, bm, 0)
+    xp, _ = _pad_to(x2, cm, 1)
+    Up, _ = _pad_to(U_q8, cm, 0)
+    Vp, _ = _pad_to(V_q8, cn, 0)
+    y = spectral_matmul_q8_pallas(xp, Up, gain, Vp, bm=bm, cm=cm, cn=cn,
+                                  interpret=resolve_interpret(None))
+    return y[:M0, :n]
+
+
+@jax.custom_vjp
 def spectral_matmul_q8(x, U_qt, s, V_qt):
-    """Fused spectral matmul over int8-quantized factors
-    (serving/quantize.py): per-channel dequant on the fly, then the same
-    h-in-VMEM kernel. The int8 tensors are the *persistent* weight
-    storage; the dequantized fp factors are transient per-call
-    allocations (XLA does not fuse producers into a pallas_call, so a
-    full-size fp U/V does exist in HBM for the call's duration — the
-    steady-state weight footprint is still the int8 one).
+    """Fused spectral matmul consuming int8 factors *directly*
+    (serving/quantize.py ``{"q8", "scale"}`` tensors for U/V, fp32 s).
+    The dequantized fp factor is never materialized: per-column scales
+    commute with the matmuls, so u_scale * s * v_scale collapse into one
+    fused k-length gain on the VMEM-resident bottleneck ``h``, and the
+    int8 tiles widen to the activation dtype per-tile in VMEM
+    (kernels/spectral_matmul_q8.py). Equivalence to the
+    dequantize-then-matmul oracle is tolerance-based (the fused gain
+    reassociates the per-channel scaling) — asserted per-dtype by the
+    differential harness, not bit-exact.
 
-    Factors dequantize to fp32 — exactly what the ``--verify`` oracle
-    (dequantize_tree) feeds the same kernel — so the quantized and
-    oracle paths stay bit-identical regardless of x.dtype."""
-    from repro.serving.quantize import dequantize_int8
+    Serving-only: int8 factors carry no gradient (training holds the fp
+    factors). Differentiating through this op raises instead of
+    silently returning a wrong cotangent."""
+    lead = x.shape[:-1]
+    m = x.shape[-1]
+    gain = (U_qt["scale"].astype(jnp.float32)
+            * s.astype(jnp.float32)
+            * V_qt["scale"].astype(jnp.float32))
+    y = _q8_fwd_2d(x.reshape(-1, m), U_qt["q8"], gain, V_qt["q8"])
+    return y.reshape(*lead, V_qt["q8"].shape[0])
 
-    U = dequantize_int8(U_qt)
-    V = dequantize_int8(V_qt)
-    return spectral_matmul(x, U, s, V)
+
+def _q8_vjp_fwd(x, U_qt, s, V_qt):
+    raise TypeError(
+        "spectral_matmul_q8 is a serving-only kernel over int8 factors; "
+        "it has no gradient (train against the fp spectral factors, or "
+        "dequantize_tree first)")
+
+
+def _q8_vjp_bwd(res, dy):  # pragma: no cover - fwd already raised
+    raise TypeError("spectral_matmul_q8 has no gradient")
+
+
+spectral_matmul_q8.defvjp(_q8_vjp_fwd, _q8_vjp_bwd)
 
 
 def _vjp_fwd(x, U, s, V):

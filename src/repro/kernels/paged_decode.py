@@ -1,0 +1,235 @@
+"""Paged flash-decode Pallas TPU kernels: batched one-token attention
+straight against the paged KV pools, walking each slot's block table
+*inside* the kernel.
+
+The jnp serving path (nn/attention.py ``apply_*_decode_paged``) gathers
+every slot's pages into a contiguous ``(b, S, ...)`` view before
+attending — a full logical-cache copy written to and re-read from HBM on
+every decode step. Here the block table rides in as a scalar-prefetch
+operand, so the BlockSpec index map resolves ``logical page j of slot i
+-> physical page bt[i, j]`` while the grid walks pages: KV stream
+page-by-page from the pool into VMEM and the gathered copy never exists
+(the serving-side expression of the paper's never-materialize rule).
+
+Two variants, matching the two attention families that page:
+
+  * GQA  — q ``(b, kvh, rep, hd)`` against pools ``(P+1, page, kvh, hd)``;
+    one program per (slot, kv head, page), online softmax over the page
+    axis with per-position validity ``pos <= seq_lens[i]``.
+  * MLA (absorbed) — q already absorbed into the latent space:
+    ``q_lat (b, h, L)`` / ``q_rope (b, h, R)`` against latent pools
+    ``(P+1, page, L)`` / ``(P+1, page, R)``; scores are the sum of both
+    dot products and the page's ckv rows double as the values (the MLA
+    trick — full K/V is never expanded).
+
+Inactive slots follow the paged_append contract: their block tables
+point at the null page (physical id P) and ``seq_lens == 0``, so the
+kernel harmlessly attends over one null-page position; the engine
+ignores those rows.
+
+Interpret/compiled resolution is the shared ``SCT_INTERPRET`` switch
+(kernels/interpret.py). The jnp references live in kernels/paged_ref.py
+and tests/test_kernels_paged.py holds the differential suite.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.interpret import resolve_interpret
+
+NEG_INF = -1e30
+
+_TRUTHY = ("1", "true", "yes", "on")
+_FALSY = ("0", "false", "no", "off")
+
+
+def paged_kernel_enabled() -> bool:
+    """Serving gate for the paged flash-decode kernels, read at trace
+    time by nn/attention.py. ``SCT_PAGED_KERNEL=0`` falls back to the
+    jnp gather-then-attend reference path (the differential oracle);
+    default is the kernel (its interpret/compiled mode is then resolved
+    by ``SCT_INTERPRET`` like every other kernel)."""
+    env = os.environ.get("SCT_PAGED_KERNEL")
+    if env is not None and env.strip():
+        v = env.strip().lower()
+        if v in _TRUTHY:
+            return True
+        if v in _FALSY:
+            return False
+        raise ValueError(
+            f"SCT_PAGED_KERNEL={env!r}: expected one of {_TRUTHY + _FALSY}")
+    return True
+
+
+# ------------------------------------------------------------------ GQA --
+
+def _gqa_kernel(bt_ref, sl_ref, q_ref, k_ref, v_ref, o_ref,
+                acc_ref, m_ref, l_ref, *, page: int, n_pages: int,
+                scale: float):
+    i = pl.program_id(0)                      # slot
+    j = pl.program_id(2)                      # logical page
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                    # (rep, hd)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)              # (page, hd)
+    s_ij = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * scale                                              # (rep, page)
+    pos = j * page + jax.lax.broadcasted_iota(jnp.int32, s_ij.shape, 1)
+    s_ij = jnp.where(pos <= sl_ref[i], s_ij, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s_ij, axis=-1, keepdims=True))
+    p = jnp.exp(s_ij - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v_ref[0, :, 0, :].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_ref[...] = m_new
+
+    @pl.when(j == n_pages - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                       ).astype(o_ref.dtype)
+
+
+def paged_gqa_decode_pallas(q, k_pool, v_pool, block_table, seq_lens, *,
+                            interpret: bool | None = None):
+    """q: (b, kvh, rep, hd) grouped one-token queries; k_pool/v_pool:
+    (P+1, page, kvh, hd) shared pools (paged_append already ran — the
+    new token sits at logical position seq_lens[i]); block_table:
+    (b, n_pages) int32; seq_lens: (b,) int32. Returns (b, kvh, rep, hd)
+    in q.dtype: softmax attention over logical positions
+    ``pos <= seq_lens[i]``, bit-comparable to gather + masked _sdpa."""
+    b, kvh, rep, hd = q.shape
+    page = k_pool.shape[1]
+    n_pages = block_table.shape[1]
+    scale = 1.0 / (hd ** 0.5)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, kvh, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, rep, hd), lambda i, g, j, bt, sl: (i, g, 0, 0)),
+            # the block-table walk: logical page j of slot i -> physical
+            # page bt[i, j] of the pool (null page for inactive slots)
+            pl.BlockSpec((1, page, 1, hd),
+                         lambda i, g, j, bt, sl: (bt[i, j], 0, g, 0)),
+            pl.BlockSpec((1, page, 1, hd),
+                         lambda i, g, j, bt, sl: (bt[i, j], 0, g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rep, hd),
+                               lambda i, g, j, bt, sl: (i, g, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((rep, hd), jnp.float32),   # acc
+            pltpu.VMEM((rep, 1), jnp.float32),    # running max
+            pltpu.VMEM((rep, 1), jnp.float32),    # running sum
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_gqa_kernel, page=page, n_pages=n_pages,
+                          scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kvh, rep, hd), q.dtype),
+        interpret=resolve_interpret(interpret),
+    )(block_table, seq_lens, q, k_pool, v_pool)
+
+
+# ------------------------------------------------------------------ MLA --
+
+def _mla_kernel(bt_ref, sl_ref, ql_ref, qr_ref, ckv_ref, kr_ref, o_ref,
+                acc_ref, m_ref, l_ref, *, page: int, n_pages: int,
+                scale: float):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    ckv = ckv_ref[0].astype(jnp.float32)                   # (page, L)
+    s_ij = (
+        jax.lax.dot_general(
+            ql_ref[0].astype(jnp.float32), ckv, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        + jax.lax.dot_general(
+            qr_ref[0].astype(jnp.float32), kr_ref[0].astype(jnp.float32),
+            (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    ) * scale                                              # (h, page)
+    pos = j * page + jax.lax.broadcasted_iota(jnp.int32, s_ij.shape, 1)
+    s_ij = jnp.where(pos <= sl_ref[i], s_ij, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s_ij, axis=-1, keepdims=True))
+    p = jnp.exp(s_ij - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    # the page's latent rows double as the values — no K/V expansion
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, ckv, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_ref[...] = m_new
+
+    @pl.when(j == n_pages - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+def paged_mla_decode_pallas(q_lat, q_rope, ckv_pool, kr_pool, block_table,
+                            seq_lens, *, scale: float,
+                            interpret: bool | None = None):
+    """Absorbed-MLA one-token decode against paged latent pools.
+
+    q_lat: (b, h, L) — q_nope already absorbed through W_uk; q_rope:
+    (b, h, R); ckv_pool: (P+1, page, L); kr_pool: (P+1, page, R);
+    block_table: (b, n_pages); seq_lens: (b,). ``scale`` is the score
+    scale 1/sqrt(qk_nope_dim + qk_rope_dim) — the *pre-absorption* head
+    dim, so it is passed in rather than derived from L. Returns the
+    latent context o_lat (b, h, L); the caller applies W_uv + W_o."""
+    b, h, lat = q_lat.shape
+    rope_d = q_rope.shape[-1]
+    page = ckv_pool.shape[1]
+    n_pages = block_table.shape[1]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, h, lat), lambda i, j, bt, sl: (i, 0, 0)),
+            pl.BlockSpec((1, h, rope_d), lambda i, j, bt, sl: (i, 0, 0)),
+            pl.BlockSpec((1, page, lat), lambda i, j, bt, sl: (bt[i, j], 0, 0)),
+            pl.BlockSpec((1, page, rope_d),
+                         lambda i, j, bt, sl: (bt[i, j], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, lat), lambda i, j, bt, sl: (i, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((h, lat), jnp.float32),
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, 1), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_mla_kernel, page=page, n_pages=n_pages,
+                          scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, lat), q_lat.dtype),
+        interpret=resolve_interpret(interpret),
+    )(block_table, seq_lens, q_lat, q_rope, ckv_pool, kr_pool)

@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for the paged flash-decode kernels: gather the
+block table into a contiguous logical view, then masked direct softmax —
+the exact composition the serving path used before the kernels existed
+(nn/attention.py keeps the same math inline as its reference branch).
+Signatures mirror kernels/paged_decode.py one-for-one so the
+differential harness can swap them freely."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def paged_gqa_decode_ref(q, k_pool, v_pool, block_table, seq_lens):
+    """q: (b, kvh, rep, hd); pools (P+1, page, kvh, hd); block_table
+    (b, n); seq_lens (b,). Returns (b, kvh, rep, hd) in q.dtype."""
+    from repro.serving.paged_cache import paged_gather
+
+    hd = q.shape[-1]
+    ck = paged_gather(k_pool, block_table).astype(q.dtype)  # (b, S, kvh, hd)
+    cv = paged_gather(v_pool, block_table).astype(q.dtype)
+    S = ck.shape[1]
+    valid = jnp.arange(S)[None, :] <= seq_lens[:, None]
+    scores = jnp.einsum("bgrd,bkgd->bgrk", q, ck).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(hd))
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bgrk,bkgd->bgrd", probs, cv)
+
+
+def paged_mla_decode_ref(q_lat, q_rope, ckv_pool, kr_pool, block_table,
+                         seq_lens, *, scale):
+    """q_lat: (b, h, L); q_rope: (b, h, R); latent pools (P+1, page, L)
+    / (P+1, page, R). Returns o_lat (b, h, L) — same contract as the
+    kernel: the caller applies W_uv / W_o."""
+    from repro.serving.paged_cache import paged_gather
+
+    cckv = paged_gather(ckv_pool, block_table).astype(q_lat.dtype)  # (b,S,L)
+    ckr = paged_gather(kr_pool, block_table).astype(q_rope.dtype)
+    S = cckv.shape[1]
+    valid = jnp.arange(S)[None, :] <= seq_lens[:, None]
+    scores = (
+        jnp.einsum("bhl,bSl->bhS", q_lat, cckv)
+        + jnp.einsum("bhr,bSr->bhS", q_rope, ckr)
+    ).astype(jnp.float32) * scale
+    scores = jnp.where(valid[:, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q_lat.dtype)
+    return jnp.einsum("bhS,bSl->bhl", probs, cckv)

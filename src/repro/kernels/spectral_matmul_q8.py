@@ -1,0 +1,100 @@
+"""Fused int8 spectral matmul Pallas TPU kernel:
+y = ((x @ U_q8) * (u_scale * s * v_scale)) @ V_q8.T.
+
+Consumes the int8 factors *directly* — the dequantized fp U/V of the old
+serving path (dequantize_int8 then the fp kernel) is never materialized,
+in HBM or anywhere else. This works because quantize_int8 scales U and V
+per *column* (the rank axis k), so dequantization commutes with both
+matmuls:
+
+    x @ (U_q8 · diag(u_scale))            = (x @ U_q8) · diag(u_scale)
+    h  @ (V_q8 · diag(v_scale))ᵀ          = (h · diag(v_scale)) @ V_q8ᵀ
+
+and the three per-k vectors (u_scale, s, v_scale) collapse into one
+fused gain applied to the VMEM-resident bottleneck ``h`` — a k-length
+multiply where the unfused chain pays two full (m, k)/(n, k) dequant
+materializations. Int8 tiles are widened to the activation dtype
+per-tile in VMEM on their way into the MXU (int8 values are exact in
+bf16: |q| <= 127 < 2^8).
+
+Same two-phase tiling as the fp kernel (spectral_matmul.py): grid
+(M/bm, Tm + Tn); phase 1 accumulates h (bm, k) into fp32 scratch from
+streamed x/U_q8 m-chunks, phase 2 emits y tiles from (h * gain) @ V_q8ᵀ
+n-chunks. VMEM drops below the fp kernel's budget — the streamed factor
+tiles are 2-4x smaller at int8.
+
+Serving-only: quantized factors carry no gradient (the training params
+are the fp factors). ops.py wraps this with a custom_vjp that *raises*
+under differentiation instead of silently miscomputing.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, uq_ref, g_ref, vq_ref, y_ref, h_ref, *, tm: int, tn: int):
+    t = pl.program_id(1)
+
+    # ---- phase 1: h += x_chunk @ widen(U_q8_chunk) ----
+    @pl.when(t == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    @pl.when(t < tm)
+    def _accum():
+        h_ref[...] += jnp.dot(
+            x_ref[...], uq_ref[...].astype(x_ref.dtype),
+            preferred_element_type=jnp.float32,
+        )
+
+    # ---- phase 2: y_tile = (h * gain) @ widen(V_q8_chunk)^T ----
+    @pl.when(t >= tm)
+    def _emit():
+        hs = (h_ref[...] * g_ref[...]).astype(x_ref.dtype)
+        y_ref[...] = jnp.dot(
+            hs, vq_ref[...].T.astype(x_ref.dtype),
+            preferred_element_type=jnp.float32,
+        ).astype(y_ref.dtype)
+
+
+def spectral_matmul_q8_pallas(
+    x: jax.Array,
+    U_q8: jax.Array,
+    gain: jax.Array,
+    V_q8: jax.Array,
+    *,
+    bm: int,
+    cm: int,
+    cn: int,
+    interpret: bool = False,
+) -> jax.Array:
+    """x: (M, m) float; U_q8: (m, k) int8; gain: (k,) fp32 — the fused
+    u_scale * s * v_scale; V_q8: (n, k) int8 -> (M, n) in x.dtype.
+    Requires M % bm == 0, m % cm == 0, n % cn == 0 (ops.py pads)."""
+    M, m = x.shape
+    mk, k = U_q8.shape
+    n, vk = V_q8.shape
+    assert m == mk and k == vk and gain.shape == (k,), \
+        (x.shape, U_q8.shape, gain.shape, V_q8.shape)
+    assert M % bm == 0 and m % cm == 0 and n % cn == 0, (M, m, n, bm, cm, cn)
+    tm, tn = m // cm, n // cn
+
+    return pl.pallas_call(
+        functools.partial(_kernel, tm=tm, tn=tn),
+        grid=(M // bm, tm + tn),
+        in_specs=[
+            pl.BlockSpec((bm, cm), lambda i, t: (i, jnp.minimum(t, tm - 1))),
+            pl.BlockSpec((cm, k), lambda i, t: (jnp.minimum(t, tm - 1), 0)),
+            pl.BlockSpec((1, k), lambda i, t: (0, 0)),
+            pl.BlockSpec((cn, k), lambda i, t: (jnp.maximum(t - tm, 0), 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, cn), lambda i, t: (i, jnp.maximum(t - tm, 0))),
+        out_shape=jax.ShapeDtypeStruct((M, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, k), jnp.float32)],
+        interpret=interpret,
+    )(x, U_q8, gain.astype(jnp.float32).reshape(1, k), V_q8)

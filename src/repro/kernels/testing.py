@@ -1,0 +1,181 @@
+"""Differential kernel-vs-reference test harness.
+
+Every Pallas kernel in this repo ships with a jnp oracle (kernels/ref.py,
+flash_ref.py, paged_ref.py) and a test that sweeps the two against each
+other. This module is the shared machinery for those sweeps so each new
+kernel adds *cases*, not comparison plumbing:
+
+  - a per-precision tolerance ladder (``TOLERANCE_LADDER`` /
+    :func:`tolerance_for`) — one place where "how close is close enough
+    in bf16" is decided, instead of magic constants per test file;
+  - :func:`assert_kernel_matches` — runs kernel and reference on the same
+    inputs and compares in fp32, normalized by the reference magnitude so
+    a kernel whose output is large doesn't pass on rtol alone;
+  - :func:`forced_interpret` — a context manager pinning
+    ``SCT_INTERPRET=1`` for the enclosed block, so a test can assert the
+    interpret path specifically regardless of the CI matrix leg it runs
+    under;
+  - fuzz helpers (:func:`scale_profile`, :func:`ragged_seq_lens`,
+    :func:`make_block_table`) generating the adversarial inputs the
+    paged/int8 kernels must survive: per-channel scales spanning eight
+    decades, sequence lengths hitting every page-boundary edge, block
+    tables with shuffled physical pages and null-page tails.
+
+How to add a kernel: write the jnp oracle first, then the Pallas kernel
+with the same signature, then a parameterized test calling
+``assert_kernel_matches(kernel, oracle, args, dtype=...)`` over a shape
+sweep that includes non-tile-multiple sizes. See docs/kernels.md.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Tol(NamedTuple):
+    """Relative / absolute tolerance pair for one precision rung."""
+
+    rtol: float
+    atol: float
+
+
+# One rung per compute precision. fp32 kernels accumulate in fp32 and
+# differ from the oracle only by reassociation (~1e-6 observed; 5e-5
+# leaves headroom for unlucky shapes). bf16 inputs carry ~3 decimal
+# digits, so anything tighter than ~1e-2 tests the rounding of the
+# inputs, not the kernel.
+TOLERANCE_LADDER: dict = {
+    jnp.dtype(jnp.float32): Tol(rtol=5e-5, atol=5e-5),
+    jnp.dtype(jnp.bfloat16): Tol(rtol=5e-2, atol=5e-2),
+    jnp.dtype(jnp.float16): Tol(rtol=5e-3, atol=5e-3),
+}
+
+
+def tolerance_for(dtype: Any, ladder: Optional[dict] = None) -> Tol:
+    """Look up the tolerance rung for ``dtype`` (raises KeyError for a
+    precision the ladder has no opinion on — add a rung deliberately
+    rather than inheriting a neighbour's)."""
+    table = TOLERANCE_LADDER if ladder is None else ladder
+    return table[jnp.dtype(dtype)]
+
+
+def assert_kernel_matches(
+    kernel_fn: Callable[..., jax.Array],
+    ref_fn: Callable[..., jax.Array],
+    args: tuple,
+    *,
+    dtype: Any = None,
+    tol: Optional[Tol] = None,
+    ladder: Optional[dict] = None,
+    ref_args: Optional[tuple] = None,
+    label: str = "",
+) -> None:
+    """Run ``kernel_fn(*args)`` and ``ref_fn(*(ref_args or args))`` and
+    assert the outputs agree within the ladder rung for ``dtype``.
+
+    Both outputs are compared in fp32 after dividing by
+    ``max(1, max|ref|)`` — the reference magnitude, so rtol means the
+    same thing whether the kernel emits O(1) attention outputs or O(1e3)
+    logits. ``dtype`` defaults to the kernel output's dtype; pass
+    ``tol`` to override the ladder for one call (e.g. an int8 kernel
+    whose error floor is set by quantization, not by the activation
+    precision). ``ref_args`` lets the oracle take a different argument
+    layout than the kernel (gathered vs paged)."""
+    y = kernel_fn(*args)
+    yr = ref_fn(*(args if ref_args is None else ref_args))
+    assert y.shape == yr.shape, (
+        f"{label or kernel_fn.__name__}: kernel shape {y.shape} != "
+        f"reference shape {yr.shape}")
+    if tol is None:
+        tol = tolerance_for(y.dtype if dtype is None else dtype, ladder)
+    yf = np.asarray(y, np.float32)
+    yrf = np.asarray(yr, np.float32)
+    scale = max(1.0, float(np.max(np.abs(yrf))) if yrf.size else 1.0)
+    np.testing.assert_allclose(
+        yf / scale, yrf / scale, rtol=tol.rtol, atol=tol.atol,
+        err_msg=f"{label or kernel_fn.__name__}: kernel vs reference "
+                f"(outputs scaled by 1/{scale:g})")
+
+
+@contextlib.contextmanager
+def forced_interpret(value: str = "1"):
+    """Pin ``SCT_INTERPRET`` for the enclosed block (default: force
+    interpret mode), restoring the previous value — including *unset* —
+    on exit. Kernels resolve the env var at call time
+    (kernels/interpret.py), so no re-jit bookkeeping is needed; callers
+    must not reuse a function already jitted outside the block."""
+    prev = os.environ.get("SCT_INTERPRET")
+    os.environ["SCT_INTERPRET"] = value
+    try:
+        yield
+    finally:
+        if prev is None:
+            os.environ.pop("SCT_INTERPRET", None)
+        else:
+            os.environ["SCT_INTERPRET"] = prev
+
+
+# ---------------------------------------------------------------------------
+# Fuzz input generators
+# ---------------------------------------------------------------------------
+
+# Per-channel scale shapes the int8 kernels must absorb without drift.
+# "extreme" spans eight decades across the rank axis — the fused gain
+# multiplies three such vectors, so this is the stress test for the
+# scale-commutation identity.
+SCALE_PROFILES = ("unit", "extreme", "tiny", "huge", "alternating")
+
+
+def scale_profile(kind: str, k: int) -> jax.Array:
+    """A (k,) fp32 per-channel scale vector of the named shape."""
+    if kind == "unit":
+        return jnp.ones((k,), jnp.float32)
+    if kind == "extreme":
+        return (10.0 ** jnp.linspace(-4.0, 4.0, k)).astype(jnp.float32)
+    if kind == "tiny":
+        return jnp.full((k,), 1e-4, jnp.float32)
+    if kind == "huge":
+        return jnp.full((k,), 1e4, jnp.float32)
+    if kind == "alternating":
+        return jnp.where(jnp.arange(k) % 2 == 0, 1e-3, 1e3).astype(jnp.float32)
+    raise ValueError(f"unknown scale profile {kind!r}; one of {SCALE_PROFILES}")
+
+
+def ragged_seq_lens(batch: int, max_len: int, page: int,
+                    seed: int = 0) -> jax.Array:
+    """(batch,) int32 sequence lengths covering the masking edge cases:
+    slot 0 is empty (len 0, the inactive-slot convention), slot 1 ends
+    exactly on a page boundary, slot 2 one *before* a boundary, slot 3
+    is full; remaining slots are uniform random. Lengths count valid
+    positions as the paged kernels see them post-append (``pos <= len``
+    is in-bounds), so ``max_len`` here is the largest legal index."""
+    edges = [0, min(page, max_len), min(2 * page - 1, max_len), max_len]
+    rng = np.random.default_rng(seed)
+    body = rng.integers(0, max_len + 1, size=max(0, batch - len(edges)))
+    lens = np.concatenate([np.asarray(edges[:batch]), body])[:batch]
+    return jnp.asarray(lens, jnp.int32)
+
+
+def make_block_table(batch: int, n_pages_per_seq: int, num_pages: int,
+                     seq_lens: jax.Array, page: int,
+                     seed: int = 0) -> jax.Array:
+    """(batch, n_pages_per_seq) int32 block table with *shuffled*
+    physical page ids — adjacent logical pages land on non-adjacent
+    physical pages, so a kernel that secretly assumes contiguity fails
+    loudly. Pages past each row's live prefix point at the null page
+    (physical id ``num_pages``), matching serving/paged_cache.py's
+    layout for unallocated tail pages."""
+    assert batch * n_pages_per_seq <= num_pages, "pool too small to fuzz"
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(num_pages)[: batch * n_pages_per_seq]
+    table = perm.reshape(batch, n_pages_per_seq).astype(np.int32)
+    lens = np.asarray(seq_lens)
+    for i in range(batch):
+        live = int(lens[i]) // page + 1          # page holding position len
+        table[i, live:] = num_pages              # null page
+    return jnp.asarray(table, jnp.int32)

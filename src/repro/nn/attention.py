@@ -304,7 +304,15 @@ def apply_gqa_decode(p, x, cfg, *, cache, cache_len, use_pallas=False):
     S = ck.shape[1]
     valid = (jnp.arange(S)[None, :] <= cache_len).astype(bool)
     valid = jnp.broadcast_to(valid, (b, S))
-    o = _sdpa(q, ck.astype(q.dtype), cv.astype(q.dtype), causal=False, kv_len_mask=valid)
+    # Decode-step attention computes in fp32 regardless of model dtype
+    # (the step is memory-bound, so the upcast is free). All three decode
+    # paths — this static oracle, the paged jnp branch, and the Pallas
+    # flash-decode kernel (fp32 scratch) — then agree to fp32 epsilon
+    # with a single output rounding, which is what keeps bf16 greedy
+    # decode token-identical across them.
+    o = _sdpa(q.astype(jnp.float32), ck.astype(jnp.float32),
+              cv.astype(jnp.float32), causal=False,
+              kv_len_mask=valid).astype(q.dtype)
     return apply_linear(p["wo"], o.reshape(b, s, -1), use_pallas=use_pallas), {"k": ck, "v": cv}
 
 
@@ -340,20 +348,38 @@ def apply_gqa_decode_paged(p, x, cfg, *, cache, block_table, seq_lens, use_palla
     block_table: (b, n_pages) int32; seq_lens: (b,) int32 per-slot fill
     level (mixed lengths — the continuous-batching contract). The new
     token is appended into each slot's current page, then attention runs
-    over the gathered logical view with a per-row validity mask, so the
-    math matches apply_gqa_decode row-for-row."""
+    through the paged flash-decode kernel, which walks the block table
+    inside the kernel (kernels/paged_decode.py — no gathered-KV copy).
+    ``SCT_PAGED_KERNEL=0`` selects the jnp reference branch instead:
+    gather into the logical view, then masked softmax — the oracle the
+    differential suite (tests/test_kernels_paged.py) compares against;
+    both match apply_gqa_decode row-for-row."""
+    from repro.kernels.paged_decode import (
+        paged_gqa_decode_pallas,
+        paged_kernel_enabled,
+    )
     from repro.serving.paged_cache import paged_append, paged_gather
 
     b, s, _ = x.shape
+    kvh, hd = cfg.n_kv_heads, cfg.head_dim
     positions = seq_lens[:, None].astype(jnp.int32)
     q, k, v = _gqa_qkv(p, x, cfg, positions, use_pallas)
     pk = paged_append(cache["k"], block_table, seq_lens, k[:, 0])
     pv = paged_append(cache["v"], block_table, seq_lens, v[:, 0])
-    ck = paged_gather(pk, block_table)
-    cv = paged_gather(pv, block_table)
-    S = ck.shape[1]
-    valid = jnp.arange(S)[None, :] <= seq_lens[:, None]
-    o = _sdpa(q, ck.astype(q.dtype), cv.astype(q.dtype), causal=False, kv_len_mask=valid)
+    if paged_kernel_enabled():
+        qg = q[:, 0].reshape(b, kvh, cfg.n_heads // kvh, hd)
+        og = paged_gqa_decode_pallas(qg, pk, pv, block_table, seq_lens)
+        o = og.reshape(b, s, cfg.n_heads, hd)
+    else:
+        ck = paged_gather(pk, block_table)
+        cv = paged_gather(pv, block_table)
+        S = ck.shape[1]
+        valid = jnp.arange(S)[None, :] <= seq_lens[:, None]
+        # fp32 like the kernel branch and the static oracle (see
+        # apply_gqa_decode) — one output rounding, bf16 token identity.
+        o = _sdpa(q.astype(jnp.float32), ck.astype(jnp.float32),
+                  cv.astype(jnp.float32), causal=False,
+                  kv_len_mask=valid).astype(q.dtype)
     return apply_linear(p["wo"], o.reshape(b, s, -1), use_pallas=use_pallas), {"k": pk, "v": pv}
 
 
@@ -447,29 +473,34 @@ def _split_wukv(p, cfg):
     return w[:, :, :nope], w[:, :, nope:]               # (kv_lora,h,nope), (kv_lora,h,vd)
 
 
-def _mla_absorbed_attend(p, x, cfg, q_nope, q_rope, cckv, ckr, valid):
+def _mla_absorbed_attend(p, x, cfg, q_nope, q_rope, cckv, ckr, valid, *,
+                         precise=False):
     """Shared absorbed-decode attention: scores and values computed
     directly against the compressed latent view cckv (b, S, kv_lora) /
     ckr (b, S, rope_d) under a validity mask — no full K/V is ever
     materialized (the MLA idea, mirroring SCT's never-materialize
     rule). ``valid`` is (b, S) (same mask for every query — the decode
     case) or (b, s, S) (per-query causal mask — the chunked-prefill
-    case)."""
+    case). ``precise`` runs every einsum in fp32 with a single rounding
+    back to x.dtype before wo — the decode paths use it so this oracle
+    and the paged flash-decode kernel (fp32 scratch) agree to fp32
+    epsilon and bf16 greedy decode stays token-identical."""
     b, s, _ = x.shape
     h, nope, rope_d, vd = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
     wuk, wuv = _split_wukv(p, cfg)
+    ct = jnp.float32 if precise else x.dtype
     # absorb W_uk into q: q_lat (b,s,h,kv_lora)
-    q_lat = jnp.einsum("bshn,lhn->bshl", q_nope, wuk.astype(q_nope.dtype))
+    q_lat = jnp.einsum("bshn,lhn->bshl", q_nope.astype(ct), wuk.astype(ct))
     scores = (
-        jnp.einsum("bshl,bSl->bhsS", q_lat, cckv.astype(q_lat.dtype))
-        + jnp.einsum("bshr,bSr->bhsS", q_rope, ckr.astype(q_rope.dtype))
+        jnp.einsum("bshl,bSl->bhsS", q_lat, cckv.astype(ct))
+        + jnp.einsum("bshr,bSr->bhsS", q_rope.astype(ct), ckr.astype(ct))
     ).astype(jnp.float32) / jnp.sqrt(jnp.float32(nope + rope_d))
     mask = valid[:, None, None, :] if valid.ndim == 2 else valid[:, None, :, :]
     scores = jnp.where(mask, scores, NEG_INF)
-    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
-    o_lat = jnp.einsum("bhsS,bSl->bshl", probs, cckv.astype(probs.dtype))   # (b,s,h,kv_lora)
-    o = jnp.einsum("bshl,lhv->bshv", o_lat, wuv.astype(o_lat.dtype))        # (b,s,h,vd)
-    return apply_linear(p["wo"], o.reshape(b, s, h * vd))
+    probs = jax.nn.softmax(scores, axis=-1).astype(ct)
+    o_lat = jnp.einsum("bhsS,bSl->bshl", probs, cckv.astype(ct))   # (b,s,h,kv_lora)
+    o = jnp.einsum("bshl,lhv->bshv", o_lat, wuv.astype(ct))        # (b,s,h,vd)
+    return apply_linear(p["wo"], o.astype(x.dtype).reshape(b, s, h * vd))
 
 
 def apply_mla_decode(p, x, cfg, *, cache, cache_len):
@@ -483,7 +514,8 @@ def apply_mla_decode(p, x, cfg, *, cache, cache_len):
     ckr = jax.lax.dynamic_update_slice_in_dim(cache["krope"], krope_new.astype(cache["krope"].dtype), cache_len, axis=1)
     S = cckv.shape[1]
     valid = jnp.broadcast_to((jnp.arange(S)[None, :] <= cache_len), (b, S))
-    out = _mla_absorbed_attend(p, x, cfg, q_nope, q_rope, cckv, ckr, valid)
+    out = _mla_absorbed_attend(p, x, cfg, q_nope, q_rope, cckv, ckr, valid,
+                               precise=True)
     return out, {"ckv": cckv, "krope": ckr}
 
 
@@ -513,7 +545,18 @@ def apply_mla_prefill_paged(p, x, cfg, *, cache, block_table, start):
 
 def apply_mla_decode_paged(p, x, cfg, *, cache, block_table, seq_lens):
     """Absorbed single-token decode against paged latent pools
-    cache = {"ckv"/"krope": (P+1, page, ...)}; per-slot seq_lens."""
+    cache = {"ckv"/"krope": (P+1, page, ...)}; per-slot seq_lens.
+
+    Default path is the absorbed-MLA paged flash-decode kernel
+    (kernels/paged_decode.py): q_nope is absorbed through W_uk outside,
+    the kernel walks the block table over the latent pools and returns
+    the latent context o_lat, W_uv/W_o apply outside — full K/V is never
+    expanded and no gathered latent copy exists. ``SCT_PAGED_KERNEL=0``
+    selects the jnp reference branch (gather + _mla_absorbed_attend)."""
+    from repro.kernels.paged_decode import (
+        paged_kernel_enabled,
+        paged_mla_decode_pallas,
+    )
     from repro.serving.paged_cache import paged_append, paged_gather
 
     b, s, _ = x.shape
@@ -523,11 +566,27 @@ def apply_mla_decode_paged(p, x, cfg, *, cache, block_table, seq_lens):
     ckv_new, krope_new = _mla_ckv(p, x, cfg, positions)
     pckv = paged_append(cache["ckv"], block_table, seq_lens, ckv_new[:, 0])
     pkr = paged_append(cache["krope"], block_table, seq_lens, krope_new[:, 0])
-    cckv = paged_gather(pckv, block_table)
-    ckr = paged_gather(pkr, block_table)
-    S = cckv.shape[1]
-    valid = jnp.arange(S)[None, :] <= seq_lens[:, None]
-    out = _mla_absorbed_attend(p, x, cfg, q_nope, q_rope, cckv, ckr, valid)
+    if paged_kernel_enabled():
+        h, nope, rope_d, vd = (cfg.n_heads, cfg.qk_nope_dim,
+                               cfg.qk_rope_dim, cfg.v_head_dim)
+        wuk, wuv = _split_wukv(p, cfg)
+        # fp32 absorb/up-project around the fp32-scratch kernel, matching
+        # _mla_absorbed_attend(precise=True) — one rounding before wo.
+        q_lat = jnp.einsum("bshn,lhn->bshl", q_nope.astype(jnp.float32),
+                           wuk.astype(jnp.float32))[:, 0]       # (b, h, L)
+        o_lat = paged_mla_decode_pallas(
+            q_lat, q_rope[:, 0].astype(jnp.float32), pckv, pkr,
+            block_table, seq_lens,
+            scale=1.0 / float(nope + rope_d) ** 0.5)
+        o = jnp.einsum("bhl,lhv->bhv", o_lat, wuv.astype(jnp.float32))
+        out = apply_linear(p["wo"], o.astype(x.dtype).reshape(b, s, h * vd))
+    else:
+        cckv = paged_gather(pckv, block_table)
+        ckr = paged_gather(pkr, block_table)
+        S = cckv.shape[1]
+        valid = jnp.arange(S)[None, :] <= seq_lens[:, None]
+        out = _mla_absorbed_attend(p, x, cfg, q_nope, q_rope, cckv, ckr,
+                                   valid, precise=True)
     return out, {"ckv": pckv, "krope": pkr}
 
 

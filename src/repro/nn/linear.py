@@ -56,9 +56,11 @@ def init_linear(
 
 def apply_linear(p, x: jax.Array, *, use_pallas: bool = False) -> jax.Array:
     """Dispatch on parameterization. The dense (m, n) matrix is never
-    built in the spectral branch. Int8-quantized groups (serving path,
-    serving/quantize.py) dequantize on the fly: int8 lives in HBM, the
-    fp copy is a per-call transient."""
+    built in the spectral branch. Int8-quantized spectral groups
+    (serving/quantize.py) route to the fused q8 kernel under
+    ``use_pallas`` — int8 factors are consumed directly, no dequantized
+    fp factor exists; the non-Pallas branches dequantize on the fly
+    (int8 lives in HBM, the fp copy is a per-call transient)."""
     if is_spectral(p):
         if use_pallas:
             from repro.kernels.ops import spectral_matmul

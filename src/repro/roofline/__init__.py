@@ -4,5 +4,13 @@ from repro.roofline.analysis import (
     model_flops,
     HW,
 )
+from repro.roofline.kernels import (
+    place,
+    spectral_matmul_terms,
+    paged_gqa_decode_terms,
+    paged_mla_decode_terms,
+)
 
-__all__ = ["roofline_terms", "collective_bytes", "model_flops", "HW"]
+__all__ = ["roofline_terms", "collective_bytes", "model_flops", "HW",
+           "place", "spectral_matmul_terms", "paged_gqa_decode_terms",
+           "paged_mla_decode_terms"]

@@ -1,0 +1,102 @@
+"""Analytic roofline placement for the hand-written serving kernels.
+
+The dry-run roofline (analysis.py) prices whole partitioned HLO modules;
+this module prices the *individual Pallas kernels* from first principles
+— FLOPs and HBM traffic derived from the shapes alone — so the kernel
+bench can report where each kernel sits on the v5e roofline without any
+hardware, and so the numbers are exactly reproducible (they are
+arithmetic, not measurements). bench_kernels.py publishes them as the
+``deterministic`` columns of BENCH_kernels.json; tools/check_bench.py
+--diff re-derives and compares them in CI.
+
+Traffic model: every operand is read from HBM once per use and every
+output written once; VMEM-resident intermediates (the spectral ``h``,
+flash's running softmax state, paged decode's accumulators) are free.
+That is the idealized best case the kernels are *designed* to hit — the
+point of fusing is to make the model true.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+from repro.roofline.analysis import HW
+
+
+def place(flops: int, hbm_bytes: int, hw: Optional[Dict] = None) -> Dict:
+    """Roofline placement of one kernel invocation: arithmetic intensity
+    (FLOP/byte), time floors under each ceiling, and which bound binds.
+    The ridge point (peak_flops / hbm_bw, ~240 FLOP/byte on v5e) is
+    where the two floors cross."""
+    h = HW if hw is None else hw
+    compute_s = flops / h["peak_flops"]
+    memory_s = hbm_bytes / h["hbm_bw"]
+    return {
+        "flops": int(flops),
+        "hbm_bytes": int(hbm_bytes),
+        "intensity_flop_per_byte": round(flops / max(hbm_bytes, 1), 3),
+        "ridge_flop_per_byte": round(h["peak_flops"] / h["hbm_bw"], 1),
+        "compute_us": round(compute_s * 1e6, 4),
+        "memory_us": round(memory_s * 1e6, 4),
+        "bound": "compute" if compute_s >= memory_s else "memory",
+    }
+
+
+def spectral_matmul_terms(M: int, m: int, n: int, k: int, *,
+                          act_bytes: int = 2, factor_bytes: int = 2,
+                          fused: bool = True) -> Dict:
+    """y = ((x @ U) * s) @ V.T. ``fused`` keeps the bottleneck ``h``
+    (M, k) in VMEM; the unfused chain writes it to HBM and reads it
+    back (plus the k-length scale, priced with ``h``'s fp32 round
+    trip). ``factor_bytes=1`` prices the int8 variant — the fused q8
+    kernel streams raw int8 factors plus one fp32 gain vector."""
+    flops = 2 * M * k * (m + n) + M * k           # two GEMMs + the scale
+    traffic = (M * m * act_bytes                  # x
+               + m * k * factor_bytes             # U
+               + n * k * factor_bytes             # V
+               + M * n * act_bytes                # y
+               + k * 4)                           # s / fused gain (fp32)
+    if not fused:
+        traffic += 2 * M * k * 4                  # h out + back in, fp32
+    out = place(flops, traffic)
+    out["shape"] = {"M": M, "m": m, "n": n, "k": k,
+                    "act_bytes": act_bytes, "factor_bytes": factor_bytes}
+    return out
+
+
+def paged_gqa_decode_terms(b: int, kvh: int, rep: int, hd: int, seq: int, *,
+                           cache_bytes: int = 2, paged: bool = True) -> Dict:
+    """One batched decode step of paged GQA attention over ``seq`` live
+    positions per slot. ``paged=True`` is the kernel: K/V pages stream
+    from the pool exactly once. ``paged=False`` prices the jnp reference
+    branch, which materializes the gathered (b, S, kvh, hd) copy —
+    written once and read once on top of the pool reads."""
+    kv = b * seq * kvh * hd                       # positions actually read
+    flops = 2 * 2 * b * kvh * rep * seq * hd      # QK^T + PV
+    traffic = (b * kvh * rep * hd * cache_bytes   # q
+               + 2 * kv * cache_bytes             # K + V pool pages
+               + b * kvh * rep * hd * cache_bytes)  # out
+    if not paged:
+        traffic += 2 * 2 * kv * cache_bytes       # gathered copy: write+read
+    out = place(flops, traffic)
+    out["shape"] = {"b": b, "kvh": kvh, "rep": rep, "hd": hd, "seq": seq,
+                    "cache_bytes": cache_bytes}
+    return out
+
+
+def paged_mla_decode_terms(b: int, h: int, lat: int, rope: int, seq: int, *,
+                           cache_bytes: int = 2, paged: bool = True) -> Dict:
+    """One batched decode step of absorbed-MLA attention: latent scores
+    plus rope scores, with the ckv rows doubling as values (read once,
+    used twice — the MLA trick keeps traffic at the latent width, not
+    the expanded K/V width)."""
+    rows = b * seq
+    flops = 2 * b * h * seq * (lat + rope) + 2 * b * h * seq * lat  # scores + PV
+    traffic = (b * h * (lat + rope) * cache_bytes           # q_lat + q_rope
+               + rows * (lat + rope) * cache_bytes          # ckv + krope pages
+               + b * h * lat * cache_bytes)                 # o_lat
+    if not paged:
+        traffic += 2 * rows * (lat + rope) * cache_bytes    # gathered copies
+    out = place(flops, traffic)
+    out["shape"] = {"b": b, "h": h, "lat": lat, "rope": rope, "seq": seq,
+                    "cache_bytes": cache_bytes}
+    return out

@@ -12,10 +12,13 @@ place quantization noise turns into token flips.
 A quantized tensor is the dict ``{"q8": int8, "scale": fp32}`` with the
 scale indexed by the last (channel) axis; a quantized spectral group
 keeps its {"U","s","V"} shape with U/V replaced by quantized tensors, so
-the pytree routes through jit/engine code unchanged. Dequantization
-happens on the fly at apply time (``nn/linear.py`` /
-``kernels/ops.spectral_matmul_q8``): int8 is what lives in HBM, the fp
-copy is a transient.
+the pytree routes through jit/engine code unchanged. On the Pallas path
+(``kernels/ops.spectral_matmul_q8``) the int8 factors feed the fused
+kernel *directly* — per-column scales commute with the matmuls, so
+``u_scale * s * v_scale`` collapse into one k-length gain and the
+dequantized fp factor is never materialized. The non-Pallas fallback
+(``nn/linear.py``) dequantizes on the fly: int8 is what lives in HBM,
+the fp copy a per-call transient.
 """
 from __future__ import annotations
 
@@ -53,8 +56,11 @@ def dequantize_int8(qt: dict, dtype: Any = jnp.float32) -> jax.Array:
     """Inverse of :func:`quantize_int8`: ``{"q8": int8 (..., m, c),
     "scale": f32 (..., c)}`` -> float ``(..., m, c)`` with the scale
     broadcast over the -2 axis. This is the transient apply-time
-    expansion (nn/linear.py, kernels/ops.spectral_matmul_q8) — int8 is
-    what lives in HBM; the float copy exists only inside the op."""
+    expansion of the non-Pallas fallback (nn/linear.py) and the
+    ``--verify`` oracle (dequantize_tree) — the fused Pallas kernel
+    (kernels/ops.spectral_matmul_q8) never calls it: int8 factors go
+    straight into the MXU with the scales folded into the bottleneck
+    gain."""
     return (qt["q8"].astype(jnp.float32)
             * jnp.expand_dims(qt["scale"], -2)).astype(dtype)
 

@@ -25,7 +25,7 @@ from repro.bench import (
     validate_bench,
     write_bench,
 )
-from repro.bench.schema import ARM_METRIC_KEYS
+from repro.bench.schema import ARM_METRIC_KEYS, SCHEMA_VERSION
 
 REPO_ROOT = Path(__file__).resolve().parent.parent
 
@@ -323,3 +323,45 @@ def test_check_bench_diff_deterministic_columns_only():
     other = copy.deepcopy(doc)
     other["area"] = "serving"
     assert any("area" in e for e in cb.diff_envelopes(other, doc))
+
+
+def test_check_bench_diff_entries_by_name():
+    """Entries rows (BENCH_kernels.json style) are matched by name and
+    their 'deterministic' sub-objects compared exactly; wall-clock
+    us_per_call outside it is ignored."""
+    import copy
+
+    cb = _load_check_bench()
+    rows = [{"name": "spectral_q8", "us_per_call": 10.0,
+             "deterministic": {"flops": 100, "bound": "memory"}},
+            {"name": "paged_gqa_decode",
+             "deterministic": {"flops": 7}}]
+    doc = bench_envelope("kernels", {"seed": 0}, [], entries=rows)
+    assert cb.diff_envelopes(doc, doc) == []
+
+    wall = copy.deepcopy(doc)
+    wall["entries"][0]["us_per_call"] = 9999.0
+    assert cb.diff_envelopes(wall, doc) == []     # machine-dependent
+
+    moved = copy.deepcopy(doc)
+    moved["entries"][0]["deterministic"]["flops"] = 101
+    errs = cb.diff_envelopes(moved, doc)
+    assert any("spectral_q8" in e and "flops" in e for e in errs)
+
+    missing = copy.deepcopy(doc)
+    del missing["entries"][1]
+    assert any("committed file only" in e
+               for e in cb.diff_envelopes(missing, doc))
+
+
+def test_envelope_entries_with_deterministic_require_name():
+    """Schema: a deterministic row without a name is unaddressable by
+    the diff and must be rejected at emit time."""
+    bad = {"schema_version": SCHEMA_VERSION, "area": "kernels",
+           "spec": {}, "results": [],
+           "entries": [{"deterministic": {"flops": 1}}]}
+    assert any("name" in e for e in validate_bench(bad))
+    bad["entries"] = [{"name": "x", "deterministic": "not-a-dict"}]
+    assert any("deterministic" in e for e in validate_bench(bad))
+    good = dict(bad, entries=[{"name": "x", "deterministic": {"flops": 1}}])
+    assert validate_bench(good) == []

@@ -1,14 +1,23 @@
-"""Pallas kernel tests: shape/dtype sweeps against the jnp oracles
-(interpret mode on CPU), plus gradient checks through custom_vjp."""
+"""Pallas kernel tests: shape/dtype sweeps against the jnp oracles via
+the kernels/testing.py differential harness, gradient checks through
+custom_vjp, and the fused-int8 kernel's equivalence + no-grad contract."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.ops import spectral_matmul
+from repro.kernels.ops import spectral_matmul, spectral_matmul_q8
 from repro.kernels.ref import spectral_matmul_ref
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.flash_ref import flash_attention_ref
+from repro.kernels.testing import (
+    SCALE_PROFILES,
+    Tol,
+    assert_kernel_matches,
+    scale_profile,
+    tolerance_for,
+)
+from repro.serving.quantize import dequantize_int8, quantize_int8
 
 
 SPECTRAL_SHAPES = [
@@ -20,20 +29,21 @@ SPECTRAL_SHAPES = [
 ]
 
 
-@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
-@pytest.mark.parametrize("shape", SPECTRAL_SHAPES)
-def test_spectral_matmul_vs_oracle(shape, dtype, key):
-    M, m, n, k = shape
+def _spectral_args(key, M, m, n, k, dtype):
     ks = jax.random.split(key, 4)
     x = jax.random.normal(ks[0], (M, m), dtype)
     U = (jax.random.normal(ks[1], (m, k)) / np.sqrt(m)).astype(jnp.float32)
     s = jax.random.uniform(ks[2], (k,))
     V = (jax.random.normal(ks[3], (n, k)) / np.sqrt(n)).astype(jnp.float32)
-    y = spectral_matmul(x, U, s, V)
-    yr = spectral_matmul_ref(x, U, s, V)
-    tol = 5e-5 if dtype == jnp.float32 else 5e-2
-    np.testing.assert_allclose(np.asarray(y, np.float32), np.asarray(yr, np.float32),
-                               rtol=tol, atol=tol)
+    return x, U, s, V
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", SPECTRAL_SHAPES)
+def test_spectral_matmul_vs_oracle(shape, dtype, key):
+    args = _spectral_args(key, *shape, dtype)
+    assert_kernel_matches(spectral_matmul, spectral_matmul_ref, args,
+                          dtype=dtype)
 
 
 def test_spectral_matmul_batched_leading_dims(key):
@@ -48,12 +58,7 @@ def test_spectral_matmul_batched_leading_dims(key):
 
 
 def test_spectral_matmul_gradients_match_oracle(key):
-    M, m, n, k = 64, 128, 160, 16
-    ks = jax.random.split(key, 4)
-    x = jax.random.normal(ks[0], (M, m))
-    U = jax.random.normal(ks[1], (m, k)) / np.sqrt(m)
-    s = jax.random.uniform(ks[2], (k,))
-    V = jax.random.normal(ks[3], (n, k)) / np.sqrt(n)
+    x, U, s, V = _spectral_args(key, 64, 128, 160, 16, jnp.float32)
 
     f = lambda *a: jnp.sum(spectral_matmul(*a) ** 2)
     fr = lambda *a: jnp.sum(spectral_matmul_ref(*a) ** 2)
@@ -64,6 +69,59 @@ def test_spectral_matmul_gradients_match_oracle(key):
         np.testing.assert_allclose(np.asarray(a) / scale, np.asarray(b) / scale,
                                    rtol=1e-4, atol=1e-4)
 
+
+# --------------------------------------------------------- fused int8 --
+
+def _q8_ref(x, U_qt, s, V_qt):
+    """The dequantize-then-matmul chain the fused kernel replaces —
+    same quantized factors, so only the kernel's scale reassociation
+    (fused k-length gain vs two factor-shaped dequants) differs."""
+    return spectral_matmul_ref(x, dequantize_int8(U_qt), s,
+                               dequantize_int8(V_qt))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("profile", SCALE_PROFILES)
+def test_spectral_matmul_q8_matches_dequant_chain(profile, dtype, key):
+    """Fused kernel == dequantize-then-matmul within the per-dtype rung,
+    under per-channel scale ratios up to eight decades ('extreme')."""
+    M, m, n, k = 100, 300, 700, 64
+    x, U, s, V = _spectral_args(key, M, m, n, k, dtype)
+    mags = scale_profile(profile, k)
+    U_qt = quantize_int8(U * mags[None, :])   # per-column amax -> scale ratio
+    V_qt = quantize_int8(V)
+    assert_kernel_matches(spectral_matmul_q8, _q8_ref, (x, U_qt, s, V_qt),
+                          dtype=dtype, label=f"q8:{profile}")
+
+
+def test_spectral_matmul_q8_batched_leading_dims(key):
+    x, U, s, V = _spectral_args(key, 6, 64, 96, 8, jnp.float32)
+    U_qt, V_qt = quantize_int8(U), quantize_int8(V)
+    y = spectral_matmul_q8(x.reshape(2, 3, 64), U_qt, s, V_qt)
+    assert y.shape == (2, 3, 96)
+    yr = _q8_ref(x, U_qt, s, V_qt).reshape(2, 3, 96)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=5e-5, atol=5e-5)
+
+
+def test_spectral_matmul_q8_has_no_gradient(key):
+    """Serving-only contract: int8 factors carry no gradient, and
+    differentiating through the op must raise — not silently return a
+    wrong cotangent (jit'd primal use stays fine)."""
+    x, U, s, V = _spectral_args(key, 16, 64, 96, 8, jnp.float32)
+    U_qt, V_qt = quantize_int8(U), quantize_int8(V)
+    jax.jit(spectral_matmul_q8)(x, U_qt, s, V_qt)   # primal under jit: ok
+    with pytest.raises(TypeError, match="serving-only"):
+        jax.grad(lambda a: spectral_matmul_q8(a, U_qt, s, V_qt).sum())(x)
+
+
+def test_tolerance_ladder_rejects_unknown_dtype():
+    with pytest.raises(KeyError):
+        tolerance_for(jnp.int8)
+    assert tolerance_for(jnp.float32) == Tol(5e-5, 5e-5)
+
+
+# ------------------------------------------------------------- flash --
 
 FLASH_SHAPES = [
     (2, 512, 64, True),
@@ -80,11 +138,11 @@ def test_flash_attention_vs_oracle(B, s, d, causal, dtype, key):
     q = jax.random.normal(ks[0], (B, s, d), dtype)
     k = jax.random.normal(ks[1], (B, s, d), dtype)
     v = jax.random.normal(ks[2], (B, s, d), dtype)
-    y = flash_attention_pallas(q, k, v, causal=causal, interpret=True)
-    yr = flash_attention_ref(q, k, v, causal=causal)
-    tol = 2e-5 if dtype == jnp.float32 else 3e-2
-    np.testing.assert_allclose(np.asarray(y, np.float32), np.asarray(yr, np.float32),
-                               rtol=tol, atol=tol)
+    tol = Tol(2e-5, 2e-5) if dtype == jnp.float32 else Tol(3e-2, 3e-2)
+    assert_kernel_matches(
+        lambda *a: flash_attention_pallas(*a, causal=causal, interpret=True),
+        lambda *a: flash_attention_ref(*a, causal=causal),
+        (q, k, v), tol=tol, label=f"flash causal={causal}")
 
 
 def test_jnp_flash_fallback_matches_kernel_semantics(key):

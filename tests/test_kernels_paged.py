@@ -1,0 +1,180 @@
+"""Differential suite for the paged flash-decode Pallas kernels
+(kernels/paged_decode.py) against the jnp gather-then-attend oracles
+(kernels/paged_ref.py), built on the kernels/testing.py harness.
+
+Fuzz axes: non-tile-multiple head dims, odd page sizes, ragged page
+occupancy (empty slots, page-boundary lengths), shuffled physical pages
+with null-page tails, MQA/grouped/MHA head layouts, and absorbed MLA.
+The end-to-end leg asserts full ServingEngine.run greedy decode through
+the kernels is token-for-token identical to the static-cache oracle —
+the same contract test_decode_consistency.py pins for the engine itself.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.paged_decode import (
+    paged_gqa_decode_pallas,
+    paged_mla_decode_pallas,
+    paged_kernel_enabled,
+)
+from repro.kernels.paged_ref import paged_gqa_decode_ref, paged_mla_decode_ref
+from repro.kernels.testing import (
+    assert_kernel_matches,
+    forced_interpret,
+    make_block_table,
+    ragged_seq_lens,
+)
+
+
+def _paged_state(key, b, n_pages_per_seq, num_pages, page, feature, dtype,
+                 seed=0):
+    """Pools + shuffled block table + ragged lengths for one fuzz case.
+    The pool is dense random noise including the null page row — anything
+    the mask lets through shows up as a mismatch against the oracle."""
+    ks = jax.random.split(key, len(feature) + 1)
+    pools = [jax.random.normal(k, (num_pages + 1, page, *f), dtype)
+             for k, f in zip(ks, feature)]
+    seq_lens = ragged_seq_lens(b, page * n_pages_per_seq - 1, page, seed)
+    block_table = make_block_table(b, n_pages_per_seq, num_pages, seq_lens,
+                                   page, seed)
+    return pools, block_table, seq_lens
+
+
+# b, kvh, rep, hd, page, n_pages_per_seq — covers MQA (kvh=1), grouped,
+# MHA (rep=1), non-tile head dims (20/48/100), odd page sizes (3).
+GQA_CASES = [
+    (4, 2, 3, 64, 4, 6),
+    (2, 1, 4, 20, 3, 5),
+    (2, 4, 1, 48, 8, 4),
+    (4, 2, 2, 100, 4, 6),
+]
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,kvh,rep,hd,page,n", GQA_CASES)
+def test_paged_gqa_decode_vs_oracle(b, kvh, rep, hd, page, n, dtype, key):
+    num_pages = b * n + 3
+    (k_pool, v_pool), bt, sl = _paged_state(
+        key, b, n, num_pages, page, [(kvh, hd), (kvh, hd)], dtype)
+    q = jax.random.normal(jax.random.fold_in(key, 7), (b, kvh, rep, hd), dtype)
+    assert_kernel_matches(
+        paged_gqa_decode_pallas, paged_gqa_decode_ref,
+        (q, k_pool, v_pool, bt, sl), label=f"gqa hd={hd} page={page}")
+
+
+# b, h, latent, rope_d, page, n_pages_per_seq — non-tile latent dims.
+MLA_CASES = [
+    (2, 4, 32, 16, 4, 6),
+    (3, 2, 24, 12, 3, 5),
+    (2, 8, 100, 20, 8, 4),
+]
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,h,lat,rope,page,n", MLA_CASES)
+def test_paged_mla_decode_vs_oracle(b, h, lat, rope, page, n, dtype, key):
+    num_pages = b * n + 3
+    (ckv_pool, kr_pool), bt, sl = _paged_state(
+        key, b, n, num_pages, page, [(lat,), (rope,)], dtype)
+    ks = jax.random.split(jax.random.fold_in(key, 7))
+    q_lat = jax.random.normal(ks[0], (b, h, lat), dtype)
+    q_rope = jax.random.normal(ks[1], (b, h, rope), dtype)
+    scale = 1.0 / float(48 + rope) ** 0.5     # pre-absorption head dim
+    assert_kernel_matches(
+        lambda *a: paged_mla_decode_pallas(*a, scale=scale),
+        lambda *a: paged_mla_decode_ref(*a, scale=scale),
+        (q_lat, q_rope, ckv_pool, kr_pool, bt, sl),
+        label=f"mla lat={lat} page={page}")
+
+
+def test_paged_gqa_forced_interpret_matches(key):
+    """Explicit SCT_INTERPRET=1 leg — independent of whatever mode the
+    surrounding CI matrix leg runs, the interpret path must agree."""
+    b, kvh, rep, hd, page, n = 2, 2, 2, 64, 4, 4
+    (k_pool, v_pool), bt, sl = _paged_state(
+        key, b, n, b * n + 2, page, [(kvh, hd), (kvh, hd)], jnp.float32)
+    q = jax.random.normal(jax.random.fold_in(key, 7), (b, kvh, rep, hd))
+    with forced_interpret():
+        assert_kernel_matches(paged_gqa_decode_pallas, paged_gqa_decode_ref,
+                              (q, k_pool, v_pool, bt, sl))
+
+
+def test_paged_all_slots_empty_is_finite(key):
+    """Inactive slots (seq_lens=0, null-page tables) attend over the one
+    position the convention leaves valid — output must stay finite, not
+    NaN from an all-masked softmax."""
+    b, kvh, rep, hd, page, n = 2, 1, 2, 32, 4, 3
+    num_pages = 8
+    k_pool = jax.random.normal(key, (num_pages + 1, page, kvh, hd))
+    v_pool = jax.random.normal(jax.random.fold_in(key, 1),
+                               (num_pages + 1, page, kvh, hd))
+    bt = jnp.full((b, n), num_pages, jnp.int32)       # all null
+    sl = jnp.zeros((b,), jnp.int32)
+    q = jax.random.normal(jax.random.fold_in(key, 2), (b, kvh, rep, hd))
+    out = paged_gqa_decode_pallas(q, k_pool, v_pool, bt, sl)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    ref = paged_gqa_decode_ref(q, k_pool, v_pool, bt, sl)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=5e-5, atol=5e-5)
+
+
+def test_paged_kernel_gate_parses():
+    import os
+
+    assert paged_kernel_enabled()                     # default: on
+    prev = os.environ.get("SCT_PAGED_KERNEL")
+    try:
+        os.environ["SCT_PAGED_KERNEL"] = "0"
+        assert not paged_kernel_enabled()
+        os.environ["SCT_PAGED_KERNEL"] = "yes"
+        assert paged_kernel_enabled()
+        os.environ["SCT_PAGED_KERNEL"] = "maybe"
+        with pytest.raises(ValueError):
+            paged_kernel_enabled()
+    finally:
+        if prev is None:
+            os.environ.pop("SCT_PAGED_KERNEL", None)
+        else:
+            os.environ["SCT_PAGED_KERNEL"] = prev
+
+
+# ---------------------------------------------------------------- engine --
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "deepseek-v3-671b"])
+@pytest.mark.parametrize("gate", ["1", "0"])
+def test_engine_greedy_token_identity(arch, gate, key, monkeypatch):
+    """Full ServingEngine.run greedy decode — through the paged kernels
+    (gate=1, the default) and through the jnp reference branch (gate=0)
+    — must be token-for-token identical to the static-cache oracle for
+    both paging attention families (GQA and absorbed MLA). Same request
+    mix as test_decode_consistency.py's prefix/chunking test."""
+    from repro.config import get_config
+    from repro.launch.serve import static_greedy_reference
+    from repro.models.model import init_model
+    from repro.serving import PagedCacheConfig, Request
+    from repro.serving.engine import ServingEngine
+
+    monkeypatch.setenv("SCT_PAGED_KERNEL", gate)
+    cfg = get_config(arch, reduced=True).replace(dtype="float32",
+                                                 capacity_factor=8.0)
+    params = init_model(key, cfg)
+    pcfg = PagedCacheConfig(page_size=4, num_pages=32, max_slots=2,
+                            max_pages_per_seq=6)
+    rng = np.random.default_rng(0)
+    system = rng.integers(0, cfg.vocab, size=(9,)).astype(np.int32)
+    reqs = [Request(rid=i,
+                    prompt=np.concatenate(
+                        [system,
+                         rng.integers(0, cfg.vocab, size=(t,)).astype(np.int32)]),
+                    max_new_tokens=g, arrival=a)
+            for i, (t, g, a) in enumerate([(3, 4, 0), (2, 3, 2), (4, 4, 4)])]
+    engine = ServingEngine(cfg, params, pcfg, prefill_token_budget=6,
+                           prefix_cache=True, chunked_prefill=True)
+    out = engine.run(reqs)
+    for r in reqs:
+        ref = static_greedy_reference(cfg, params, r.prompt, r.max_new_tokens,
+                                      pcfg.max_seq)
+        np.testing.assert_array_equal(
+            out[r.rid], ref, err_msg=f"{arch} gate={gate} rid {r.rid}")

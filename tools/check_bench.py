@@ -12,12 +12,15 @@ Exit 0 when every file is schema-valid, 1 with a per-file error report
 otherwise (every violation listed, not just the first).
 
 ``--diff`` compares the *deterministic* columns of a freshly
-regenerated envelope against a committed one: arms are matched by
-``(overload, scheduler, variant)`` and the clock-domain metrics
-(:data:`DIFF_KEYS` — request counts, completion/timeout/shed tallies,
-TTFT percentiles in engine steps, SLO-met and generated token counts,
-peak pages) must agree exactly. Wall-clock columns (``wall_s``,
-``tokens_per_s``, ITL) are machine-dependent and deliberately ignored.
+regenerated envelope against a committed one: ``results`` arms are
+matched by ``(overload, scheduler, variant)`` and the clock-domain
+metrics (:data:`DIFF_KEYS` — request counts, completion/timeout/shed
+tallies, TTFT percentiles in engine steps, SLO-met and generated token
+counts, peak pages) must agree exactly; ``entries`` rows are matched by
+``name`` and their ``deterministic`` sub-objects (analytic roofline
+columns in BENCH_kernels.json) must agree exactly. Wall-clock columns
+(``wall_s``, ``tokens_per_s``, ITL, ``us_per_call``) are
+machine-dependent and deliberately ignored.
 ``COMMITTED`` defaults to the repo-root file with the regenerated
 envelope's name (``BENCH_<area>.json``). This is the CI
 regenerate-and-diff step: a code change that silently moves the
@@ -98,6 +101,28 @@ def diff_envelopes(new_doc: dict, old_doc: dict) -> list[str]:
                 errs.append(f"arm {_name(key)}: {col} regenerated "
                             f"{new_m.get(col)!r} != committed "
                             f"{old_m.get(col)!r}")
+
+    # entries rows: matched by name, "deterministic" sub-object exact
+    # (wall-clock keys like us_per_call live outside it and are ignored)
+    new_rows = {e.get("name"): e for e in new_doc.get("entries", [])
+                if e.get("name")}
+    old_rows = {e.get("name"): e for e in old_doc.get("entries", [])
+                if e.get("name")}
+    for name in sorted(set(old_rows) - set(new_rows)):
+        errs.append(f"entry {name}: in committed file only")
+    for name in sorted(set(new_rows) - set(old_rows)):
+        errs.append(f"entry {name}: in regenerated file only")
+    for name in sorted(set(new_rows) & set(old_rows)):
+        new_d = new_rows[name].get("deterministic", {})
+        old_d = old_rows[name].get("deterministic", {})
+        if new_d == old_d:
+            continue
+        cols = sorted(set(new_d) | set(old_d))
+        for col in cols:
+            if new_d.get(col) != old_d.get(col):
+                errs.append(f"entry {name}: {col} regenerated "
+                            f"{new_d.get(col)!r} != committed "
+                            f"{old_d.get(col)!r}")
     return errs
 
 
@@ -131,8 +156,9 @@ def run_diff(argv: list[str]) -> int:
               "--spec-from) and commit the result")
         return 1
     n = len(docs[new_path].get("results", []))
-    print(f"ok   {old_path} matches {new_path} on {len(DIFF_KEYS)} "
-          f"deterministic columns across {n} arms")
+    rows = len(docs[new_path].get("entries", []))
+    print(f"ok   {old_path} matches {new_path} on the deterministic "
+          f"columns ({n} arms, {rows} entries)")
     return 0
 
 
