@@ -37,8 +37,11 @@ usage: python -m repro bench [<name>] [flags...]
               BENCH_kernels.json
   roofline    dry-run roofline table (--json-out for an envelope)
   table3      rank sweep (--ranks/--steps/--batch/--seq/--json-out)
-  table1 table2 table4
-              single paper-table / micro-bench suites
+  table1      paper Table 1 memory arithmetic -> BENCH_table1.json
+              (exact-integer columns, CI regenerate-and-diffed)
+  table2      70B-slice training step (--json-out for an envelope;
+              wall-clock heavy, not committed)
+  table4      single micro-bench suite
   <a> <b> ..  any list of suite names: legacy multi-suite CSV run
 
 every subcommand takes --dump-spec (print the resolved BenchSpec, run
@@ -146,8 +149,12 @@ def build_serving_parser() -> argparse.ArgumentParser:
     ap.add_argument("--schedulers", default="fifo,slo")
     ap.add_argument("--precisions", default="fp32,int8",
                     help="throughput axis; fp32 alone skips the sweep")
-    ap.add_argument("--ranks", default="",
-                    help="serve-rank throughput axis (comma-separated)")
+    ap.add_argument("--ranks", default="8,16",
+                    help="serve-rank throughput axis (comma-separated; "
+                         "'' skips)")
+    ap.add_argument("--serving-modes", default="colocated,disaggregated",
+                    help="serving-topology arms: colocated and/or "
+                         "disaggregated (prefill/decode worker split)")
     # output
     ap.add_argument("--json-out", default="BENCH_serving.json",
                     help="envelope path ('' to skip writing)")
@@ -213,6 +220,7 @@ def serving_bench_from_args(args: argparse.Namespace):
         schedulers=args.schedulers,
         precisions=args.precisions,
         ranks=args.ranks,
+        serving_modes=args.serving_modes,
     )
 
 
@@ -255,7 +263,8 @@ def cmd_serving(argv: Sequence[str]) -> int:
     doc = run_bench(bench, log=lambda s: print(f"[bench] {s}", flush=True))
     for arm in doc["results"]:
         m = arm["metrics"]
-        print(f"{arm['overload']:g}x {arm['scheduler']:4s}: "
+        mode = arm.get("variant", "colocated")
+        print(f"{mode:13s} {arm['overload']:g}x {arm['scheduler']:4s}: "
               f"{int(m['completed'])}/{int(m['requests'])} completed, "
               f"{int(m['timed_out'])} timed out, {int(m['shed'])} shed | "
               f"ttft p50/p99 {m['ttft_p50_steps']}/{m['ttft_p99_steps']} "
@@ -460,6 +469,35 @@ def cmd_table3(argv: Sequence[str]) -> int:
     return 0
 
 
+def _table_suite(name: str, default_json: str):
+    """table1/table2 front door: envelope-emitting fixed suites with the
+    same --json-out/--dump-spec/--spec-from contract as cmd_kernels
+    (the suites carry no sweep knobs, so --spec-from just validates the
+    embedded spec and reruns the fixed table)."""
+    def cmd(argv: Sequence[str]) -> int:
+        from benchmarks import table1_memory, table2_70b_step
+
+        suite = {"table1": table1_memory, "table2": table2_70b_step}[name]
+        ap = argparse.ArgumentParser(prog=f"repro bench {name}")
+        ap.add_argument("--json-out", default=default_json,
+                        help="envelope path ('' to skip writing)")
+        ap.add_argument("--dump-spec", action="store_true",
+                        help="print the resolved BenchSpec JSON and exit")
+        ap.add_argument("--spec-from", default=None, metavar="FILE",
+                        help="rerun the BenchSpec embedded in this "
+                             "envelope (the CI regenerate-and-diff path)")
+        args = ap.parse_args(argv)
+        if args.spec_from:
+            _bench_from_envelope(args.spec_from)  # must parse as a BenchSpec
+        if args.dump_spec:
+            print(suite.bench_spec().to_json(indent=2))
+            return 0
+        for r in suite.run(json_out=args.json_out or None):
+            print(r)
+        return 0
+    return cmd
+
+
 def _simple_suite(name: str, arch: str):
     def cmd(argv: Sequence[str]) -> int:
         ap = argparse.ArgumentParser(prog=f"repro bench {name}")
@@ -478,8 +516,8 @@ COMMANDS = {
     "serving": cmd_serving,
     "speculative": cmd_speculative,
     "table3": cmd_table3,
-    "table1": _simple_suite("table1", "smollm2-1.7b"),
-    "table2": _simple_suite("table2", "llama3.1-70b"),
+    "table1": _table_suite("table1", "BENCH_table1.json"),
+    "table2": _table_suite("table2", ""),
     "table4": _simple_suite("table4", "smollm2-1.7b"),
     "kernels": cmd_kernels,
     "roofline": cmd_roofline,

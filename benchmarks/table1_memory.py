@@ -10,6 +10,11 @@ Extended (this repo's precision policy): per-precision *serving* weight
 bytes per layer — dense fp32 vs SCT fp32 vs SCT bf16 vs SCT int8
 (per-channel scales + fp32 singular values), with an instantiated
 quantize_tree check.
+
+Emits a ``BENCH_table1.json`` envelope when asked: every column here is
+exact integer arithmetic (byte counts, rounded ratios, match flags), so
+the whole table lives in ``deterministic`` sub-objects and CI
+regenerates + diffs it like BENCH_kernels.json.
 """
 from __future__ import annotations
 
@@ -44,20 +49,41 @@ ROWS = [
 ]
 
 
-def run() -> list[str]:
+def bench_spec():
+    """The resolved BenchSpec (--dump-spec parity; also embedded in the
+    envelope so --spec-from can rerun it)."""
+    from repro.api import BenchSpec, ModelSpec
+
+    return BenchSpec(name="table1", model=ModelSpec("smollm2-1.7b",
+                                                    reduced=True),
+                     overloads="1", schedulers="fifo")
+
+
+def run(json_out: str | None = None) -> list[str]:
     out = []
+    entries: list[dict] = []
     k = 32
     print("# Paper Table 1 — per-MLP-layer training memory at rank 32")
     print(f"{'model':14s} {'layer':14s} {'dense+adam':>12s} {'sct(k=32)':>12s} "
           f"{'ratio':>7s} {'paper':>6s}")
     for name, m, n, expected in ROWS:
-        dense_mb = 4 * dense_param_count(m, n) * 4 / 1e6        # fp32, x4 adam
-        sct_mb = 4 * spectral_param_count(m, n, k) * 4 / 1e6
-        ratio = dense_mb / sct_mb
+        dense_b = 4 * dense_param_count(m, n) * 4      # fp32, x4 adam
+        sct_b = 4 * spectral_param_count(m, n, k) * 4
+        ratio = dense_b / sct_b
         status = "OK" if round(ratio) == expected else "MISMATCH"
-        print(f"{name:14s} {m}x{n:<8d} {dense_mb:10.1f}MB {sct_mb:10.2f}MB "
+        print(f"{name:14s} {m}x{n:<8d} {dense_b/1e6:10.1f}MB {sct_b/1e6:10.2f}MB "
               f"{ratio:6.0f}x {expected:5d}x  {status}")
         out.append(f"table1_{name},0,{ratio:.1f}x_vs_paper_{expected}x_{status}")
+        entries.append({
+            "name": f"table1_{name}",
+            "deterministic": {
+                "m": m, "n": n, "rank": k,
+                "dense_adam_bytes": dense_b,
+                "sct_adam_bytes": sct_b,
+                "ratio": round(ratio),
+                "paper_ratio": expected,
+                "matches_paper": round(ratio) == expected,
+            }})
 
     # instantiated check (smallest row): real arrays + real Adam state
     t0 = time.time()
@@ -73,6 +99,12 @@ def run() -> list[str]:
     print(f"instantiated SCT state @135M-layer: {actual/1e6:.2f}MB "
           f"(analytic {expect/1e6:.2f}MB)")
     out.append(f"table1_instantiated,{us:.0f},{actual}B")
+    entries.append({
+        "name": "table1_instantiated",
+        "us_per_call": round(us, 1),
+        "deterministic": {"actual_bytes": int(actual),
+                          "analytic_bytes": expect,
+                          "matches_analytic": int(actual) == expect}})
 
     # ---- per-precision serving weight bytes per MLP layer -------------
     print("\n# Serving weight bytes per MLP layer, by precision "
@@ -88,6 +120,15 @@ def run() -> list[str]:
               f"{dense_b/row['int8']:11.0f}x")
         out.append(f"table1_serving_{name},0,"
                    f"int8={row['int8']}B;ratio={dense_b/row['int8']:.0f}x")
+        entries.append({
+            "name": f"table1_serving_{name}",
+            "deterministic": {
+                "dense_fp32_bytes": dense_b,
+                "sct_fp32_bytes": row["fp32"],
+                "sct_bf16_bytes": row["bf16"],
+                "sct_int8_bytes": row["int8"],
+                "int8_vs_dense": round(dense_b / row["int8"]),
+            }})
 
     # instantiated: quantize_tree over a real spectral layer must match
     # the analytic int8 figure (q8 + 2 scale vectors + s)
@@ -99,8 +140,22 @@ def run() -> list[str]:
     status = "OK" if got == want else f"MISMATCH (analytic {want})"
     print(f"instantiated int8 @135M-layer: {got/1e6:.3f}MB  {status}")
     out.append(f"table1_int8_instantiated,0,{got}B_{status}")
+    entries.append({
+        "name": "table1_int8_instantiated",
+        "deterministic": {"quantized_bytes": int(got),
+                          "analytic_bytes": want,
+                          "matches_analytic": int(got) == want}})
+
+    if json_out:
+        from repro.bench import write_bench
+        from repro.bench.schema import bench_envelope
+
+        doc = bench_envelope("table1", bench_spec().to_dict(), results=[],
+                             entries=entries)
+        write_bench(doc, json_out)
+        print(f"wrote {json_out}")
     return out
 
 
 if __name__ == "__main__":
-    run()
+    run(json_out="BENCH_table1.json")

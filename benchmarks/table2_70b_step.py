@@ -32,7 +32,17 @@ VOCAB = 16384  # the paper's '452M spectral params for 77.8B dense' implies
                # report the choice.
 
 
-def run() -> list[str]:
+def bench_spec():
+    """The resolved BenchSpec (--dump-spec parity; also embedded in the
+    envelope so --spec-from can rerun it)."""
+    from repro.api import BenchSpec, ModelSpec
+
+    return BenchSpec(name="table2", model=ModelSpec("llama3.1-70b",
+                                                    reduced=True),
+                     overloads="1", schedulers="fifo")
+
+
+def run(json_out: str | None = None) -> list[str]:
     out = []
     full = get_config("llama-70b-sct")
     cfg = full.replace(n_layers=N_LAYERS, vocab=VOCAB, remat=True)
@@ -98,6 +108,36 @@ def run() -> list[str]:
     out.append(f"table2_qr_retraction,{t_retract*1e6:.0f},frac={retr_frac:.2f}")
     out.append(f"table2_ortho,{0:.0f},{ortho:.2e}_{'OK' if ok else 'FAIL'}")
     out.append(f"table2_peak_rss,{0:.0f},{rss1:.2f}GB")
+
+    if json_out:
+        from repro.bench import write_bench
+        from repro.bench.schema import bench_envelope
+
+        # this suite is a wall-clock + RSS measurement, so only the
+        # parameter-count geometry and the ortho pass/fail are
+        # deterministic; phase timings ride along as us_per_call (the
+        # envelope is NOT committed/diffed — a full step is too slow
+        # for the CI regenerate-and-diff loop)
+        entries = [
+            {"name": "table2_geometry",
+             "deterministic": {"layers_measured": N_LAYERS,
+                               "extrapolate_to_layers": full.n_layers,
+                               "vocab": VOCAB,
+                               "spectral_params": int(n_spec),
+                               "dense_equivalent_params": int(n_dense_eq),
+                               "ortho_ok": ok}},
+            {"name": "table2_init", "us_per_call": round(t_init * 1e6, 1)},
+            {"name": "table2_fwd_bwd",
+             "us_per_call": round(t_fwd_bwd * 1e6, 1)},
+            {"name": "table2_adamw", "us_per_call": round(t_opt * 1e6, 1)},
+            {"name": "table2_qr_retraction",
+             "us_per_call": round(t_retract * 1e6, 1)},
+            {"name": "table2_peak_rss_gb", "us_per_call": round(rss1, 3)},
+        ]
+        doc = bench_envelope("table2", bench_spec().to_dict(), results=[],
+                             entries=entries)
+        write_bench(doc, json_out)
+        print(f"wrote {json_out}")
     return out
 
 

@@ -77,6 +77,7 @@ class Server:
         if params is None:
             params = init_model(jax.random.PRNGKey(spec.train.seed), self.cfg)
         sv = spec.serve
+        mesh = spec.sharding.serve_mesh()
         common = dict(
             prefill_token_budget=sv.prefill_budget,
             quantize=sv.quantize,
@@ -84,8 +85,23 @@ class Server:
             chunked_prefill=sv.chunked_prefill,
             scheduler=sv.scheduler,
             shed=sv.shed,
+            mesh=mesh,
         )
-        if sv.speculative_rank is not None:
+        if sv.speculative_rank is not None and mesh is not None:
+            raise ValueError(
+                "speculative_rank and sharding.decode_mesh are mutually "
+                "exclusive: the rank-ladder engine drives its own "
+                "draft/verify executables outside the shard_map wrapping")
+        if sv.disaggregate:
+            from repro.serving.distributed import DisaggregatedEngine
+
+            self.engine: ServingEngine = DisaggregatedEngine(
+                self.cfg, params, sv.paged_config(),
+                kv_transfer=sv.kv_transfer, **common)
+            if drafter_params is not None:
+                raise ValueError("drafter_params given but "
+                                 "serve.speculative_rank is unset")
+        elif sv.speculative_rank is not None:
             from repro.serving.speculative import SpeculativeEngine
 
             # drafter_params=None derives the ladder by shrinking

@@ -200,6 +200,24 @@ class ShardingSpec(_Spec):
     axes (their product must equal the device count)."""
     data: Optional[int] = None
     model: Optional[int] = None
+    # decode-path tensor parallelism: the serve mesh is 1-D ('model',)
+    # over this many devices (sharding/partition.py:serve_mesh); None/1
+    # keeps single-device serving. Orthogonal to the training axes —
+    # serving never builds the 2-D training mesh.
+    decode_mesh: Optional[int] = None
+
+    def __post_init__(self):
+        if self.decode_mesh is not None and self.decode_mesh < 1:
+            raise ValueError(f"decode_mesh {self.decode_mesh} must be >= 1")
+
+    def serve_mesh(self):
+        """The tensor-parallel serve mesh, or None for single-device
+        serving (tp unset or 1)."""
+        if self.decode_mesh is None or self.decode_mesh == 1:
+            return None
+        from repro.sharding.partition import serve_mesh
+
+        return serve_mesh(self.decode_mesh)
 
     def mesh(self, cfg):
         import jax
@@ -278,6 +296,13 @@ class ServeSpec(_Spec):
     default_deadline: Optional[int] = None
     speculative_rank: Optional[str] = None
     draft_tokens: int = 4
+    # disaggregated serving: prompt prefill runs on a separate worker
+    # with its own page pool; finished pages ship to the decode pool
+    # through serving/distributed.py:KVTransfer. ``kv_transfer`` picks
+    # the wire format: "raw" (lossless page copy at pool dtype) or
+    # "int8" (symmetric per-channel quantization on the wire, opt-in).
+    disaggregate: bool = False
+    kv_transfer: str = "raw"
 
     def __post_init__(self):
         if self.mode not in ("paged", "static"):
@@ -303,6 +328,22 @@ class ServeSpec(_Spec):
                     "exclusive (an index page holds one ladder level's KV; "
                     "a speculative sequence needs every level's)")
             self.speculative_ladder()   # grammar errors at build time
+        if self.kv_transfer not in ("raw", "int8"):
+            raise ValueError(f"kv_transfer {self.kv_transfer!r}; "
+                             f"options raw|int8")
+        if self.disaggregate:
+            if self.mode != "paged":
+                raise ValueError("disaggregated prefill needs mode='paged'")
+            if self.prefix_cache:
+                raise ValueError(
+                    "disaggregate and prefix_cache are mutually exclusive "
+                    "(shared prefix pages live in the decode pool, which "
+                    "the prefill worker cannot see)")
+            if self.speculative_rank is not None:
+                raise ValueError(
+                    "disaggregate and speculative_rank are mutually "
+                    "exclusive (the speculative engine owns its own "
+                    "prefill/verify interleaving)")
 
     def speculative_ladder(self) -> list:
         """The parsed rank ladder (drafter first), or ``[]`` when
@@ -548,6 +589,11 @@ class BenchSpec(_Spec):
     schedulers: str = "fifo,slo"
     precisions: str = "fp32"
     ranks: str = ""
+    # serving-topology axis: "colocated" is the single-engine baseline,
+    # "disaggregated" runs the same workload through the prefill/decode
+    # worker split (serving/distributed.py) — arm-by-arm comparable
+    # because both emit identical tokens
+    serving_modes: str = "colocated"
 
     def __post_init__(self):
         if not self.name:
@@ -559,6 +605,10 @@ class BenchSpec(_Spec):
         for p in self.precision_arms():
             if p not in ("fp32", "int8"):
                 raise ValueError(f"precision {p!r}; options fp32|int8")
+        for m in self.serving_mode_arms():
+            if m not in ("colocated", "disaggregated"):
+                raise ValueError(f"serving mode {m!r}; options "
+                                 f"colocated|disaggregated")
         self.rank_arms()
 
     def overload_factors(self) -> list:
@@ -578,6 +628,12 @@ class BenchSpec(_Spec):
             return [int(r) for r in self.ranks.split(",") if r.strip()]
         except ValueError:
             raise ValueError(f"ranks {self.ranks!r}: want comma-separated ints")
+
+    def serving_mode_arms(self) -> list:
+        arms = [m.strip() for m in self.serving_modes.split(",") if m.strip()]
+        if not arms:
+            raise ValueError("serving_modes must name at least one arm")
+        return arms
 
     def replace(self, **overrides) -> "BenchSpec":
         return _composite_replace(self, overrides)

@@ -69,7 +69,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.api import ModelSpec, RunSpec, ServeSpec, Server
+from repro.api import ModelSpec, RunSpec, ServeSpec, ShardingSpec, Server
 from repro.models.model import (
     init_model,
     init_decode_state,
@@ -147,9 +147,18 @@ def run_stream(args, spec: RunSpec, params) -> None:
     print(f"streaming {len(trace)} requests, prompt lens "
           f"{sorted({r.prompt_len for r in trace})}, slots={pcfg.max_slots}, "
           f"pool={pcfg.num_pages}x{pcfg.page_size} tokens")
+    if server.engine.tp > 1:
+        print(f"tensor parallel: tp={server.engine.tp} over "
+              f"{server.engine.tp} devices (mesh axis 'model')")
     out = server.run(trace)
     server.engine.sched.check_invariants()
     st = server.stats()
+    if args.disaggregate:
+        print(f"disaggregated prefill: {int(st['kv_transfer_pages'])} pages "
+              f"shipped ({int(st['kv_transfer_bytes'])} bytes raw, "
+              f"{int(st['kv_transfer_wire_bytes'])} bytes on the "
+              f"{args.kv_transfer} wire), prefill pool peak "
+              f"{int(st['prefill_pool_peak_pages'])} pages")
     print(f"served {int(st['requests'])} requests: "
           f"{int(st['prefill_tokens'])} prefill + {int(st['generated_tokens'])} generated "
           f"tokens in {st['wall_s']:.2f}s ({st['tokens_per_s']:.1f} tok/s)")
@@ -315,6 +324,20 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--draft-tokens", type=int, default=4,
                     help="tokens the drafter proposes per engine step "
                          "(with --speculative-rank)")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel paged decode over this many "
+                         "devices (1-D serve mesh; GQA shards kv heads, MLA "
+                         "shards query heads over the replicated latent — "
+                         "sharding/partition.py; on CPU force devices with "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count)")
+    ap.add_argument("--disaggregate", action="store_true",
+                    help="split prefill onto a separate worker with its own "
+                         "page pool; finished pages ship to the decode pool "
+                         "(serving/distributed.py)")
+    ap.add_argument("--kv-transfer", choices=["raw", "int8"], default="raw",
+                    help="wire format for disaggregated KV shipment: raw "
+                         "(lossless page copy) or int8 (quantized on the "
+                         "wire, opt-in)")
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="prepend this many shared system-prompt tokens to "
                          "every request in the trace (the prefix-cache "
@@ -363,7 +386,10 @@ def build_spec(args: argparse.Namespace) -> RunSpec:
             gen=args.gen,
             speculative_rank=args.speculative_rank,
             draft_tokens=args.draft_tokens,
+            disaggregate=args.disaggregate,
+            kv_transfer=args.kv_transfer,
         ),
+        sharding=ShardingSpec(decode_mesh=args.tp if args.tp > 1 else None),
     )
 
 
@@ -376,6 +402,12 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
         raise SystemExit("--serve-rank needs --ckpt-dir")
     if args.speculative_rank is not None and not args.paged:
         raise SystemExit("--speculative-rank needs --paged --stream")
+    if args.disaggregate and not args.paged:
+        raise SystemExit("--disaggregate needs --paged --stream")
+    if args.tp > 1 and not args.paged:
+        raise SystemExit("--tp needs --paged --stream")
+    if args.tp < 1:
+        raise SystemExit(f"--tp {args.tp} must be >= 1")
 
     spec = build_spec(args)
     if args.dump_spec:

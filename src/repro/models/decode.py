@@ -349,26 +349,34 @@ def decode_step_lm(params: Params, tokens: jax.Array, state, cache_len: jax.Arra
 
 def decode_step_lm_paged(params: Params, tokens: jax.Array, state,
                          block_table: jax.Array, seq_lens: jax.Array,
-                         cfg: ModelConfig):
+                         cfg: ModelConfig, *, tp_axis=None, tp_size=1):
     """One-token step against paged attention pools with per-slot fill
     levels — mixed request lengths in one compiled step, the
     continuous-batching contract. block_table: (slots, n_pages) int32;
     seq_lens: (slots,) int32. Recurrent state paths are shared with the
-    static step (slot-indexed either way)."""
+    static step (slot-indexed either way).
+
+    ``tp_axis``/``tp_size`` run the attention heads tensor-parallel
+    when the step executes under ``shard_map`` over a serve mesh
+    (sharding/partition.py:serve_mesh): GQA KV pools arrive as per-shard
+    kv-head slices, MLA latent pools replicated; everything else
+    (params, tokens, block tables, logits) is replicated. Per-head math
+    is unchanged, so greedy outputs stay token-identical."""
     def attn_decode(p, h, cache):
         if cfg.attention == "mla":
             return attn.apply_mla_decode_paged(
-                p, h, cfg, cache=cache, block_table=block_table, seq_lens=seq_lens)
+                p, h, cfg, cache=cache, block_table=block_table, seq_lens=seq_lens,
+                tp_axis=tp_axis, tp_size=tp_size)
         return attn.apply_gqa_decode_paged(
             p, h, cfg, cache=cache, block_table=block_table, seq_lens=seq_lens,
-            use_pallas=cfg.use_pallas)
+            use_pallas=cfg.use_pallas, tp_axis=tp_axis, tp_size=tp_size)
 
     return _decode_step_body(params, tokens, state, cfg, attn_decode)
 
 
 def prefill_chunk_lm_paged(params: Params, tokens: jax.Array, state,
                            block_table: jax.Array, start: jax.Array,
-                           cfg: ModelConfig):
+                           cfg: ModelConfig, *, tp_axis=None, tp_size=1):
     """Chunked/offset prefill against the paged pools: tokens (1, c)
     occupy absolute positions [start, start+c) of one sequence whose
     pages are mapped in block_table (1, n_pages). Positions < start are
@@ -387,10 +395,11 @@ def prefill_chunk_lm_paged(params: Params, tokens: jax.Array, state,
     def attn_chunk(p, h, cache):
         if cfg.attention == "mla":
             return attn.apply_mla_prefill_paged(
-                p, h, cfg, cache=cache, block_table=block_table, start=start)
+                p, h, cfg, cache=cache, block_table=block_table, start=start,
+                tp_axis=tp_axis, tp_size=tp_size)
         return attn.apply_gqa_prefill_paged(
             p, h, cfg, cache=cache, block_table=block_table, start=start,
-            use_pallas=cfg.use_pallas)
+            use_pallas=cfg.use_pallas, tp_axis=tp_axis, tp_size=tp_size)
 
     return _decode_step_body(params, tokens, state, cfg, attn_chunk)
 

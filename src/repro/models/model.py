@@ -78,20 +78,24 @@ def init_paged_state(cfg: ModelConfig, pcfg):
     )
 
 
-def decode_step_paged(params, tokens, state, block_table, seq_lens, cfg: ModelConfig):
+def decode_step_paged(params, tokens, state, block_table, seq_lens, cfg: ModelConfig,
+                      *, tp_axis=None, tp_size=1):
     if cfg.family == "encdec":
         raise NotImplementedError("paged serving targets decoder-only families")
     return decode_mod.decode_step_lm_paged(params, tokens, state, block_table,
-                                           seq_lens, cfg)
+                                           seq_lens, cfg,
+                                           tp_axis=tp_axis, tp_size=tp_size)
 
 
-def prefill_chunk_paged(params, tokens, state, block_table, start, cfg: ModelConfig):
+def prefill_chunk_paged(params, tokens, state, block_table, start, cfg: ModelConfig,
+                        *, tp_axis=None, tp_size=1):
     """Offset/chunked prefill for one sequence against the paged pools
     (decode.prefill_chunk_lm_paged); attention-only families."""
     if cfg.family == "encdec":
         raise NotImplementedError("paged serving targets decoder-only families")
     return decode_mod.prefill_chunk_lm_paged(params, tokens, state, block_table,
-                                             start, cfg)
+                                             start, cfg,
+                                             tp_axis=tp_axis, tp_size=tp_size)
 
 
 def param_count(params) -> int:

@@ -26,6 +26,17 @@ from repro.nn.rotary import apply_rope, apply_mrope
 NEG_INF = -1e30
 
 
+def _tp_slice(a, tp_axis, n_local, axis):
+    """This shard's contiguous block of ``n_local`` entries along
+    ``axis`` under ``shard_map`` — block i of the mesh axis owns
+    entries [i*n_local, (i+1)*n_local). Head blocks are contiguous per
+    kv group (see the (kvh, rep) reshape in :func:`_sdpa`), so slicing
+    q and k/v by the same shard index keeps GQA grouping congruent
+    with the single-device layout."""
+    idx = jax.lax.axis_index(tp_axis)
+    return jax.lax.dynamic_slice_in_dim(a, idx * n_local, n_local, axis=axis)
+
+
 FLASH_THRESHOLD = 2048  # direct softmax below this sequence length
 # big chunks: few loop iterations => few HBM round-trips of the chunk
 # intermediates in the XLA fallback (a Pallas flash kernel keeps them in
@@ -316,7 +327,8 @@ def apply_gqa_decode(p, x, cfg, *, cache, cache_len, use_pallas=False):
     return apply_linear(p["wo"], o.reshape(b, s, -1), use_pallas=use_pallas), {"k": ck, "v": cv}
 
 
-def apply_gqa_prefill_paged(p, x, cfg, *, cache, block_table, start, use_pallas=False):
+def apply_gqa_prefill_paged(p, x, cfg, *, cache, block_table, start, use_pallas=False,
+                            tp_axis=None, tp_size=1):
     """Chunked prefill from a logical offset against a paged pool.
 
     x: (1, c, d) — one sequence's prompt tokens for absolute positions
@@ -327,21 +339,35 @@ def apply_gqa_prefill_paged(p, x, cfg, *, cache, block_table, start, use_pallas=
     the gathered logical view: positions < start are the already-cached
     (possibly shared) prefix, positions ≥ start+c stay behind the
     causal mask. Row-for-row this matches a full static prefill
-    restricted to the chunk's query positions."""
+    restricted to the chunk's query positions.
+
+    ``tp_axis`` runs the body tensor-parallel under ``shard_map``:
+    projections are computed from replicated weights, this shard keeps
+    its contiguous kv-head block (``cache`` is the pool *shard* with
+    kvh/tp_size heads), attention runs per-shard, and the head outputs
+    are all-gathered before the replicated wo — per-head math is
+    untouched, so outputs are bit-identical to single-device."""
     from repro.serving.paged_cache import paged_gather, paged_write_slice
 
     b, c, _ = x.shape
     positions = jnp.broadcast_to(start + jnp.arange(c, dtype=jnp.int32)[None], (b, c))
     q, k, v = _gqa_qkv(p, x, cfg, positions, use_pallas)
+    if tp_axis is not None:
+        q = _tp_slice(q, tp_axis, cfg.n_heads // tp_size, 2)
+        k = _tp_slice(k, tp_axis, cfg.n_kv_heads // tp_size, 2)
+        v = _tp_slice(v, tp_axis, cfg.n_kv_heads // tp_size, 2)
     pk = paged_write_slice(cache["k"], block_table[0], start, k[0])
     pv = paged_write_slice(cache["v"], block_table[0], start, v[0])
     ck = paged_gather(pk, block_table)
     cv = paged_gather(pv, block_table)
     o = _sdpa(q, ck.astype(q.dtype), cv.astype(q.dtype), causal=True, q_offset=start)
+    if tp_axis is not None:
+        o = jax.lax.all_gather(o, tp_axis, axis=2, tiled=True)
     return apply_linear(p["wo"], o.reshape(b, c, -1), use_pallas=use_pallas), {"k": pk, "v": pv}
 
 
-def apply_gqa_decode_paged(p, x, cfg, *, cache, block_table, seq_lens, use_pallas=False):
+def apply_gqa_decode_paged(p, x, cfg, *, cache, block_table, seq_lens, use_pallas=False,
+                           tp_axis=None, tp_size=1):
     """One-token step against a paged pool (serving/paged_cache.py).
 
     cache: {"k"/"v": (P+1, page, kvh, hd)} — this layer's shared pool;
@@ -353,7 +379,15 @@ def apply_gqa_decode_paged(p, x, cfg, *, cache, block_table, seq_lens, use_palla
     ``SCT_PAGED_KERNEL=0`` selects the jnp reference branch instead:
     gather into the logical view, then masked softmax — the oracle the
     differential suite (tests/test_kernels_paged.py) compares against;
-    both match apply_gqa_decode row-for-row."""
+    both match apply_gqa_decode row-for-row.
+
+    ``tp_axis`` (under ``shard_map``): ``cache`` is this shard's pool
+    slice holding kvh/tp_size kv heads; the matching contiguous q-head
+    block attends per-shard (the paged kernel runs unchanged on the
+    smaller head count) and head outputs are all-gathered before wo.
+    Per-head attention math is identical to single-device, so greedy
+    decode stays token-for-token identical at any tp_size that divides
+    n_kv_heads."""
     from repro.kernels.paged_decode import (
         paged_gqa_decode_pallas,
         paged_kernel_enabled,
@@ -361,15 +395,20 @@ def apply_gqa_decode_paged(p, x, cfg, *, cache, block_table, seq_lens, use_palla
     from repro.serving.paged_cache import paged_append, paged_gather
 
     b, s, _ = x.shape
-    kvh, hd = cfg.n_kv_heads, cfg.head_dim
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     positions = seq_lens[:, None].astype(jnp.int32)
     q, k, v = _gqa_qkv(p, x, cfg, positions, use_pallas)
+    if tp_axis is not None:
+        h, kvh = h // tp_size, kvh // tp_size
+        q = _tp_slice(q, tp_axis, h, 2)
+        k = _tp_slice(k, tp_axis, kvh, 2)
+        v = _tp_slice(v, tp_axis, kvh, 2)
     pk = paged_append(cache["k"], block_table, seq_lens, k[:, 0])
     pv = paged_append(cache["v"], block_table, seq_lens, v[:, 0])
     if paged_kernel_enabled():
-        qg = q[:, 0].reshape(b, kvh, cfg.n_heads // kvh, hd)
+        qg = q[:, 0].reshape(b, kvh, h // kvh, hd)
         og = paged_gqa_decode_pallas(qg, pk, pv, block_table, seq_lens)
-        o = og.reshape(b, s, cfg.n_heads, hd)
+        o = og.reshape(b, s, h, hd)
     else:
         ck = paged_gather(pk, block_table)
         cv = paged_gather(pv, block_table)
@@ -380,6 +419,8 @@ def apply_gqa_decode_paged(p, x, cfg, *, cache, block_table, seq_lens, use_palla
         o = _sdpa(q.astype(jnp.float32), ck.astype(jnp.float32),
                   cv.astype(jnp.float32), causal=False,
                   kv_len_mask=valid).astype(q.dtype)
+    if tp_axis is not None:
+        o = jax.lax.all_gather(o, tp_axis, axis=2, tiled=True)
     return apply_linear(p["wo"], o.reshape(b, s, -1), use_pallas=use_pallas), {"k": pk, "v": pv}
 
 
@@ -474,7 +515,7 @@ def _split_wukv(p, cfg):
 
 
 def _mla_absorbed_attend(p, x, cfg, q_nope, q_rope, cckv, ckr, valid, *,
-                         precise=False):
+                         precise=False, tp_axis=None, tp_size=1):
     """Shared absorbed-decode attention: scores and values computed
     directly against the compressed latent view cckv (b, S, kv_lora) /
     ckr (b, S, rope_d) under a validity mask — no full K/V is ever
@@ -484,10 +525,22 @@ def _mla_absorbed_attend(p, x, cfg, q_nope, q_rope, cckv, ckr, valid, *,
     case). ``precise`` runs every einsum in fp32 with a single rounding
     back to x.dtype before wo — the decode paths use it so this oracle
     and the paged flash-decode kernel (fp32 scratch) agree to fp32
-    epsilon and bf16 greedy decode stays token-identical."""
+    epsilon and bf16 greedy decode stays token-identical.
+
+    ``tp_axis`` (under ``shard_map``) shards the *query heads*: the
+    latent view is tiny and stays replicated (the MLA memory win makes
+    latent replication the cheap placement), each shard attends its
+    contiguous head block with the matching W_uk/W_uv slices, and head
+    outputs are all-gathered before wo. Per-head math is unchanged."""
     b, s, _ = x.shape
     h, nope, rope_d, vd = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
     wuk, wuv = _split_wukv(p, cfg)
+    if tp_axis is not None:
+        h = h // tp_size
+        q_nope = _tp_slice(q_nope, tp_axis, h, 2)
+        q_rope = _tp_slice(q_rope, tp_axis, h, 2)
+        wuk = _tp_slice(wuk, tp_axis, h, 1)
+        wuv = _tp_slice(wuv, tp_axis, h, 1)
     ct = jnp.float32 if precise else x.dtype
     # absorb W_uk into q: q_lat (b,s,h,kv_lora)
     q_lat = jnp.einsum("bshn,lhn->bshl", q_nope.astype(ct), wuk.astype(ct))
@@ -500,7 +553,9 @@ def _mla_absorbed_attend(p, x, cfg, q_nope, q_rope, cckv, ckr, valid, *,
     probs = jax.nn.softmax(scores, axis=-1).astype(ct)
     o_lat = jnp.einsum("bhsS,bSl->bshl", probs, cckv.astype(ct))   # (b,s,h,kv_lora)
     o = jnp.einsum("bshl,lhv->bshv", o_lat, wuv.astype(ct))        # (b,s,h,vd)
-    return apply_linear(p["wo"], o.astype(x.dtype).reshape(b, s, h * vd))
+    if tp_axis is not None:
+        o = jax.lax.all_gather(o, tp_axis, axis=2, tiled=True)
+    return apply_linear(p["wo"], o.astype(x.dtype).reshape(b, s, cfg.n_heads * vd))
 
 
 def apply_mla_decode(p, x, cfg, *, cache, cache_len):
@@ -519,13 +574,18 @@ def apply_mla_decode(p, x, cfg, *, cache, cache_len):
     return out, {"ckv": cckv, "krope": ckr}
 
 
-def apply_mla_prefill_paged(p, x, cfg, *, cache, block_table, start):
+def apply_mla_prefill_paged(p, x, cfg, *, cache, block_table, start,
+                            tp_axis=None, tp_size=1):
     """Chunked prefill from a logical offset against paged latent
     pools — the MLA twin of :func:`apply_gqa_prefill_paged`. The
     chunk's compressed latent/rope-key is scattered into the sequence's
     pages, then the absorbed attend runs over the gathered view under a
     per-query causal mask at absolute positions (cached prefix latents
-    are already roped, so nothing is recomputed for shared pages)."""
+    are already roped, so nothing is recomputed for shared pages).
+
+    ``tp_axis`` shards query heads per-shard inside the absorbed
+    attend; the latent pools are replicated (every shard scatters the
+    same latent chunk into its copy, so the pools stay consistent)."""
     from repro.serving.paged_cache import paged_gather, paged_write_slice
 
     b, c, _ = x.shape
@@ -539,11 +599,13 @@ def apply_mla_prefill_paged(p, x, cfg, *, cache, block_table, start):
     ckr = paged_gather(pkr, block_table)
     S = cckv.shape[1]
     valid = jnp.arange(S)[None, None, :] <= positions[:, :, None]      # (b, c, S)
-    out = _mla_absorbed_attend(p, x, cfg, q_nope, q_rope, cckv, ckr, valid)
+    out = _mla_absorbed_attend(p, x, cfg, q_nope, q_rope, cckv, ckr, valid,
+                               tp_axis=tp_axis, tp_size=tp_size)
     return out, {"ckv": pckv, "krope": pkr}
 
 
-def apply_mla_decode_paged(p, x, cfg, *, cache, block_table, seq_lens):
+def apply_mla_decode_paged(p, x, cfg, *, cache, block_table, seq_lens,
+                           tp_axis=None, tp_size=1):
     """Absorbed single-token decode against paged latent pools
     cache = {"ckv"/"krope": (P+1, page, ...)}; per-slot seq_lens.
 
@@ -552,7 +614,13 @@ def apply_mla_decode_paged(p, x, cfg, *, cache, block_table, seq_lens):
     the kernel walks the block table over the latent pools and returns
     the latent context o_lat, W_uv/W_o apply outside — full K/V is never
     expanded and no gathered latent copy exists. ``SCT_PAGED_KERNEL=0``
-    selects the jnp reference branch (gather + _mla_absorbed_attend)."""
+    selects the jnp reference branch (gather + _mla_absorbed_attend).
+
+    ``tp_axis`` (under ``shard_map``) shards query heads; the latent
+    pools are replicated (each shard appends the identical new latent
+    to its copy). The paged kernel runs per-shard on its head block and
+    head outputs are all-gathered before wo — greedy decode stays
+    token-identical at any tp_size dividing n_heads."""
     from repro.kernels.paged_decode import (
         paged_kernel_enabled,
         paged_mla_decode_pallas,
@@ -570,23 +638,34 @@ def apply_mla_decode_paged(p, x, cfg, *, cache, block_table, seq_lens):
         h, nope, rope_d, vd = (cfg.n_heads, cfg.qk_nope_dim,
                                cfg.qk_rope_dim, cfg.v_head_dim)
         wuk, wuv = _split_wukv(p, cfg)
+        qn, qr = q_nope, q_rope
+        if tp_axis is not None:
+            h = h // tp_size
+            qn = _tp_slice(qn, tp_axis, h, 2)
+            qr = _tp_slice(qr, tp_axis, h, 2)
+            wuk = _tp_slice(wuk, tp_axis, h, 1)
+            wuv = _tp_slice(wuv, tp_axis, h, 1)
         # fp32 absorb/up-project around the fp32-scratch kernel, matching
         # _mla_absorbed_attend(precise=True) — one rounding before wo.
-        q_lat = jnp.einsum("bshn,lhn->bshl", q_nope.astype(jnp.float32),
+        q_lat = jnp.einsum("bshn,lhn->bshl", qn.astype(jnp.float32),
                            wuk.astype(jnp.float32))[:, 0]       # (b, h, L)
         o_lat = paged_mla_decode_pallas(
-            q_lat, q_rope[:, 0].astype(jnp.float32), pckv, pkr,
+            q_lat, qr[:, 0].astype(jnp.float32), pckv, pkr,
             block_table, seq_lens,
             scale=1.0 / float(nope + rope_d) ** 0.5)
         o = jnp.einsum("bhl,lhv->bhv", o_lat, wuv.astype(jnp.float32))
-        out = apply_linear(p["wo"], o.astype(x.dtype).reshape(b, s, h * vd))
+        if tp_axis is not None:
+            o = jax.lax.all_gather(o, tp_axis, axis=1, tiled=True)
+        out = apply_linear(p["wo"],
+                           o.astype(x.dtype).reshape(b, s, cfg.n_heads * vd))
     else:
         cckv = paged_gather(pckv, block_table)
         ckr = paged_gather(pkr, block_table)
         S = cckv.shape[1]
         valid = jnp.arange(S)[None, :] <= seq_lens[:, None]
         out = _mla_absorbed_attend(p, x, cfg, q_nope, q_rope, cckv, ckr,
-                                   valid, precise=True)
+                                   valid, precise=True,
+                                   tp_axis=tp_axis, tp_size=tp_size)
     return out, {"ckv": pckv, "krope": pkr}
 
 

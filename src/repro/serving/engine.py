@@ -102,7 +102,8 @@ class ServingEngine:
                  prefix_cache: bool = False,
                  chunked_prefill: bool = False,
                  scheduler: str = "fifo",
-                 shed: bool = True):
+                 shed: bool = True,
+                 mesh=None):
         if cfg.family == "encdec":
             raise NotImplementedError("paged serving targets decoder-only families")
         self.cfg = cfg
@@ -141,14 +142,62 @@ class ServingEngine:
         self.scheduler = scheduler
         self._next_input = np.zeros((pcfg.max_slots,), dtype=np.int32)
 
-        self._decode_fn = jax.jit(
-            lambda p, t, st, bt, sl: decode_step_paged(p, t, st, bt, sl, cfg),
-            donate_argnums=(2,),
-        )
-        self._chunk_fn = jax.jit(
-            lambda p, t, st, bt, s0: prefill_chunk_paged(p, t, st, bt, s0, cfg),
-            donate_argnums=(2,),
-        )
+        # tensor-parallel serving: under a serve mesh the decode and
+        # chunk-prefill steps run inside shard_map — GQA KV pools live
+        # as per-shard kv-head slices, MLA latent pools and everything
+        # else (params: tiny spectral factors — replication is the
+        # cheap placement the paper's compression buys) replicate, and
+        # the per-shard attention all-gathers head outputs before wo,
+        # so greedy outputs stay token-identical to single-device.
+        self.mesh = mesh
+        self.tp = 1
+        if mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+
+            from repro.sharding.partition import (
+                TP_AXIS,
+                named_shardings,
+                paged_state_pspecs,
+                serve_tp_valid,
+                shard_map_compat,
+            )
+
+            self.tp = int(mesh.shape[TP_AXIS])
+            if not self._offset_prefill:
+                raise NotImplementedError(
+                    "tensor-parallel paged decode needs pure paged-attention "
+                    f"state; family {cfg.family!r} carries recurrent state")
+            if not serve_tp_valid(cfg, self.tp):
+                dim = "n_heads" if cfg.attention == "mla" else "n_kv_heads"
+                raise ValueError(
+                    f"tp={self.tp} does not divide this config's {dim}")
+        if mesh is not None and self.tp > 1:
+            tp = self.tp
+            state_specs = paged_state_pspecs(cfg, self.state, tp)
+            self._decode_fn = jax.jit(shard_map_compat(
+                lambda p, t, st, bt, sl: decode_step_paged(
+                    p, t, st, bt, sl, cfg, tp_axis=TP_AXIS, tp_size=tp),
+                mesh, in_specs=(P(), P(), state_specs, P(), P()),
+                out_specs=(P(), state_specs)), donate_argnums=(2,))
+            self._chunk_fn = jax.jit(shard_map_compat(
+                lambda p, t, st, bt, s0: prefill_chunk_paged(
+                    p, t, st, bt, s0, cfg, tp_axis=TP_AXIS, tp_size=tp),
+                mesh, in_specs=(P(), P(), state_specs, P(), P()),
+                out_specs=(P(), state_specs)), donate_argnums=(2,))
+            self.state = jax.device_put(self.state,
+                                        named_shardings(state_specs, mesh))
+            rep = NamedSharding(mesh, P())
+            self.params = jax.device_put(
+                self.params, jax.tree.map(lambda _: rep, self.params))
+        else:
+            self._decode_fn = jax.jit(
+                lambda p, t, st, bt, sl: decode_step_paged(p, t, st, bt, sl, cfg),
+                donate_argnums=(2,),
+            )
+            self._chunk_fn = jax.jit(
+                lambda p, t, st, bt, s0: prefill_chunk_paged(p, t, st, bt, s0, cfg),
+                donate_argnums=(2,),
+            )
         self._prefill_fn = jax.jit(lambda p, t, st: prefill(p, t, cfg, st))
         self._write_pages = jax.jit(
             lambda pool, ids, v: paged_write_pages(pool, ids, jnp.squeeze(v, 1), n_stack=1),

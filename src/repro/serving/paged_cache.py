@@ -140,6 +140,22 @@ def paged_write_pages(pool: jax.Array, page_ids: jax.Array, vals: jax.Array,
     return pool.at[idx].set(vals)
 
 
+def paged_copy_pages(dst_pool: jax.Array, dst_ids: jax.Array,
+                     src_pool: jax.Array, src_ids: jax.Array,
+                     *, n_stack: int = 0) -> jax.Array:
+    """Copy whole pages between two pools: dst[dst_ids[i]] =
+    src[src_ids[i]] across the ``n_stack`` leading stacked (layer) axes
+    — the receive-side seam of the prefill->decode KV transfer
+    (serving/distributed.py). Page-granular like
+    :func:`paged_write_pages`: the unfilled tail of the last prompt
+    page copies too, but those positions sit behind the attention
+    validity mask until a decode append overwrites them, exactly as
+    after an in-place prefill."""
+    idx_src = (slice(None),) * n_stack + (src_ids,)
+    idx_dst = (slice(None),) * n_stack + (dst_ids,)
+    return dst_pool.at[idx_dst].set(src_pool[idx_src].astype(dst_pool.dtype))
+
+
 # ------------------------------------------------- recurrent slot state --
 
 def slot_write(state_tree, slot_axes, slot: int, values):

@@ -1,11 +1,15 @@
-"""Whole-state and input partition specs per (config, shape, mesh)."""
+"""Whole-state and input partition specs per (config, shape, mesh) —
+for the training step and, since the distributed-serving refactor, the
+paged decode path (serve meshes, pool placement, shard_map wrapping)."""
 from __future__ import annotations
 
+import inspect
 from typing import Any
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.config.model_config import ModelConfig
 from repro.config.shapes import ShapeSpec
@@ -130,3 +134,76 @@ def named_shardings(pspecs: Any, mesh) -> Any:
         pspecs,
         is_leaf=lambda x: isinstance(x, P),
     )
+
+
+# ======================================================================
+# Decode-path placement (distributed serving)
+# ======================================================================
+
+# the mesh axis tensor-parallel serving shards over — the same axis
+# name the training rules use, so activation constraints compose
+TP_AXIS = "model"
+
+
+def serve_mesh(tp: int) -> Mesh:
+    """1-D ``('model',)`` mesh over the first ``tp`` local devices —
+    the tensor-parallel serve mesh. Raises when the host doesn't expose
+    enough devices (tests force them with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count``)."""
+    devices = jax.devices()
+    if tp > len(devices):
+        raise ValueError(
+            f"serve mesh needs {tp} devices, host has {len(devices)} "
+            f"(force more on CPU with "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={tp})")
+    return Mesh(np.array(devices[:tp]), (TP_AXIS,))
+
+
+def serve_tp_valid(cfg: ModelConfig, tp: int) -> bool:
+    """Whether ``tp`` ways of head parallelism divide this config's
+    attention: GQA shards the kv-head axis (each shard keeps whole
+    query groups — see the (kvh, rep) grouping in nn/attention.py), MLA
+    shards query heads over the replicated latent."""
+    if cfg.attention == "mla":
+        return cfg.n_heads % tp == 0
+    return cfg.n_kv_heads % tp == 0
+
+
+def paged_state_pspecs(cfg: ModelConfig, state_like: Any, n_model: int) -> Any:
+    """Placement of the paged decode state over a serve mesh: GQA KV
+    pool leaves (L, P+1, page, kvh, hd) shard the kv-head axis over
+    'model' when it divides; MLA latent pools (no head axis — the
+    latent is tiny, replication is the cheap placement) and recurrent
+    slot state replicate. Used both as device_put placement and as the
+    shard_map in/out specs for the decode and chunk-prefill steps."""
+    def spec_for(path, leaf):
+        tail = path.split("/")[-1]
+        shp = getattr(leaf, "shape", ())
+        if tail in ("k", "v") and len(shp) == 5 and shp[3] % n_model == 0:
+            return P(None, None, None, TP_AXIS, None)
+        return P()
+
+    def walk(tree, path=""):
+        if isinstance(tree, dict):
+            return {k: walk(v, f"{path}/{k}" if path else k)
+                    for k, v in tree.items()}
+        return spec_for(path, tree)
+
+    return walk(state_like)
+
+
+def shard_map_compat(f, mesh, in_specs, out_specs):
+    """``shard_map`` across jax versions: the replication-check kwarg
+    was renamed check_rep -> check_vma; disable it either way (the
+    decode step's logits/pools are replicated by construction — every
+    shard computes them from all-gathered head outputs)."""
+    shard_map = getattr(jax, "shard_map", None)
+    if shard_map is None:  # pragma: no cover - older jax
+        from jax.experimental.shard_map import shard_map
+    kw = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    sm_params = inspect.signature(shard_map).parameters
+    if "check_vma" in sm_params:
+        kw["check_vma"] = False
+    elif "check_rep" in sm_params:
+        kw["check_rep"] = False
+    return shard_map(f, **kw)

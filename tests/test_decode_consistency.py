@@ -112,6 +112,66 @@ def test_prefix_chunked_greedy_matches_static(arch, shares, key):
         np.testing.assert_array_equal(out[r.rid], ref, err_msg=f"{arch} rid {r.rid}")
 
 
+@pytest.mark.xfail(
+    strict=False,
+    reason="known bf16 divergence: absorbed-MLA chunked prefill folds wuk "
+           "into the query before the latent dot product, so its bf16 "
+           "rounding differs from the static oracle's naive prefill; "
+           "near-argmax ties occasionally flip a token (docs/serving.md). "
+           "fp32 is exact — test_prefix_chunked_greedy_matches_static.")
+def test_bf16_mla_chunked_prefill_token_exact(key):
+    """Pin the bf16 absorbed-MLA prefill divergence instead of hiding it:
+    at the family's native bfloat16, the chunked paged engine is NOT
+    guaranteed token-identical to the static greedy oracle. When this
+    starts passing consistently the xfail should be dropped."""
+    outs, refs = _bf16_mla_engine_vs_oracle(key)
+    for rid in outs:
+        np.testing.assert_array_equal(outs[rid], refs[rid])
+
+
+def test_bf16_mla_chunked_prefill_agreement_floor(key):
+    """The companion tolerance bound: bf16 disagreement is a rare tie
+    flip (after which the greedy trajectories legitimately separate),
+    not wholesale divergence. Two invariants a real chunk-path
+    regression would break: every request's first generated token (the
+    prefill tail argmax) matches the oracle, and most requests match
+    token-for-token end to end."""
+    outs, refs = _bf16_mla_engine_vs_oracle(key)
+    for r in outs:
+        assert outs[r][0] == refs[r][0], \
+            f"rid {r}: first token {outs[r][0]} != oracle {refs[r][0]}"
+    exact = sum(int(np.array_equal(outs[r], refs[r])) for r in outs)
+    assert exact >= len(outs) / 2, \
+        f"only {exact}/{len(outs)} requests token-exact at bf16"
+
+
+def _bf16_mla_engine_vs_oracle(key):
+    from repro.launch.serve import static_greedy_reference
+    from repro.serving import PagedCacheConfig, Request
+    from repro.serving.engine import ServingEngine
+
+    cfg = get_config("deepseek-v3-671b", reduced=True).replace(
+        capacity_factor=8.0)   # native bfloat16 kept
+    assert cfg.dtype == "bfloat16"
+    params = init_model(key, cfg)
+    # the serve CLI's default trace geometry — the workload the
+    # divergence was first observed on (request 2, a 21-token prompt)
+    pcfg = PagedCacheConfig(page_size=16, num_pages=64, max_slots=4,
+                            max_pages_per_seq=8)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab, size=(t,)).astype(np.int32),
+                    max_new_tokens=g, arrival=0)
+            for i, (t, g) in enumerate([(9, 4), (16, 8), (21, 12), (13, 4)])]
+    engine = ServingEngine(cfg, params, pcfg, prefill_token_budget=64,
+                           chunked_prefill=True)
+    outs = engine.run(reqs)
+    refs = {r.rid: static_greedy_reference(cfg, params, r.prompt,
+                                           r.max_new_tokens, pcfg.max_seq)
+            for r in reqs}
+    return outs, refs
+
+
 def test_whisper_encdec_decode(key):
     cfg = get_config("whisper-medium", reduced=True).replace(dtype="float32")
     from repro.models.encdec import encode

@@ -1,0 +1,391 @@
+"""Distributed serving: tensor-parallel paged decode + disaggregated
+prefill/decode workers (serving/distributed.py, sharding/partition.py's
+decode-path placement).
+
+Host-level tests cover the seams directly: spec validation, the
+KVTransfer page shipment (raw = bit-exact, int8 = bounded error +
+smaller wire), placement specs, and colocated-vs-disaggregated token
+identity on one device. The multi-device legs run in subprocesses with
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` (set before jax
+imports, same pattern as test_sharding.py) and pin the acceptance
+criterion: TP paged decode, disaggregated prefill, and their
+composition each emit token-for-token the single-process static greedy
+oracle's output, for a GQA and an MLA family.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.config import get_config
+from repro.models.model import init_model, init_paged_state
+from repro.serving import PagedCacheConfig, Request
+from repro.serving.distributed import DisaggregatedEngine, KVTransfer, PrefillWorker
+from repro.serving.engine import ServingEngine
+from repro.sharding.partition import paged_state_pspecs, serve_tp_valid
+
+
+# ---------------------------------------------------------------- specs --
+
+def test_serve_spec_disaggregate_validation():
+    from repro.api import ServeSpec, ShardingSpec
+
+    ServeSpec(disaggregate=True)                     # valid baseline
+    ServeSpec(disaggregate=True, kv_transfer="int8")
+    with pytest.raises(ValueError, match="kv_transfer"):
+        ServeSpec(kv_transfer="fp4")
+    with pytest.raises(ValueError, match="prefix_cache"):
+        ServeSpec(disaggregate=True, prefix_cache=True)
+    with pytest.raises(ValueError, match="speculative"):
+        ServeSpec(disaggregate=True, speculative_rank="8")
+    with pytest.raises(ValueError, match="paged"):
+        ServeSpec(disaggregate=True, mode="static")
+    with pytest.raises(ValueError, match="decode_mesh"):
+        ShardingSpec(decode_mesh=0)
+    assert ShardingSpec().serve_mesh() is None
+    assert ShardingSpec(decode_mesh=1).serve_mesh() is None
+
+
+def test_bench_spec_serving_modes_axis():
+    from repro.api import BenchSpec
+
+    spec = BenchSpec(serving_modes="colocated,disaggregated")
+    assert spec.serving_mode_arms() == ["colocated", "disaggregated"]
+    with pytest.raises(ValueError, match="serving mode"):
+        BenchSpec(serving_modes="remote")
+
+
+def test_serve_cli_flags_reach_spec():
+    from repro.launch.serve import build_parser, build_spec
+
+    args = build_parser().parse_args(
+        ["--paged", "--stream", "--disaggregate", "--kv-transfer", "int8",
+         "--tp", "2"])
+    spec = build_spec(args)
+    assert spec.serve.disaggregate and spec.serve.kv_transfer == "int8"
+    assert spec.sharding.decode_mesh == 2
+    # round-trips: the embedded-spec path serves the same configuration
+    from repro.api import RunSpec
+    assert RunSpec.from_json(spec.to_json()) == spec
+
+
+# ------------------------------------------------------------ placement --
+
+def test_serve_tp_divisibility():
+    gqa = get_config("llama3.2-1b", reduced=True)      # n_kv_heads=2
+    mla = get_config("deepseek-v3-671b", reduced=True)  # n_heads=4
+    assert serve_tp_valid(gqa, 2) and not serve_tp_valid(gqa, 4)
+    assert serve_tp_valid(mla, 2) and serve_tp_valid(mla, 4)
+    assert not serve_tp_valid(mla, 3)
+
+
+def test_paged_state_pspecs_placement():
+    pcfg = PagedCacheConfig(page_size=4, num_pages=8, max_slots=2,
+                            max_pages_per_seq=4)
+    gqa = get_config("llama3.2-1b", reduced=True)
+    state = jax.eval_shape(lambda: init_paged_state(gqa, pcfg))
+    specs = paged_state_pspecs(gqa, state, 2)
+    flat_specs = {}
+
+    def walk(tree, path=""):
+        if isinstance(tree, dict):
+            for k, v in tree.items():
+                walk(v, f"{path}/{k}" if path else k)
+        else:
+            flat_specs[path] = tree
+    walk(specs)
+    kv = {p: s for p, s in flat_specs.items()
+          if p.split("/")[-1] in ("k", "v")}
+    assert kv, "no GQA KV pool leaves found"
+    assert all(s == P(None, None, None, "model", None) for s in kv.values())
+    mla = get_config("deepseek-v3-671b", reduced=True)
+    state_m = jax.eval_shape(lambda: init_paged_state(mla, pcfg))
+    flat_specs.clear()
+    walk(paged_state_pspecs(mla, state_m, 2))
+    # MLA latent pools have no head axis -> everything replicates
+    assert all(s == P() for s in flat_specs.values())
+
+
+def test_tp_engine_rejects_bad_geometry():
+    from repro.sharding.partition import serve_mesh
+
+    cfg = get_config("llama3.2-1b", reduced=True).replace(dtype="float32")
+    with pytest.raises(ValueError, match="devices"):
+        serve_mesh(4096)
+    # tp=1 mesh path must behave exactly like no mesh
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    pcfg = PagedCacheConfig(page_size=4, num_pages=16, max_slots=2,
+                            max_pages_per_seq=4)
+    eng = ServingEngine(cfg, params, pcfg, mesh=serve_mesh(1))
+    assert eng.tp == 1
+
+
+# ----------------------------------------------------------- kv transfer --
+
+def _toy_pools(key, n_pages=6, page=4, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    mk = lambda k: {"k": jax.random.normal(k, (2, n_pages + 1, page, 2, 3),
+                                           dtype=dtype),
+                    "v": jax.random.normal(jax.random.fold_in(k, 1),
+                                           (2, n_pages + 1, page, 2, 3),
+                                           dtype=dtype)}
+    return mk(k1), mk(k2)
+
+
+def test_kv_transfer_raw_is_bit_exact(key):
+    src, dst = _toy_pools(key)
+    t = KVTransfer("raw")
+    src_ids = jnp.asarray([1, 3], dtype=jnp.int32)
+    dst_ids = jnp.asarray([4, 0], dtype=jnp.int32)
+    # dst is donated into the ship; snapshot what must survive first
+    untouched = {n: np.asarray(dst[n][:, 2]) for n in ("k", "v")}
+    out = t.ship(dst, dst_ids, src, src_ids)
+    for leaf_name in ("k", "v"):
+        np.testing.assert_array_equal(
+            np.asarray(out[leaf_name][:, [4, 0]]),
+            np.asarray(src[leaf_name][:, [1, 3]]))
+        # untouched pages keep their old contents
+        np.testing.assert_array_equal(np.asarray(out[leaf_name][:, 2]),
+                                      untouched[leaf_name])
+    # ledger: 2 pages, raw == wire for the lossless mode
+    per_page = 2 * 4 * 2 * 3 * 4        # L * page * channels * itemsize
+    assert t.pages_shipped == 2
+    assert t.bytes_raw == t.bytes_wire == 2 * 2 * per_page  # k and v
+
+
+def test_kv_transfer_int8_bounded_and_smaller(key):
+    src, dst = _toy_pools(key)
+    t = KVTransfer("int8")
+    src_ids = jnp.asarray([0, 2, 5], dtype=jnp.int32)
+    dst_ids = jnp.asarray([1, 3, 5], dtype=jnp.int32)
+    out = t.ship(dst, dst_ids, src, src_ids)
+    got = np.asarray(out["k"][:, [1, 3, 5]], np.float32)
+    want = np.asarray(src["k"][:, [0, 2, 5]], np.float32)
+    # symmetric per-channel int8: error bounded by scale/2 = amax/254
+    amax = np.max(np.abs(want), axis=2, keepdims=True)
+    assert np.all(np.abs(got - want) <= amax / 254.0 + 1e-7)
+    assert t.bytes_wire < t.bytes_raw
+    with pytest.raises(ValueError, match="kv transfer"):
+        KVTransfer("fp4")
+
+
+def test_prefill_worker_releases_pages(key):
+    cfg = get_config("llama3.2-1b", reduced=True).replace(dtype="float32")
+    params = init_model(key, cfg)
+    pcfg = PagedCacheConfig(page_size=4, num_pages=16, max_slots=2,
+                            max_pages_per_seq=4)
+    worker = PrefillWorker(cfg, params, pcfg)
+
+    class _Seq:   # the worker only reads request + prefill_pos
+        def __init__(self, rid, prompt):
+            self.request = Request(rid=rid, prompt=prompt, max_new_tokens=1)
+            self.prefill_pos = 0
+
+    prompt = np.arange(6, dtype=np.int32) % cfg.vocab
+    seq = _Seq(0, prompt)
+    worker.begin(seq)
+    worker.begin(seq)                       # idempotent
+    assert worker.pool.allocated_count == pcfg.pages_for(6) == 2
+    logits = worker.run_chunk(seq, 6)
+    assert seq.prefill_pos == 6 and logits.shape[1] == 6
+    pages = worker.finish(0)
+    worker.release(pages)
+    assert worker.pool.allocated_count == 0
+    # abort of an unknown rid is a no-op; of a live one frees its pages
+    worker.abort(0)
+    seq2 = _Seq(1, prompt)
+    worker.begin(seq2)
+    worker.abort(1)
+    assert worker.pool.allocated_count == 0
+
+
+# ----------------------------------------- disaggregated token identity --
+
+def _identity_trace(cfg, pcfg, n=3):
+    rng = np.random.default_rng(0)
+    lens_gens = [(7, 4, 0), (11, 3, 1), (5, 5, 2)][:n]
+    return [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab, size=(t,)).astype(np.int32),
+                    max_new_tokens=g, arrival=a)
+            for i, (t, g, a) in enumerate(lens_gens)]
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "deepseek-v3-671b"])
+def test_disaggregated_matches_colocated_and_oracle(arch, key):
+    from repro.launch.serve import static_greedy_reference
+
+    cfg = get_config(arch, reduced=True).replace(dtype="float32",
+                                                 capacity_factor=8.0)
+    params = init_model(key, cfg)
+    pcfg = PagedCacheConfig(page_size=4, num_pages=32, max_slots=2,
+                            max_pages_per_seq=6)
+    reqs = _identity_trace(cfg, pcfg)
+    eng = DisaggregatedEngine(cfg, params, pcfg, chunked_prefill=True,
+                              prefill_token_budget=6)
+    out = eng.run(reqs)
+    eng.sched.check_invariants()
+    for r in reqs:
+        ref = static_greedy_reference(cfg, params, r.prompt, r.max_new_tokens,
+                                      pcfg.max_seq)
+        np.testing.assert_array_equal(out[r.rid], ref,
+                                      err_msg=f"{arch} rid {r.rid}")
+    st = eng.stats()
+    assert st["kv_transfer_pages"] > 0
+    assert st["kv_transfer_bytes"] == st["kv_transfer_wire_bytes"]  # raw
+    assert st["prefill_pool_peak_pages"] > 0
+    # every worker page went back after its ship
+    assert eng.worker.pool.allocated_count == 0
+
+
+def test_disaggregated_int8_wire_accounting(key):
+    """int8 shipment is opt-in and lossy — identity is NOT asserted;
+    the ledger must show the 8x-ish wire shrink and the pools must stay
+    coherent (invariants + full drain)."""
+    cfg = get_config("llama3.2-1b", reduced=True).replace(dtype="float32")
+    params = init_model(key, cfg)
+    # page_size 8: the fp32 per-page scales amortize to under the pool
+    # dtype's width (at page_size 4 on a bf16 pool they exactly cancel)
+    pcfg = PagedCacheConfig(page_size=8, num_pages=32, max_slots=2,
+                            max_pages_per_seq=6)
+    reqs = _identity_trace(cfg, pcfg)
+    eng = DisaggregatedEngine(cfg, params, pcfg, kv_transfer="int8")
+    out = eng.run(reqs)
+    eng.sched.check_invariants()
+    assert set(out) == {r.rid for r in reqs}
+    st = eng.stats()
+    assert 0 < st["kv_transfer_wire_bytes"] < st["kv_transfer_bytes"]
+    assert eng.worker.pool.allocated_count == 0
+
+
+def test_disaggregated_rejects_incompatible_modes(key):
+    cfg = get_config("llama3.2-1b", reduced=True).replace(dtype="float32")
+    params = init_model(key, cfg)
+    pcfg = PagedCacheConfig(page_size=4, num_pages=16, max_slots=2,
+                            max_pages_per_seq=4)
+    with pytest.raises(ValueError, match="prefix_cache"):
+        DisaggregatedEngine(cfg, params, pcfg, prefix_cache=True)
+    rec = get_config("jamba-v0.1-52b", reduced=True).replace(dtype="float32")
+    with pytest.raises(NotImplementedError, match="recurrent"):
+        DisaggregatedEngine(rec, init_model(key, rec), pcfg)
+    with pytest.raises(ValueError, match="page_size"):
+        DisaggregatedEngine(cfg, params, pcfg,
+                            prefill_pcfg=PagedCacheConfig(
+                                page_size=8, num_pages=16, max_slots=2,
+                                max_pages_per_seq=4))
+
+
+def test_disaggregated_eviction_reclaims_worker_pages(key):
+    """A request evicted mid-prefill (deadline) must hand its worker
+    pages back — the abort seam in _drain."""
+    cfg = get_config("llama3.2-1b", reduced=True).replace(dtype="float32")
+    params = init_model(key, cfg)
+    pcfg = PagedCacheConfig(page_size=4, num_pages=32, max_slots=2,
+                            max_pages_per_seq=8)
+    rng = np.random.default_rng(1)
+    # a long prompt chunked at 2 tokens/step with deadline 3 cannot
+    # finish prefilling -> evicted mid-prefill
+    reqs = [Request(rid=0,
+                    prompt=rng.integers(0, cfg.vocab, size=(24,)).astype(np.int32),
+                    max_new_tokens=4, arrival=0, deadline=3)]
+    eng = DisaggregatedEngine(cfg, params, pcfg, chunked_prefill=True,
+                              prefill_token_budget=2)
+    eng.run(reqs)
+    eng.sched.check_invariants()
+    assert eng.last_statuses[0] == "timeout"
+    assert eng.worker.pool.allocated_count == 0
+    assert eng.transfer.pages_shipped == 0   # never completed -> no ship
+
+
+def test_server_builds_disaggregated_engine():
+    from repro.api import ModelSpec, RunSpec, ServeSpec, Server
+
+    spec = RunSpec(
+        model=ModelSpec("llama3.2-1b", reduced=True),
+        serve=ServeSpec(disaggregate=True, slots=2, num_pages=16,
+                        pages_per_seq=4, page_size=4, gen=4),
+    )
+    server = Server(spec)
+    assert isinstance(server.engine, DisaggregatedEngine)
+    assert server.engine.transfer.mode == "raw"
+    rid = server.submit(np.arange(5, dtype=np.int32))
+    out = server.run()
+    assert len(out[rid]) == 4
+
+
+# ----------------------------------------------- multi-device subprocess --
+
+_SUBPROCESS_IDENTITY = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import json
+import numpy as np
+import jax
+from repro.config import get_config
+from repro.models.model import init_model
+from repro.launch.serve import static_greedy_reference
+from repro.serving import PagedCacheConfig, Request
+from repro.serving.engine import ServingEngine
+from repro.serving.distributed import DisaggregatedEngine
+from repro.sharding.partition import serve_mesh
+
+cfg = get_config("{arch}", reduced=True).replace(dtype="float32",
+                                                 capacity_factor=8.0)
+params = init_model(jax.random.PRNGKey(0), cfg)
+pcfg = PagedCacheConfig(page_size=4, num_pages=32, max_slots=2,
+                        max_pages_per_seq=6)
+rng = np.random.default_rng(0)
+shapes = [(7, 4, 0), (11, 3, 1), (5, 5, 2)]
+prompts = [rng.integers(0, cfg.vocab, size=(t,)).astype(np.int32)
+           for t, _, _ in shapes]
+
+def trace():
+    return [Request(rid=i, prompt=prompts[i], max_new_tokens=g, arrival=a)
+            for i, (_, g, a) in enumerate(shapes)]
+
+refs = [static_greedy_reference(cfg, params, prompts[i], g, pcfg.max_seq)
+        for i, (_, g, _) in enumerate(shapes)]
+
+results = {{}}
+def check(name, engine):
+    out = engine.run(trace())
+    engine.sched.check_invariants()
+    ok = all(np.array_equal(out[i], refs[i]) for i in range(len(shapes)))
+    results[name] = bool(ok)
+    if not ok:
+        results[name + "_detail"] = {{
+            str(i): [np.asarray(out[i]).tolist(), np.asarray(refs[i]).tolist()]
+            for i in range(len(shapes))
+            if not np.array_equal(out[i], refs[i])}}
+
+kw = dict(chunked_prefill=True, prefill_token_budget=6)
+check("tp{tp}", ServingEngine(cfg, params, pcfg, mesh=serve_mesh({tp}), **kw))
+check("disagg", DisaggregatedEngine(cfg, params, pcfg, **kw))
+check("tp{tp}_disagg",
+      DisaggregatedEngine(cfg, params, pcfg, mesh=serve_mesh({tp}), **kw))
+print(json.dumps(results))
+"""
+
+
+@pytest.mark.parametrize("arch,tp", [
+    ("llama3.2-1b", 2),         # GQA: kv-head-sharded pools
+    ("deepseek-v3-671b", 2),    # MLA: query-head split, replicated latent
+    ("deepseek-v3-671b", 4),    # MLA at full head parallelism
+])
+def test_multi_device_token_identity(arch, tp):
+    """The acceptance criterion: TP paged decode, disaggregated
+    prefill, and TP x disaggregation each reproduce the single-process
+    static greedy oracle token for token, under 4 forced host devices."""
+    code = _SUBPROCESS_IDENTITY.format(arch=arch, tp=tp)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=600, env=env)
+    assert out.returncode == 0, out.stderr[-2000:]
+    payload = json.loads(out.stdout.strip().splitlines()[-1])
+    assert all(payload[k] for k in payload), payload

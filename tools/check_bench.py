@@ -43,7 +43,9 @@ SCHEMA_PATH = REPO_ROOT / "src" / "repro" / "bench" / "schema.py"
 
 # the deterministic (engine-step clock domain) metric columns a
 # regenerated envelope must reproduce exactly; everything wall-clock
-# (wall_s, tokens_per_s, goodput_tokens_per_s, itl_*) varies by machine
+# (wall_s, tokens_per_s, goodput_tokens_per_s, itl_*) varies by machine.
+# The kv_transfer_* ledger only appears on disaggregated arms — absent
+# keys compare None == None, so plain arms pass through unchanged.
 DIFF_KEYS = (
     "requests",
     "completed",
@@ -54,6 +56,10 @@ DIFF_KEYS = (
     "slo_met_tokens",
     "generated_tokens",
     "peak_pages",
+    "kv_transfer_pages",
+    "kv_transfer_bytes",
+    "kv_transfer_wire_bytes",
+    "prefill_pool_peak_pages",
 )
 
 
