@@ -33,6 +33,9 @@ usage: python -m repro bench [<name>] [flags...]
   serving     SLO/traffic harness -> BENCH_serving.json (--help for knobs)
   speculative rank-ladder self-speculation vs plain decode ->
               BENCH_speculative.json (acceptance rate, tokens/step)
+  streaming   long-context streaming KV sweep (full cache vs sinks+
+              window vs int8 cold tier) -> BENCH_streaming.json
+              (evictions, demotions, cold bytes, NLL per policy)
   kernels     serving-kernel roofline placement + ref timings ->
               BENCH_kernels.json
   roofline    dry-run roofline table (--json-out for an envelope)
@@ -387,6 +390,124 @@ def cmd_speculative(argv: Sequence[str]) -> int:
     return 0
 
 
+# --------------------------------------------------------- streaming --
+
+def build_streaming_parser() -> argparse.ArgumentParser:
+    """Eviction-policy sweep knobs; defaults are the committed
+    BENCH_streaming.json configuration: a tiny-page geometry whose
+    fixed-length sessions run several windows past the sink+window
+    horizon, so every streaming arm genuinely evicts (and the int8 arm
+    genuinely demotes)."""
+    ap = argparse.ArgumentParser(
+        prog="repro bench streaming",
+        description="long-context streaming KV policy sweep: full cache "
+                    "vs attention sinks + sliding-window eviction vs "
+                    "int8 cold tier, over one long-session workload; "
+                    "identity gate inside the horizon, NLL per policy, "
+                    "BENCH_streaming.json out")
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--full", action="store_true",
+                    help="full-size config (default: reduced, CPU-scale)")
+    ap.add_argument("--sink-pages", type=int, default=1)
+    ap.add_argument("--window-pages", type=int, default=2)
+    # serving geometry: small pages so the sessions cross many window
+    # boundaries within CPU-scale wall time
+    ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--page-size", type=int, default=4)
+    ap.add_argument("--num-pages", type=int, default=32)
+    ap.add_argument("--pages-per-seq", type=int, default=16)
+    ap.add_argument("--prefill-budget", type=int, default=64)
+    ap.add_argument("--scheduler", choices=["fifo", "slo"], default="fifo")
+    # workload (deterministic: fixed arrivals, pinned lengths well past
+    # the sink+window identity horizon)
+    ap.add_argument("--arrival", choices=["poisson", "onoff", "fixed"],
+                    default="fixed")
+    ap.add_argument("--rate", type=float, default=0.5)
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--prompt-mean", type=int, default=24)
+    ap.add_argument("--prompt-cv", type=float, default=0.0)
+    ap.add_argument("--gen-mean", type=int, default=16)
+    ap.add_argument("--gen-cv", type=float, default=0.0)
+    # output
+    ap.add_argument("--json-out", default="BENCH_streaming.json",
+                    help="envelope path ('' to skip writing)")
+    ap.add_argument("--dump-spec", action="store_true",
+                    help="print the resolved BenchSpec JSON and exit")
+    ap.add_argument("--spec-from", default=None, metavar="FILE",
+                    help="rerun the BenchSpec embedded in this envelope "
+                         "(the CI regenerate-and-diff path)")
+    return ap
+
+
+def streaming_bench_from_args(args: argparse.Namespace):
+    from repro.api import (
+        BenchSpec,
+        ModelSpec,
+        ServeSpec,
+        StreamingSpec,
+        WorkloadSpec,
+    )
+
+    return BenchSpec(
+        name="streaming",
+        model=ModelSpec(args.arch, reduced=not args.full),
+        serve=ServeSpec(
+            slots=args.slots,
+            page_size=args.page_size,
+            num_pages=args.num_pages,
+            pages_per_seq=args.pages_per_seq,
+            prefill_budget=args.prefill_budget,
+            scheduler=args.scheduler,
+            streaming=StreamingSpec(sink_pages=args.sink_pages,
+                                    window_pages=args.window_pages),
+        ),
+        workload=WorkloadSpec(
+            arrival=args.arrival,
+            rate=args.rate,
+            requests=args.requests,
+            seed=args.seed,
+            prompt_mean=args.prompt_mean,
+            prompt_cv=args.prompt_cv,
+            gen_mean=args.gen_mean,
+            gen_cv=args.gen_cv,
+        ),
+        overloads="1",
+        schedulers=args.scheduler,
+    )
+
+
+def cmd_streaming(argv: Sequence[str]) -> int:
+    args = build_streaming_parser().parse_args(argv)
+    bench = (_bench_from_envelope(args.spec_from) if args.spec_from
+             else streaming_bench_from_args(args))
+    if args.dump_spec:
+        print(bench.to_json(indent=2))
+        return 0
+
+    from repro.bench import run_streaming_bench, write_bench
+
+    doc = run_streaming_bench(
+        bench, log=lambda s: print(f"[bench] {s}", flush=True))
+    for arm in doc["results"]:
+        m = arm["metrics"]
+        line = (f"{arm['variant']:11s}: "
+                f"{int(m['completed'])}/{int(m['requests'])} completed | "
+                f"peak {int(m['peak_pages'])} pages | "
+                f"nll {m['score_nll']:.4f}")
+        if "stream_evictions" in m:
+            line += f" | {int(m['stream_evictions'])} evictions"
+        if "stream_demotions" in m:
+            line += (f", {int(m['stream_demotions'])} demotions "
+                     f"({int(m['cold_page_bytes'])} cold bytes)")
+        print(line)
+    print("outputs token-identical inside the streaming identity horizon")
+    if args.json_out:
+        write_bench(doc, args.json_out)
+        print(f"wrote {args.json_out}")
+    return 0
+
+
 # ------------------------------------------------------------- kernels --
 
 def cmd_kernels(argv: Sequence[str]) -> int:
@@ -515,6 +636,7 @@ def _simple_suite(name: str, arch: str):
 COMMANDS = {
     "serving": cmd_serving,
     "speculative": cmd_speculative,
+    "streaming": cmd_streaming,
     "table3": cmd_table3,
     "table1": _table_suite("table1", "BENCH_table1.json"),
     "table2": _table_suite("table2", ""),

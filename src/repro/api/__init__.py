@@ -25,6 +25,7 @@ from repro.api.specs import (
     ServeSpec,
     ShardingSpec,
     SLOSpec,
+    StreamingSpec,
     TrainSpec,
     WorkloadSpec,
 )
@@ -37,6 +38,7 @@ __all__ = [
     "PrecisionSpec",
     "RankScheduleSpec",
     "ShardingSpec",
+    "StreamingSpec",
     "ServeSpec",
     "CheckpointSpec",
     "RunSpec",

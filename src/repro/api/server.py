@@ -78,6 +78,7 @@ class Server:
             params = init_model(jax.random.PRNGKey(spec.train.seed), self.cfg)
         sv = spec.serve
         mesh = spec.sharding.serve_mesh()
+        streaming = sv.streaming.config()
         common = dict(
             prefill_token_budget=sv.prefill_budget,
             quantize=sv.quantize,
@@ -119,7 +120,7 @@ class Server:
                 raise ValueError("drafter_params given but "
                                  "serve.speculative_rank is unset")
             self.engine = ServingEngine(self.cfg, params, sv.paged_config(),
-                                        **common)
+                                        streaming=streaming, **common)
         self.checkpoint_step: Optional[int] = None
         self._pending: List[Request] = []
         self._next_rid = 0

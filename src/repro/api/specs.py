@@ -35,6 +35,7 @@ __all__ = [
     "PrecisionSpec",
     "RankScheduleSpec",
     "ShardingSpec",
+    "StreamingSpec",
     "ServeSpec",
     "CheckpointSpec",
     "RunSpec",
@@ -243,6 +244,45 @@ class ShardingSpec(_Spec):
 
 
 @_spec
+class StreamingSpec(_Spec):
+    """Long-context streaming KV policy (serving/streaming.py):
+    ``window_pages=None`` disables streaming entirely (the default —
+    every existing spec round-trips unchanged); setting it turns on
+    attention sinks + sliding-window page eviction, with ``sink_pages``
+    pages pinned forever at the head of every sequence. ``cold_kv``
+    picks the tier for resident pages older than the window: ``"none"``
+    keeps them at pool precision, ``"int8"`` demotes them to the
+    page-granular int8 shadow pools (transparent dequant-on-attend)."""
+    sink_pages: int = 1
+    window_pages: Optional[int] = None
+    cold_kv: str = "none"
+
+    def __post_init__(self):
+        if self.sink_pages < 1:
+            raise ValueError(f"sink_pages {self.sink_pages} must be >= 1")
+        if self.window_pages is not None and self.window_pages < 1:
+            raise ValueError(f"window_pages {self.window_pages} must be >= 1")
+        if self.cold_kv not in ("none", "int8"):
+            raise ValueError(f"cold_kv {self.cold_kv!r}; options none|int8")
+        if self.cold_kv != "none" and self.window_pages is None:
+            raise ValueError("cold_kv needs streaming on (set window_pages)")
+
+    @property
+    def enabled(self) -> bool:
+        return self.window_pages is not None
+
+    def config(self):
+        """The runtime StreamingConfig, or None when disabled."""
+        if not self.enabled:
+            return None
+        from repro.serving.streaming import StreamingConfig
+
+        return StreamingConfig(sink_pages=self.sink_pages,
+                               window_pages=self.window_pages,
+                               cold_kv=self.cold_kv)
+
+
+@_spec
 class ServeSpec(_Spec):
     """The serving side. ``mode="paged"`` is the continuous-batching
     engine (serving/engine.py) — page geometry, slots, prefill budget,
@@ -303,6 +343,8 @@ class ServeSpec(_Spec):
     # "int8" (symmetric per-channel quantization on the wire, opt-in).
     disaggregate: bool = False
     kv_transfer: str = "raw"
+    # long-context streaming KV policy; off by default (window unset)
+    streaming: StreamingSpec = StreamingSpec()
 
     def __post_init__(self):
         if self.mode not in ("paged", "static"):
@@ -344,6 +386,23 @@ class ServeSpec(_Spec):
                     "disaggregate and speculative_rank are mutually "
                     "exclusive (the speculative engine owns its own "
                     "prefill/verify interleaving)")
+        if self.streaming.enabled:
+            if self.mode != "paged":
+                raise ValueError("streaming KV needs mode='paged'")
+            if self.speculative_rank is not None:
+                raise ValueError(
+                    "streaming and speculative_rank are mutually exclusive "
+                    "(a drafted burst can cross an eviction boundary the "
+                    "verifier no longer sees)")
+            if self.disaggregate:
+                raise ValueError(
+                    "streaming and disaggregate are mutually exclusive "
+                    "(the prefill worker's pool has no eviction policy)")
+            cap = self.streaming.sink_pages + self.streaming.window_pages + 1
+            if cap > self.pages_per_seq:
+                raise ValueError(
+                    f"streaming resident cap {cap} pages (sink + window + "
+                    f"growth) exceeds pages_per_seq={self.pages_per_seq}")
 
     def speculative_ladder(self) -> list:
         """The parsed rank ladder (drafter first), or ``[]`` when

@@ -22,6 +22,7 @@ from repro.bench.runner import (
     arm_metrics,
     run_bench,
     run_speculative_bench,
+    run_streaming_bench,
     write_bench,
 )
 
@@ -34,5 +35,6 @@ __all__ = [
     "arm_metrics",
     "run_bench",
     "run_speculative_bench",
+    "run_streaming_bench",
     "write_bench",
 ]

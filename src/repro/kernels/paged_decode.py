@@ -149,6 +149,111 @@ def paged_gqa_decode_pallas(q, k_pool, v_pool, block_table, seq_lens, *,
     )(block_table, seq_lens, q, k_pool, v_pool)
 
 
+# ------------------------------------------------------- GQA cold-KV --
+
+def _gqa_cold_kernel(bt_ref, sl_ref, cold_ref, q_ref, k_ref, v_ref,
+                     kq_ref, ks_ref, vq_ref, vs_ref, o_ref,
+                     acc_ref, m_ref, l_ref, *, page: int, n_pages: int,
+                     scale: float):
+    """GQA paged decode with per-page cold-KV substitution: pages whose
+    physical id is flagged in ``cold_ref`` read their K/V from the int8
+    shadow pool, dequantized in-register with the page's per-channel
+    scale. Hot pages are bit-identical to :func:`_gqa_kernel`."""
+    i = pl.program_id(0)                      # slot
+    j = pl.program_id(2)                      # logical page
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    is_cold = cold_ref[bt_ref[i, j]] != 0
+    q = q_ref[0, 0].astype(jnp.float32)                    # (rep, hd)
+    k_hot = k_ref[0, :, 0, :].astype(jnp.float32)          # (page, hd)
+    k_cold = (kq_ref[0, :, 0, :].astype(jnp.float32)
+              * ks_ref[0, 0].astype(jnp.float32)[None, :])
+    k = jnp.where(is_cold, k_cold, k_hot)
+    s_ij = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * scale                                              # (rep, page)
+    pos = j * page + jax.lax.broadcasted_iota(jnp.int32, s_ij.shape, 1)
+    s_ij = jnp.where(pos <= sl_ref[i], s_ij, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s_ij, axis=-1, keepdims=True))
+    p = jnp.exp(s_ij - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    v_hot = v_ref[0, :, 0, :].astype(jnp.float32)
+    v_cold = (vq_ref[0, :, 0, :].astype(jnp.float32)
+              * vs_ref[0, 0].astype(jnp.float32)[None, :])
+    v = jnp.where(is_cold, v_cold, v_hot)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_ref[...] = m_new
+
+    @pl.when(j == n_pages - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                       ).astype(o_ref.dtype)
+
+
+def paged_gqa_decode_cold_pallas(q, k_pool, v_pool, k_q8, k_scale,
+                                 v_q8, v_scale, block_table, seq_lens,
+                                 cold_flags, *,
+                                 interpret: bool | None = None):
+    """Cold-aware :func:`paged_gqa_decode_pallas`: same contract plus the
+    int8 shadow pools ``k_q8``/``v_q8`` (P+1, page, kvh, hd), per-page
+    scales ``k_scale``/``v_scale`` (P+1, kvh, hd) — the token axis is
+    the reduced one (serving/quantize.py ``quantize_kv_pages``) — and
+    ``cold_flags`` (P+1,) int32, riding as a third scalar-prefetch
+    operand so the flag lookup costs one SMEM read per page."""
+    b, kvh, rep, hd = q.shape
+    page = k_pool.shape[1]
+    n_pages = block_table.shape[1]
+    scale = 1.0 / (hd ** 0.5)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b, kvh, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, rep, hd),
+                         lambda i, g, j, bt, sl, cold: (i, g, 0, 0)),
+            pl.BlockSpec((1, page, 1, hd),
+                         lambda i, g, j, bt, sl, cold: (bt[i, j], 0, g, 0)),
+            pl.BlockSpec((1, page, 1, hd),
+                         lambda i, g, j, bt, sl, cold: (bt[i, j], 0, g, 0)),
+            pl.BlockSpec((1, page, 1, hd),
+                         lambda i, g, j, bt, sl, cold: (bt[i, j], 0, g, 0)),
+            pl.BlockSpec((1, 1, hd),
+                         lambda i, g, j, bt, sl, cold: (bt[i, j], g, 0)),
+            pl.BlockSpec((1, page, 1, hd),
+                         lambda i, g, j, bt, sl, cold: (bt[i, j], 0, g, 0)),
+            pl.BlockSpec((1, 1, hd),
+                         lambda i, g, j, bt, sl, cold: (bt[i, j], g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rep, hd),
+                               lambda i, g, j, bt, sl, cold: (i, g, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((rep, hd), jnp.float32),   # acc
+            pltpu.VMEM((rep, 1), jnp.float32),    # running max
+            pltpu.VMEM((rep, 1), jnp.float32),    # running sum
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_gqa_cold_kernel, page=page, n_pages=n_pages,
+                          scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kvh, rep, hd), q.dtype),
+        interpret=resolve_interpret(interpret),
+    )(block_table, seq_lens, cold_flags, q, k_pool, v_pool,
+      k_q8, k_scale, v_q8, v_scale)
+
+
 # ------------------------------------------------------------------ MLA --
 
 def _mla_kernel(bt_ref, sl_ref, ql_ref, qr_ref, ckv_ref, kr_ref, o_ref,
@@ -233,3 +338,110 @@ def paged_mla_decode_pallas(q_lat, q_rope, ckv_pool, kr_pool, block_table,
         out_shape=jax.ShapeDtypeStruct((b, h, lat), q_lat.dtype),
         interpret=resolve_interpret(interpret),
     )(block_table, seq_lens, q_lat, q_rope, ckv_pool, kr_pool)
+
+
+# ------------------------------------------------------- MLA cold-KV --
+
+def _mla_cold_kernel(bt_ref, sl_ref, cold_ref, ql_ref, qr_ref,
+                     ckv_ref, kr_ref, cq_ref, cs_ref, rq_ref, rs_ref,
+                     o_ref, acc_ref, m_ref, l_ref, *, page: int,
+                     n_pages: int, scale: float):
+    """Absorbed-MLA paged decode with cold-page substitution: flagged
+    pages read latent/rope rows from the int8 shadow pools, dequantized
+    in-register. The dequantized ckv rows double as the values, same as
+    the hot path."""
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    is_cold = cold_ref[bt_ref[i, j]] != 0
+    ckv_hot = ckv_ref[0].astype(jnp.float32)               # (page, L)
+    ckv_cold = (cq_ref[0].astype(jnp.float32)
+                * cs_ref[0].astype(jnp.float32)[None, :])
+    ckv = jnp.where(is_cold, ckv_cold, ckv_hot)
+    kr_hot = kr_ref[0].astype(jnp.float32)                 # (page, R)
+    kr_cold = (rq_ref[0].astype(jnp.float32)
+               * rs_ref[0].astype(jnp.float32)[None, :])
+    kr = jnp.where(is_cold, kr_cold, kr_hot)
+    s_ij = (
+        jax.lax.dot_general(
+            ql_ref[0].astype(jnp.float32), ckv, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        + jax.lax.dot_general(
+            qr_ref[0].astype(jnp.float32), kr,
+            (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    ) * scale                                              # (h, page)
+    pos = j * page + jax.lax.broadcasted_iota(jnp.int32, s_ij.shape, 1)
+    s_ij = jnp.where(pos <= sl_ref[i], s_ij, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s_ij, axis=-1, keepdims=True))
+    p = jnp.exp(s_ij - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, ckv, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_ref[...] = m_new
+
+    @pl.when(j == n_pages - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+def paged_mla_decode_cold_pallas(q_lat, q_rope, ckv_pool, kr_pool,
+                                 ckv_q8, ckv_scale, kr_q8, kr_scale,
+                                 block_table, seq_lens, cold_flags, *,
+                                 scale: float,
+                                 interpret: bool | None = None):
+    """Cold-aware :func:`paged_mla_decode_pallas`: adds the int8 latent
+    shadow pools (P+1, page, L)/(P+1, page, R), their per-page scales
+    (P+1, L)/(P+1, R), and the (P+1,) int32 ``cold_flags`` as a third
+    scalar-prefetch operand."""
+    b, h, lat = q_lat.shape
+    rope_d = q_rope.shape[-1]
+    page = ckv_pool.shape[1]
+    n_pages = block_table.shape[1]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, h, lat), lambda i, j, bt, sl, cold: (i, 0, 0)),
+            pl.BlockSpec((1, h, rope_d),
+                         lambda i, j, bt, sl, cold: (i, 0, 0)),
+            pl.BlockSpec((1, page, lat),
+                         lambda i, j, bt, sl, cold: (bt[i, j], 0, 0)),
+            pl.BlockSpec((1, page, rope_d),
+                         lambda i, j, bt, sl, cold: (bt[i, j], 0, 0)),
+            pl.BlockSpec((1, page, lat),
+                         lambda i, j, bt, sl, cold: (bt[i, j], 0, 0)),
+            pl.BlockSpec((1, lat), lambda i, j, bt, sl, cold: (bt[i, j], 0)),
+            pl.BlockSpec((1, page, rope_d),
+                         lambda i, j, bt, sl, cold: (bt[i, j], 0, 0)),
+            pl.BlockSpec((1, rope_d),
+                         lambda i, j, bt, sl, cold: (bt[i, j], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, lat),
+                               lambda i, j, bt, sl, cold: (i, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((h, lat), jnp.float32),
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, 1), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_mla_cold_kernel, page=page, n_pages=n_pages,
+                          scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, lat), q_lat.dtype),
+        interpret=resolve_interpret(interpret),
+    )(block_table, seq_lens, cold_flags, q_lat, q_rope, ckv_pool, kr_pool,
+      ckv_q8, ckv_scale, kr_q8, kr_scale)

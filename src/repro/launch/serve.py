@@ -69,7 +69,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.api import ModelSpec, RunSpec, ServeSpec, ShardingSpec, Server
+from repro.api import (
+    ModelSpec,
+    RunSpec,
+    ServeSpec,
+    ShardingSpec,
+    StreamingSpec,
+    Server,
+)
 from repro.models.model import (
     init_model,
     init_decode_state,
@@ -176,6 +183,14 @@ def run_stream(args, spec: RunSpec, params) -> None:
                  " [family opted out: recurrent state, exact-match only]"))
     print(f"inter-token latency: p50 {st['itl_p50_s'] * 1e3:.1f} ms, "
           f"p99 {st['itl_p99_s'] * 1e3:.1f} ms")
+    if args.streaming_window is not None:
+        line = (f"streaming: sink={args.sink_pages}p + "
+                f"window={args.streaming_window}p resident cap, "
+                f"{int(st['stream_evictions'])} pages evicted")
+        if args.cold_kv == "int8":
+            line += (f", {int(st['stream_demotions'])} demoted to int8 "
+                     f"({int(st['cold_page_bytes'])} shadow bytes)")
+        print(line)
     if args.speculative_rank is not None:
         # speculative output IS the target's greedy output (acceptance
         # only moves latency), so --verify below applies unchanged
@@ -200,10 +215,21 @@ def run_stream(args, spec: RunSpec, params) -> None:
 
     if args.verify:
         # oracle: fp32 static path over the engine's effective weights
-        # (dequantized when --quantize) — must match token for token
+        # (dequantized when --quantize) — must match token for token.
+        # Under streaming the guarantee holds only within the identity
+        # horizon (sink + window tokens); longer requests are by design
+        # lossy and are skipped here.
+        horizon = None
+        if args.streaming_window is not None:
+            from repro.serving import identity_horizon
+
+            horizon = identity_horizon(spec.serve.streaming.config(), pcfg)
         oracle_params = dequantize_tree(server.params) if args.quantize else params
-        bad = 0
+        bad = skipped = 0
         for r in trace:
+            if horizon is not None and r.prompt_len + r.max_new_tokens > horizon:
+                skipped += 1
+                continue
             ref = static_greedy_reference(cfg, oracle_params, r.prompt,
                                           r.max_new_tokens, pcfg.max_seq)
             got = out[r.rid]
@@ -218,8 +244,11 @@ def run_stream(args, spec: RunSpec, params) -> None:
                 print(f"request {r.rid}: MISMATCH\n  static {ref}\n  paged  {got}")
         if bad:
             raise SystemExit(f"{bad}/{len(trace)} requests diverged from the static path")
-        print(f"verify: all {len(trace)} requests match the fp32 static path "
-              f"token-for-token")
+        checked = len(trace) - skipped
+        print(f"verify: all {checked} requests match the fp32 static path "
+              f"token-for-token"
+              + (f" ({skipped} beyond the {horizon}-token streaming "
+                 f"identity horizon skipped)" if skipped else ""))
         if args.quantize:
             agree = total = 0
             for r in trace:
@@ -338,6 +367,19 @@ def build_parser() -> argparse.ArgumentParser:
                     help="wire format for disaggregated KV shipment: raw "
                          "(lossless page copy) or int8 (quantized on the "
                          "wire, opt-in)")
+    ap.add_argument("--streaming-window", type=int, default=None,
+                    help="long-context streaming: keep only this many "
+                         "sliding-window pages (plus the pinned sinks) "
+                         "resident per sequence — older pages are evicted "
+                         "and their tokens dropped (serving/streaming.py)")
+    ap.add_argument("--sink-pages", type=int, default=1,
+                    help="attention-sink pages pinned forever at the head "
+                         "of every sequence (with --streaming-window)")
+    ap.add_argument("--cold-kv", choices=["none", "int8"], default="none",
+                    help="tier for resident pages older than the window: "
+                         "none keeps pool precision, int8 demotes them to "
+                         "page-granular int8 shadow pools with transparent "
+                         "dequant-on-attend (with --streaming-window)")
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="prepend this many shared system-prompt tokens to "
                          "every request in the trace (the prefix-cache "
@@ -388,6 +430,11 @@ def build_spec(args: argparse.Namespace) -> RunSpec:
             draft_tokens=args.draft_tokens,
             disaggregate=args.disaggregate,
             kv_transfer=args.kv_transfer,
+            streaming=StreamingSpec(
+                sink_pages=args.sink_pages,
+                window_pages=args.streaming_window,
+                cold_kv=args.cold_kv,
+            ),
         ),
         sharding=ShardingSpec(decode_mesh=args.tp if args.tp > 1 else None),
     )
@@ -408,6 +455,13 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
         raise SystemExit("--tp needs --paged --stream")
     if args.tp < 1:
         raise SystemExit(f"--tp {args.tp} must be >= 1")
+    if args.streaming_window is not None and not args.paged:
+        raise SystemExit("--streaming-window needs --paged --stream")
+    if args.streaming_window is None and args.cold_kv != "none":
+        raise SystemExit("--cold-kv needs --streaming-window")
+    if args.streaming_window is not None and args.tp > 1:
+        raise SystemExit("--streaming-window and --tp are mutually "
+                         "exclusive (no per-shard shadow pools)")
 
     spec = build_spec(args)
     if args.dump_spec:

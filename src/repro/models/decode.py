@@ -90,18 +90,41 @@ def _attn_cache_spec(cfg: ModelConfig, batch: int, max_seq: int):
     }
 
 
-def _attn_pool_spec(cfg: ModelConfig, pcfg):
-    """Per-layer paged pool: (num_pages + 1 null page, page_size, *feat)."""
+def _attn_pool_spec(cfg: ModelConfig, pcfg, cold_kv: str = "none"):
+    """Per-layer paged pool: (num_pages + 1 null page, page_size, *feat).
+
+    ``cold_kv="int8"`` adds page-granular int8 *shadow* pools plus
+    per-page scales (token axis reduced) for the streaming cold tier:
+    the engine demotes cold pages into the shadow leaves and attention
+    substitutes their dequantized rows for flagged pages. Shadow leaves
+    ride in the same cache dict, so the layer scan, COW page copy, and
+    TP sharding machinery see them as ordinary pool leaves."""
     P, pg = pcfg.num_pages + 1, pcfg.page_size
     if cfg.attention == "mla":
-        return {
+        spec = {
             "ckv": jax.ShapeDtypeStruct((P, pg, cfg.kv_lora_rank), jnp.bfloat16),
             "krope": jax.ShapeDtypeStruct((P, pg, cfg.qk_rope_dim), jnp.bfloat16),
         }
-    return {
+        if cold_kv == "int8":
+            spec.update({
+                "ckv_q8": jax.ShapeDtypeStruct((P, pg, cfg.kv_lora_rank), jnp.int8),
+                "ckv_scale": jax.ShapeDtypeStruct((P, cfg.kv_lora_rank), jnp.float32),
+                "krope_q8": jax.ShapeDtypeStruct((P, pg, cfg.qk_rope_dim), jnp.int8),
+                "krope_scale": jax.ShapeDtypeStruct((P, cfg.qk_rope_dim), jnp.float32),
+            })
+        return spec
+    spec = {
         "k": jax.ShapeDtypeStruct((P, pg, cfg.n_kv_heads, cfg.head_dim), jnp.bfloat16),
         "v": jax.ShapeDtypeStruct((P, pg, cfg.n_kv_heads, cfg.head_dim), jnp.bfloat16),
     }
+    if cold_kv == "int8":
+        spec.update({
+            "k_q8": jax.ShapeDtypeStruct((P, pg, cfg.n_kv_heads, cfg.head_dim), jnp.int8),
+            "k_scale": jax.ShapeDtypeStruct((P, cfg.n_kv_heads, cfg.head_dim), jnp.float32),
+            "v_q8": jax.ShapeDtypeStruct((P, pg, cfg.n_kv_heads, cfg.head_dim), jnp.int8),
+            "v_scale": jax.ShapeDtypeStruct((P, cfg.n_kv_heads, cfg.head_dim), jnp.float32),
+        })
+    return spec
 
 
 def _mamba_state_spec(cfg, batch):
@@ -163,11 +186,13 @@ def lm_state_specs(cfg: ModelConfig, batch: int, max_seq: int):
     return _lm_state_specs(cfg, batch, lambda: _attn_cache_spec(cfg, batch, max_seq))
 
 
-def lm_paged_state_specs(cfg: ModelConfig, pcfg):
+def lm_paged_state_specs(cfg: ModelConfig, pcfg, cold_kv: str = "none"):
     """Decode state with paged attention pools: recurrent leaves are
     slot-indexed by ``pcfg.max_slots``; attention leaves are shared page
-    pools addressed through the engine's block tables."""
-    return _lm_state_specs(cfg, pcfg.max_slots, lambda: _attn_pool_spec(cfg, pcfg))
+    pools addressed through the engine's block tables. ``cold_kv``
+    extends each layer's pools with the streaming int8 shadow tier."""
+    return _lm_state_specs(cfg, pcfg.max_slots,
+                           lambda: _attn_pool_spec(cfg, pcfg, cold_kv))
 
 
 def lm_init_state(cfg: ModelConfig, batch: int, max_seq: int):
@@ -176,8 +201,9 @@ def lm_init_state(cfg: ModelConfig, batch: int, max_seq: int):
     return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), lm_state_specs(cfg, batch, max_seq))
 
 
-def lm_init_paged_state(cfg: ModelConfig, pcfg):
-    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), lm_paged_state_specs(cfg, pcfg))
+def lm_init_paged_state(cfg: ModelConfig, pcfg, cold_kv: str = "none"):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        lm_paged_state_specs(cfg, pcfg, cold_kv))
 
 
 # ======================================================================
@@ -349,7 +375,8 @@ def decode_step_lm(params: Params, tokens: jax.Array, state, cache_len: jax.Arra
 
 def decode_step_lm_paged(params: Params, tokens: jax.Array, state,
                          block_table: jax.Array, seq_lens: jax.Array,
-                         cfg: ModelConfig, *, tp_axis=None, tp_size=1):
+                         cfg: ModelConfig, *, tp_axis=None, tp_size=1,
+                         cold_flags=None):
     """One-token step against paged attention pools with per-slot fill
     levels — mixed request lengths in one compiled step, the
     continuous-batching contract. block_table: (slots, n_pages) int32;
@@ -366,17 +393,19 @@ def decode_step_lm_paged(params: Params, tokens: jax.Array, state,
         if cfg.attention == "mla":
             return attn.apply_mla_decode_paged(
                 p, h, cfg, cache=cache, block_table=block_table, seq_lens=seq_lens,
-                tp_axis=tp_axis, tp_size=tp_size)
+                tp_axis=tp_axis, tp_size=tp_size, cold_flags=cold_flags)
         return attn.apply_gqa_decode_paged(
             p, h, cfg, cache=cache, block_table=block_table, seq_lens=seq_lens,
-            use_pallas=cfg.use_pallas, tp_axis=tp_axis, tp_size=tp_size)
+            use_pallas=cfg.use_pallas, tp_axis=tp_axis, tp_size=tp_size,
+            cold_flags=cold_flags)
 
     return _decode_step_body(params, tokens, state, cfg, attn_decode)
 
 
 def prefill_chunk_lm_paged(params: Params, tokens: jax.Array, state,
                            block_table: jax.Array, start: jax.Array,
-                           cfg: ModelConfig, *, tp_axis=None, tp_size=1):
+                           cfg: ModelConfig, *, tp_axis=None, tp_size=1,
+                           cold_flags=None):
     """Chunked/offset prefill against the paged pools: tokens (1, c)
     occupy absolute positions [start, start+c) of one sequence whose
     pages are mapped in block_table (1, n_pages). Positions < start are
@@ -396,10 +425,11 @@ def prefill_chunk_lm_paged(params: Params, tokens: jax.Array, state,
         if cfg.attention == "mla":
             return attn.apply_mla_prefill_paged(
                 p, h, cfg, cache=cache, block_table=block_table, start=start,
-                tp_axis=tp_axis, tp_size=tp_size)
+                tp_axis=tp_axis, tp_size=tp_size, cold_flags=cold_flags)
         return attn.apply_gqa_prefill_paged(
             p, h, cfg, cache=cache, block_table=block_table, start=start,
-            use_pallas=cfg.use_pallas, tp_axis=tp_axis, tp_size=tp_size)
+            use_pallas=cfg.use_pallas, tp_axis=tp_axis, tp_size=tp_size,
+            cold_flags=cold_flags)
 
     return _decode_step_body(params, tokens, state, cfg, attn_chunk)
 

@@ -66,36 +66,39 @@ def decode_step(params, tokens, state, cache_len, cfg: ModelConfig, **extra):
 
 # ------------------------------------------------------- paged serving --
 
-def paged_state_specs(cfg: ModelConfig, pcfg):
+def paged_state_specs(cfg: ModelConfig, pcfg, cold_kv: str = "none"):
     if cfg.family == "encdec":
         raise NotImplementedError("paged serving targets decoder-only families")
-    return decode_mod.lm_paged_state_specs(cfg, pcfg)
+    return decode_mod.lm_paged_state_specs(cfg, pcfg, cold_kv)
 
 
-def init_paged_state(cfg: ModelConfig, pcfg):
+def init_paged_state(cfg: ModelConfig, pcfg, cold_kv: str = "none"):
     return jax.tree.map(
-        lambda s: jnp.zeros(s.shape, s.dtype), paged_state_specs(cfg, pcfg)
+        lambda s: jnp.zeros(s.shape, s.dtype),
+        paged_state_specs(cfg, pcfg, cold_kv)
     )
 
 
 def decode_step_paged(params, tokens, state, block_table, seq_lens, cfg: ModelConfig,
-                      *, tp_axis=None, tp_size=1):
+                      *, tp_axis=None, tp_size=1, cold_flags=None):
     if cfg.family == "encdec":
         raise NotImplementedError("paged serving targets decoder-only families")
     return decode_mod.decode_step_lm_paged(params, tokens, state, block_table,
                                            seq_lens, cfg,
-                                           tp_axis=tp_axis, tp_size=tp_size)
+                                           tp_axis=tp_axis, tp_size=tp_size,
+                                           cold_flags=cold_flags)
 
 
 def prefill_chunk_paged(params, tokens, state, block_table, start, cfg: ModelConfig,
-                        *, tp_axis=None, tp_size=1):
+                        *, tp_axis=None, tp_size=1, cold_flags=None):
     """Offset/chunked prefill for one sequence against the paged pools
     (decode.prefill_chunk_lm_paged); attention-only families."""
     if cfg.family == "encdec":
         raise NotImplementedError("paged serving targets decoder-only families")
     return decode_mod.prefill_chunk_lm_paged(params, tokens, state, block_table,
                                              start, cfg,
-                                             tp_axis=tp_axis, tp_size=tp_size)
+                                             tp_axis=tp_axis, tp_size=tp_size,
+                                             cold_flags=cold_flags)
 
 
 def param_count(params) -> int:

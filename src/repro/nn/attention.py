@@ -327,8 +327,34 @@ def apply_gqa_decode(p, x, cfg, *, cache, cache_len, use_pallas=False):
     return apply_linear(p["wo"], o.reshape(b, s, -1), use_pallas=use_pallas), {"k": ck, "v": cv}
 
 
+def _gather_cold(cache, name, block_table, cold_flags):
+    """Gather one paged pool leaf into the logical (b, S, *f) view with
+    cold pages transparently substituted by their dequantized int8
+    shadow rows (streaming cold-KV tier; serving/quantize.py
+    ``quantize_kv_pages``). Returns fp32 when substitution is active so
+    the jnp path sees the same dequantized values as the cold-aware
+    Pallas kernels; without cold flags (or without shadow leaves in the
+    cache) this is exactly ``paged_gather``."""
+    from repro.serving.paged_cache import paged_gather
+
+    pool = cache[name]
+    g = paged_gather(pool, block_table)
+    if cold_flags is None or name + "_q8" not in cache:
+        return g
+    b, n = block_table.shape
+    page = pool.shape[1]
+    q8 = paged_gather(cache[name + "_q8"], block_table)        # (b, S, *f)
+    scale = jnp.take(cache[name + "_scale"], block_table, axis=0)
+    deq = (q8.astype(jnp.float32).reshape(b, n, page, *pool.shape[2:])
+           * scale[:, :, None].astype(jnp.float32)).reshape(g.shape)
+    flag = jnp.take(cold_flags, block_table, axis=0) != 0      # (b, n)
+    flag = jnp.repeat(flag, page, axis=1)                      # (b, S)
+    flag = flag.reshape(flag.shape + (1,) * (g.ndim - 2))
+    return jnp.where(flag, deq, g.astype(jnp.float32))
+
+
 def apply_gqa_prefill_paged(p, x, cfg, *, cache, block_table, start, use_pallas=False,
-                            tp_axis=None, tp_size=1):
+                            tp_axis=None, tp_size=1, cold_flags=None):
     """Chunked prefill from a logical offset against a paged pool.
 
     x: (1, c, d) — one sequence's prompt tokens for absolute positions
@@ -347,7 +373,7 @@ def apply_gqa_prefill_paged(p, x, cfg, *, cache, block_table, start, use_pallas=
     kvh/tp_size heads), attention runs per-shard, and the head outputs
     are all-gathered before the replicated wo — per-head math is
     untouched, so outputs are bit-identical to single-device."""
-    from repro.serving.paged_cache import paged_gather, paged_write_slice
+    from repro.serving.paged_cache import paged_write_slice
 
     b, c, _ = x.shape
     positions = jnp.broadcast_to(start + jnp.arange(c, dtype=jnp.int32)[None], (b, c))
@@ -358,16 +384,17 @@ def apply_gqa_prefill_paged(p, x, cfg, *, cache, block_table, start, use_pallas=
         v = _tp_slice(v, tp_axis, cfg.n_kv_heads // tp_size, 2)
     pk = paged_write_slice(cache["k"], block_table[0], start, k[0])
     pv = paged_write_slice(cache["v"], block_table[0], start, v[0])
-    ck = paged_gather(pk, block_table)
-    cv = paged_gather(pv, block_table)
+    new_cache = dict(cache, k=pk, v=pv)     # shadow leaves ride through
+    ck = _gather_cold(new_cache, "k", block_table, cold_flags)
+    cv = _gather_cold(new_cache, "v", block_table, cold_flags)
     o = _sdpa(q, ck.astype(q.dtype), cv.astype(q.dtype), causal=True, q_offset=start)
     if tp_axis is not None:
         o = jax.lax.all_gather(o, tp_axis, axis=2, tiled=True)
-    return apply_linear(p["wo"], o.reshape(b, c, -1), use_pallas=use_pallas), {"k": pk, "v": pv}
+    return apply_linear(p["wo"], o.reshape(b, c, -1), use_pallas=use_pallas), new_cache
 
 
 def apply_gqa_decode_paged(p, x, cfg, *, cache, block_table, seq_lens, use_pallas=False,
-                           tp_axis=None, tp_size=1):
+                           tp_axis=None, tp_size=1, cold_flags=None):
     """One-token step against a paged pool (serving/paged_cache.py).
 
     cache: {"k"/"v": (P+1, page, kvh, hd)} — this layer's shared pool;
@@ -389,10 +416,11 @@ def apply_gqa_decode_paged(p, x, cfg, *, cache, block_table, seq_lens, use_palla
     decode stays token-for-token identical at any tp_size that divides
     n_kv_heads."""
     from repro.kernels.paged_decode import (
+        paged_gqa_decode_cold_pallas,
         paged_gqa_decode_pallas,
         paged_kernel_enabled,
     )
-    from repro.serving.paged_cache import paged_append, paged_gather
+    from repro.serving.paged_cache import paged_append
 
     b, s, _ = x.shape
     h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -405,13 +433,20 @@ def apply_gqa_decode_paged(p, x, cfg, *, cache, block_table, seq_lens, use_palla
         v = _tp_slice(v, tp_axis, kvh, 2)
     pk = paged_append(cache["k"], block_table, seq_lens, k[:, 0])
     pv = paged_append(cache["v"], block_table, seq_lens, v[:, 0])
+    new_cache = dict(cache, k=pk, v=pv)     # shadow leaves ride through
     if paged_kernel_enabled():
         qg = q[:, 0].reshape(b, kvh, h // kvh, hd)
-        og = paged_gqa_decode_pallas(qg, pk, pv, block_table, seq_lens)
+        if cold_flags is not None and "k_q8" in cache:
+            og = paged_gqa_decode_cold_pallas(
+                qg, pk, pv, cache["k_q8"], cache["k_scale"],
+                cache["v_q8"], cache["v_scale"],
+                block_table, seq_lens, cold_flags)
+        else:
+            og = paged_gqa_decode_pallas(qg, pk, pv, block_table, seq_lens)
         o = og.reshape(b, s, h, hd)
     else:
-        ck = paged_gather(pk, block_table)
-        cv = paged_gather(pv, block_table)
+        ck = _gather_cold(new_cache, "k", block_table, cold_flags)
+        cv = _gather_cold(new_cache, "v", block_table, cold_flags)
         S = ck.shape[1]
         valid = jnp.arange(S)[None, :] <= seq_lens[:, None]
         # fp32 like the kernel branch and the static oracle (see
@@ -421,7 +456,7 @@ def apply_gqa_decode_paged(p, x, cfg, *, cache, block_table, seq_lens, use_palla
                   kv_len_mask=valid).astype(q.dtype)
     if tp_axis is not None:
         o = jax.lax.all_gather(o, tp_axis, axis=2, tiled=True)
-    return apply_linear(p["wo"], o.reshape(b, s, -1), use_pallas=use_pallas), {"k": pk, "v": pv}
+    return apply_linear(p["wo"], o.reshape(b, s, -1), use_pallas=use_pallas), new_cache
 
 
 # ---------------------------------------------------------------- MLA ----
@@ -575,7 +610,7 @@ def apply_mla_decode(p, x, cfg, *, cache, cache_len):
 
 
 def apply_mla_prefill_paged(p, x, cfg, *, cache, block_table, start,
-                            tp_axis=None, tp_size=1):
+                            tp_axis=None, tp_size=1, cold_flags=None):
     """Chunked prefill from a logical offset against paged latent
     pools — the MLA twin of :func:`apply_gqa_prefill_paged`. The
     chunk's compressed latent/rope-key is scattered into the sequence's
@@ -586,7 +621,7 @@ def apply_mla_prefill_paged(p, x, cfg, *, cache, block_table, start,
     ``tp_axis`` shards query heads per-shard inside the absorbed
     attend; the latent pools are replicated (every shard scatters the
     same latent chunk into its copy, so the pools stay consistent)."""
-    from repro.serving.paged_cache import paged_gather, paged_write_slice
+    from repro.serving.paged_cache import paged_write_slice
 
     b, c, _ = x.shape
     positions = jnp.broadcast_to(start + jnp.arange(c, dtype=jnp.int32)[None], (b, c))
@@ -595,17 +630,18 @@ def apply_mla_prefill_paged(p, x, cfg, *, cache, block_table, start,
     ckv, krope = _mla_ckv(p, x, cfg, positions)
     pckv = paged_write_slice(cache["ckv"], block_table[0], start, ckv[0])
     pkr = paged_write_slice(cache["krope"], block_table[0], start, krope[0])
-    cckv = paged_gather(pckv, block_table)
-    ckr = paged_gather(pkr, block_table)
+    new_cache = dict(cache, ckv=pckv, krope=pkr)
+    cckv = _gather_cold(new_cache, "ckv", block_table, cold_flags)
+    ckr = _gather_cold(new_cache, "krope", block_table, cold_flags)
     S = cckv.shape[1]
     valid = jnp.arange(S)[None, None, :] <= positions[:, :, None]      # (b, c, S)
     out = _mla_absorbed_attend(p, x, cfg, q_nope, q_rope, cckv, ckr, valid,
                                tp_axis=tp_axis, tp_size=tp_size)
-    return out, {"ckv": pckv, "krope": pkr}
+    return out, new_cache
 
 
 def apply_mla_decode_paged(p, x, cfg, *, cache, block_table, seq_lens,
-                           tp_axis=None, tp_size=1):
+                           tp_axis=None, tp_size=1, cold_flags=None):
     """Absorbed single-token decode against paged latent pools
     cache = {"ckv"/"krope": (P+1, page, ...)}; per-slot seq_lens.
 
@@ -623,9 +659,10 @@ def apply_mla_decode_paged(p, x, cfg, *, cache, block_table, seq_lens,
     token-identical at any tp_size dividing n_heads."""
     from repro.kernels.paged_decode import (
         paged_kernel_enabled,
+        paged_mla_decode_cold_pallas,
         paged_mla_decode_pallas,
     )
-    from repro.serving.paged_cache import paged_append, paged_gather
+    from repro.serving.paged_cache import paged_append
 
     b, s, _ = x.shape
     positions = seq_lens[:, None].astype(jnp.int32)
@@ -634,6 +671,7 @@ def apply_mla_decode_paged(p, x, cfg, *, cache, block_table, seq_lens,
     ckv_new, krope_new = _mla_ckv(p, x, cfg, positions)
     pckv = paged_append(cache["ckv"], block_table, seq_lens, ckv_new[:, 0])
     pkr = paged_append(cache["krope"], block_table, seq_lens, krope_new[:, 0])
+    new_cache = dict(cache, ckv=pckv, krope=pkr)
     if paged_kernel_enabled():
         h, nope, rope_d, vd = (cfg.n_heads, cfg.qk_nope_dim,
                                cfg.qk_rope_dim, cfg.v_head_dim)
@@ -649,24 +687,32 @@ def apply_mla_decode_paged(p, x, cfg, *, cache, block_table, seq_lens,
         # _mla_absorbed_attend(precise=True) — one rounding before wo.
         q_lat = jnp.einsum("bshn,lhn->bshl", qn.astype(jnp.float32),
                            wuk.astype(jnp.float32))[:, 0]       # (b, h, L)
-        o_lat = paged_mla_decode_pallas(
-            q_lat, qr[:, 0].astype(jnp.float32), pckv, pkr,
-            block_table, seq_lens,
-            scale=1.0 / float(nope + rope_d) ** 0.5)
+        qr_f32 = qr[:, 0].astype(jnp.float32)
+        kscale = 1.0 / float(nope + rope_d) ** 0.5
+        if cold_flags is not None and "ckv_q8" in cache:
+            o_lat = paged_mla_decode_cold_pallas(
+                q_lat, qr_f32, pckv, pkr,
+                cache["ckv_q8"], cache["ckv_scale"],
+                cache["krope_q8"], cache["krope_scale"],
+                block_table, seq_lens, cold_flags, scale=kscale)
+        else:
+            o_lat = paged_mla_decode_pallas(
+                q_lat, qr_f32, pckv, pkr, block_table, seq_lens,
+                scale=kscale)
         o = jnp.einsum("bhl,lhv->bhv", o_lat, wuv.astype(jnp.float32))
         if tp_axis is not None:
             o = jax.lax.all_gather(o, tp_axis, axis=1, tiled=True)
         out = apply_linear(p["wo"],
                            o.astype(x.dtype).reshape(b, s, cfg.n_heads * vd))
     else:
-        cckv = paged_gather(pckv, block_table)
-        ckr = paged_gather(pkr, block_table)
+        cckv = _gather_cold(new_cache, "ckv", block_table, cold_flags)
+        ckr = _gather_cold(new_cache, "krope", block_table, cold_flags)
         S = cckv.shape[1]
         valid = jnp.arange(S)[None, :] <= seq_lens[:, None]
         out = _mla_absorbed_attend(p, x, cfg, q_nope, q_rope, cckv, ckr,
                                    valid, precise=True,
                                    tp_axis=tp_axis, tp_size=tp_size)
-    return out, {"ckv": pckv, "krope": pkr}
+    return out, new_cache
 
 
 # ----------------------------------------------------------- cross-attn --

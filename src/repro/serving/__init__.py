@@ -30,6 +30,12 @@ from repro.serving.scheduler import (
     Request,
     SLOScheduler,
 )
+from repro.serving.streaming import (
+    StreamingConfig,
+    identity_horizon,
+    resident_cap,
+    windowed_reservation,
+)
 
 __all__ = [
     "quantize_int8",
@@ -52,6 +58,10 @@ __all__ = [
     "ContinuousBatchingScheduler",
     "SLOScheduler",
     "Request",
+    "StreamingConfig",
+    "identity_horizon",
+    "resident_cap",
+    "windowed_reservation",
     "ServingEngine",
     "SpeculativeEngine",
 ]

@@ -56,6 +56,7 @@ from repro.serving.scheduler import (
     SeqState,
     SLOScheduler,
 )
+from repro.serving.streaming import StreamingConfig
 
 # inter-token latency samples kept for percentile stats; bounded so a
 # long-lived engine under continuous traffic cannot leak host memory
@@ -103,6 +104,7 @@ class ServingEngine:
                  chunked_prefill: bool = False,
                  scheduler: str = "fifo",
                  shed: bool = True,
+                 streaming: Optional[StreamingConfig] = None,
                  mesh=None):
         if cfg.family == "encdec":
             raise NotImplementedError("paged serving targets decoder-only families")
@@ -128,19 +130,72 @@ class ServingEngine:
         self._offset_prefill = supports_prefix_sharing(cfg)
         self.prefix_cache = bool(prefix_cache) and self._offset_prefill
         self.chunked_prefill = bool(chunked_prefill) and self._offset_prefill
-        self.state = init_paged_state(cfg, pcfg)
+        # streaming KV policy (serving/streaming.py): attention sinks +
+        # sliding-window eviction + optional int8 cold tier. Eviction
+        # rewrites cache-resident history, which only the offset-prefill
+        # families can express (positions are cache-slot-relative).
+        self.streaming = streaming
+        if streaming is not None and not self._offset_prefill:
+            raise NotImplementedError(
+                "streaming KV needs the offset-prefill paged path; family "
+                f"{cfg.family!r} carries recurrent state that cannot drop "
+                "evicted history")
+        if streaming is not None and mesh is not None:
+            raise NotImplementedError(
+                "streaming KV is not supported under tensor-parallel "
+                "serving (per-shard shadow pools are not wired)")
+        self._cold = streaming is not None and streaming.cold_kv == "int8"
+        self.state = init_paged_state(cfg, pcfg,
+                                      "int8" if self._cold else "none")
         if scheduler == "slo":
             self.sched: ContinuousBatchingScheduler = SLOScheduler(
                 pcfg, prefill_token_budget, prefix_sharing=self.prefix_cache,
-                shed=shed)
+                streaming=streaming, shed=shed)
         elif scheduler == "fifo":
             self.sched = ContinuousBatchingScheduler(
-                pcfg, prefill_token_budget, prefix_sharing=self.prefix_cache)
+                pcfg, prefill_token_budget, prefix_sharing=self.prefix_cache,
+                streaming=streaming)
         else:
             raise ValueError(f"unknown scheduler {scheduler!r}; options: "
                              f"fifo, slo")
         self.scheduler = scheduler
         self._next_input = np.zeros((pcfg.max_slots,), dtype=np.int32)
+
+        # cold-tier bookkeeping: a host flag per physical page (1 = the
+        # int8 shadow copy is authoritative for attention) mirrored to
+        # device lazily, cleared whenever the pool frees a page (evict,
+        # finish, cancel, prefix-cache eviction — one hook covers all)
+        self.stream_demotions = 0
+        self.cold_page_bytes = 0
+        self._cold_np = np.zeros((pcfg.num_pages + 1,), dtype=np.int32)
+        self._cold_dev = None
+        if self._cold:
+            self.sched.pool.on_free = self._on_pages_freed
+            from repro.serving.quantize import quantize_kv_pages
+
+            def _demote(state, page):
+                for key in ATTN_STATE_KEYS:
+                    if key not in state:
+                        continue
+                    cache = dict(state[key])
+                    for name in [n for n in cache if n + "_q8" in cache]:
+                        qt = quantize_kv_pages(cache[name][:, page],
+                                               token_axis=1)
+                        cache[name + "_q8"] = \
+                            cache[name + "_q8"].at[:, page].set(qt["q8"])
+                        cache[name + "_scale"] = \
+                            cache[name + "_scale"].at[:, page].set(qt["scale"])
+                    state = dict(state, **{key: cache})
+                return state
+
+            self._demote_fn = jax.jit(_demote, donate_argnums=(0,))
+            # int8 shadow bytes one demoted page occupies across every
+            # layer of every q8 leaf — the deterministic cost metric
+            self._cold_bytes_per_page = sum(
+                int(leaf.shape[0]) * int(np.prod(leaf.shape[2:]))
+                for key in ATTN_STATE_KEYS if key in self.state
+                for name, leaf in self.state[key].items()
+                if name.endswith("_q8"))
 
         # tensor-parallel serving: under a serve mesh the decode and
         # chunk-prefill steps run inside shard_map — GQA KV pools live
@@ -189,6 +244,19 @@ class ServingEngine:
             rep = NamedSharding(mesh, P())
             self.params = jax.device_put(
                 self.params, jax.tree.map(lambda _: rep, self.params))
+        elif self._cold:
+            # cold-tier variants thread the page flag vector; attention
+            # substitutes dequantized shadow rows for flagged pages
+            self._decode_fn = jax.jit(
+                lambda p, t, st, bt, sl, cf: decode_step_paged(
+                    p, t, st, bt, sl, cfg, cold_flags=cf),
+                donate_argnums=(2,),
+            )
+            self._chunk_fn = jax.jit(
+                lambda p, t, st, bt, s0, cf: prefill_chunk_paged(
+                    p, t, st, bt, s0, cfg, cold_flags=cf),
+                donate_argnums=(2,),
+            )
         else:
             self._decode_fn = jax.jit(
                 lambda p, t, st, bt, sl: decode_step_paged(p, t, st, bt, sl, cfg),
@@ -457,6 +525,11 @@ class ServingEngine:
         chunk budget (when chunking; otherwise each tail runs whole).
         The first chunk of a step always runs — progress guarantee."""
         budget = self.prefill_chunk if self.chunked_prefill else None
+        # streaming caps every chunk at a window of tokens: eviction can
+        # then always make room, and each chunk advances by at least a
+        # page (termination under arbitrarily long prompts)
+        cap = (self.streaming.window_pages * self.pcfg.page_size
+               if self.streaming is not None else None)
         spent = 0
         for seq in self.sched.prefilling():
             if not self._offset_prefill:
@@ -467,8 +540,13 @@ class ServingEngine:
             while seq.prefill_pos < plen:
                 remaining = plen - seq.prefill_pos
                 c = remaining if budget is None else min(remaining, max(1, budget - spent))
+                if cap is not None:
+                    c = min(c, cap)
                 if budget is not None and spent > 0 and spent + c > budget:
                     return                       # budget exhausted; resume next step
+                if self.streaming is not None:
+                    self.sched.stream_prepare_chunk(seq.slot, c)
+                    self._stream_demote(seq.slot)
                 logits = self._run_chunk(seq, c)
                 spent += c
             self._complete_prefill(seq, logits)
@@ -480,11 +558,89 @@ class ServingEngine:
         toks = jnp.asarray(req.prompt[seq.prefill_pos:seq.prefill_pos + c],
                            dtype=jnp.int32)[None]
         bt = jnp.asarray(self.sched.block_table[seq.slot:seq.slot + 1])
-        logits, self.state = self._chunk_fn(self.params, toks, self.state, bt,
-                                            jnp.int32(seq.prefill_pos))
+        # cache-slot-relative start: evicted history no longer occupies
+        # cache positions, so the chunk writes (and RoPE-rotates) at its
+        # resident offset — the StreamingLLM position contract
+        start = jnp.int32(seq.prefill_pos - seq.evicted_tokens)
+        if self._cold:
+            logits, self.state = self._chunk_fn(self.params, toks, self.state,
+                                                bt, start, self._cold_flags())
+        else:
+            logits, self.state = self._chunk_fn(self.params, toks, self.state,
+                                                bt, start)
         seq.prefill_pos += c
         self.prefill_tokens += c
         return logits
+
+    # --------------------------------------------------------- streaming --
+    def _cold_flags(self):
+        """Device copy of the per-page cold flags, rebuilt only when the
+        host mirror changed (demotion or page free)."""
+        if self._cold_dev is None:
+            self._cold_dev = jnp.asarray(self._cold_np)
+        return self._cold_dev
+
+    def _on_pages_freed(self, pages) -> None:
+        """PagePool.on_free hook: a freed page's shadow copy is stale —
+        whatever sequence reuses the page starts hot."""
+        if pages and self._cold_np[np.asarray(pages)].any():
+            self._cold_np[np.asarray(pages)] = 0
+            self._cold_dev = None
+
+    def _stream_demote(self, slot: int) -> None:
+        """Demote this slot's newly cold pages (resident, outside the
+        window, unshared) into the int8 shadow pools."""
+        if not self._cold:
+            return
+        for p in self.sched.stream_cold_pages(slot):
+            if self._cold_np[p]:
+                continue
+            self.state = self._demote_fn(self.state, jnp.int32(p))
+            self._cold_np[p] = 1
+            self._cold_dev = None
+            self.stream_demotions += 1
+            self.cold_page_bytes += self._cold_bytes_per_page
+
+    def score_nll(self, tokens) -> float:
+        """Teacher-forced mean NLL of ``tokens`` under this engine's
+        exact cache policy: the sequence prefills through the paged
+        chunk path — evicting and demoting just as serving would — and
+        each chunk's logits score its next-token targets. The
+        perplexity-vs-eviction-policy bench sweep is built on this."""
+        if not self._offset_prefill:
+            raise NotImplementedError("score_nll needs the offset-prefill "
+                                      "paged path")
+        toks = np.asarray(tokens, dtype=np.int32)
+        rid = max(self.known_rids(), default=-1) + 1
+        self.sched.submit(Request(rid=rid, prompt=toks, max_new_tokens=1))
+        seq = next((s for s in self.sched.admit() if s.request.rid == rid),
+                   None)
+        if seq is None:
+            raise RuntimeError("score_nll: request was not admitted "
+                               "(no free slot or pages)")
+        cap = (self.streaming.window_pages * self.pcfg.page_size
+               if self.streaming is not None else self.prefill_chunk)
+        plen = seq.request.prompt_len
+        total, count = 0.0, 0
+        while seq.prefill_pos < plen:
+            c = min(plen - seq.prefill_pos, cap)
+            if self.streaming is not None:
+                self.sched.stream_prepare_chunk(seq.slot, c)
+                self._stream_demote(seq.slot)
+            pos0 = seq.prefill_pos
+            logits = self._run_chunk(seq, c)
+            upto = min(c, plen - 1 - pos0)       # last token has no target
+            if upto > 0:
+                lg = jax.nn.log_softmax(
+                    logits[0, :upto].astype(jnp.float32), axis=-1)
+                tgt = jnp.asarray(toks[pos0 + 1:pos0 + 1 + upto],
+                                  dtype=jnp.int32)
+                total += float(-jnp.sum(
+                    jnp.take_along_axis(lg, tgt[:, None], axis=1)))
+                count += upto
+        self.sched.cancel(rid)
+        self.sched.drain_finished()
+        return total / max(count, 1)
 
     def _complete_prefill(self, seq: SeqState, logits) -> None:
         tok = int(np.asarray(jnp.argmax(logits[0, -1])))
@@ -513,6 +669,14 @@ class ServingEngine:
         self._complete_prefill(seq, logits)
 
     def _decode_once(self) -> None:
+        if self.streaming is not None:
+            # window maintenance first: eviction may shrink seq_len, so
+            # it must precede the append-capacity check that reasons
+            # about the next token's page
+            for slot, seq in list(self.sched.active.items()):
+                if seq.status == "decoding":
+                    self.sched.stream_maintain(slot, 1)
+                    self._stream_demote(slot)
         for _, src, dst in self.sched.ensure_append_capacity():
             # copy-on-write fork: duplicate the shared page before the
             # batched append may write it (unreachable under full-page
@@ -525,7 +689,12 @@ class ServingEngine:
         bt = jnp.asarray(bt_np)
         sl = jnp.asarray(sl_np)
         toks = jnp.asarray(self._next_input)[:, None]
-        logits, self.state = self._decode_fn(self.params, toks, self.state, bt, sl)
+        if self._cold:
+            logits, self.state = self._decode_fn(self.params, toks, self.state,
+                                                 bt, sl, self._cold_flags())
+        else:
+            logits, self.state = self._decode_fn(self.params, toks, self.state,
+                                                 bt, sl)
         nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1)).astype(np.int32)
         decoding = [s for s, seq in self.sched.active.items()
                     if seq.status == "decoding"]
@@ -578,6 +747,10 @@ class ServingEngine:
             "weight_bytes_fp": float(self.weight_bytes_fp),
         }
         out.update(self.latency_percentiles())
+        if self.streaming is not None:
+            out["stream_evictions"] = float(self.sched.stream_evictions)
+            out["stream_demotions"] = float(self.stream_demotions)
+            out["cold_page_bytes"] = float(self.cold_page_bytes)
         if self.sched.prefix_cache is not None:
             out.update({k: float(v)
                         for k, v in self.sched.prefix_cache.stats().items()})

@@ -199,6 +199,17 @@ class PagePool:
         self.num_pages = num_pages
         self._free: List[int] = list(range(num_pages - 1, -1, -1))
         self._refs: Dict[int, int] = {}
+        # counted pins: a pinned page may gain/lose *extra* references
+        # (prefix sharing), but its refcount may never fall below its pin
+        # count — releasing into a pin is an eviction-policy bug and
+        # raises instead of silently recycling a live attention sink
+        self._pins: Dict[int, int] = {}
+        # optional hook fired with the list of pages that just hit
+        # refcount zero (after they return to the free list) — the
+        # engine uses it to clear cold-KV flags on every release path
+        # (streaming eviction, sequence finish, cancel, prefix-cache
+        # eviction) without chasing each call site
+        self.on_free = None
         # high-water mark of concurrently allocated pages, maintained at
         # the allocation site itself — callers that sample residency at
         # one point in their loop (the engine's per-step stat) would miss
@@ -237,17 +248,57 @@ class PagePool:
         for p in page_ids:
             self._refs[p] += 1
 
-    def release(self, page_ids: Sequence[int]) -> None:
-        """Drop one reference per page; free at refcount zero. Releasing
-        a page nobody holds raises (the double-free guard)."""
+    def pin(self, page_ids: Sequence[int]) -> None:
+        """Pin allocated pages (counted): each pin consumes one of the
+        page's references, so ``release`` below that floor raises. The
+        attention-sink guard — a sliding-window evictor that reaches a
+        sink fails loudly instead of corrupting a shared prefix."""
         for p in page_ids:
             if p not in self._refs:
+                raise RuntimeError(f"pin of unallocated page {p}")
+            if self._pins.get(p, 0) >= self._refs[p]:
+                raise RuntimeError(f"pin of page {p} exceeds refcount")
+        for p in page_ids:
+            self._pins[p] = self._pins.get(p, 0) + 1
+
+    def unpin(self, page_ids: Sequence[int]) -> None:
+        """Drop one pin per page (must currently be pinned)."""
+        for p in page_ids:
+            if self._pins.get(p, 0) <= 0:
+                raise RuntimeError(f"unpin of unpinned page {p}")
+        for p in page_ids:
+            self._pins[p] -= 1
+            if self._pins[p] == 0:
+                del self._pins[p]
+
+    def pin_count(self, page: int) -> int:
+        return self._pins.get(page, 0)
+
+    def release(self, page_ids: Sequence[int]) -> None:
+        """Drop one reference per page; free at refcount zero. Releasing
+        a page nobody holds raises (the double-free guard), as does a
+        release that would take a page's refcount below its pin count
+        (the pinned-sink guard)."""
+        # validate cumulatively: a batch may release the same page more
+        # than once (one list entry per reference), so the guard must
+        # check the total drop, not each entry against the pre-state
+        drops: Dict[int, int] = {}
+        for p in page_ids:
+            drops[p] = drops.get(p, 0) + 1
+        for p, k in drops.items():
+            if self._refs.get(p, 0) < k:
                 raise RuntimeError(f"double free of page {p}")
+            if self._refs[p] - k < self._pins.get(p, 0):
+                raise RuntimeError(f"release of pinned page {p}")
+        freed: List[int] = []
         for p in page_ids:
             self._refs[p] -= 1
             if self._refs[p] == 0:
                 del self._refs[p]
                 self._free.append(p)
+                freed.append(p)
+        if freed and self.on_free is not None:
+            self.on_free(freed)
 
     # pre-refcount name, kept for callers that never share
     free = release

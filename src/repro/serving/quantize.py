@@ -133,6 +133,32 @@ def dequantize_tree(params: Any, dtype: Any = jnp.float32) -> Any:
     return walk(params)
 
 
+def quantize_kv_pages(vals: jax.Array, token_axis: int = 1) -> dict:
+    """Page-granular symmetric int8 for cold KV pages (the streaming
+    subsystem's cold-tier codec). ``vals`` is one page's worth of cache
+    rows with ``token_axis`` the page_size axis — per-layer GQA pages
+    are ``(L, page, kvh, hd)``, MLA latent pages ``(L, page, lat)`` —
+    and the amax is taken over tokens so every remaining (layer, head,
+    feature) channel keeps its own scale. Unlike the weight codec above
+    the channel axis here is *everything but* the token axis: KV rows
+    have per-head/per-feature dynamic range, not per-column."""
+    wf = jnp.asarray(vals, jnp.float32)
+    amax = jnp.max(jnp.abs(wf), axis=token_axis)         # (..., channels...)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(wf / jnp.expand_dims(scale, token_axis)),
+                 -127, 127)
+    return {"q8": q.astype(jnp.int8), "scale": scale.astype(jnp.float32)}
+
+
+def dequantize_kv_pages(qt: dict, token_axis: int = 1,
+                        dtype: Any = jnp.float32) -> jax.Array:
+    """Inverse of :func:`quantize_kv_pages`: broadcast the per-channel
+    scale back over the token axis. The transparent dequant-on-attend
+    expansion for cold pages in the paged gather path."""
+    return (qt["q8"].astype(jnp.float32)
+            * jnp.expand_dims(qt["scale"], token_axis)).astype(dtype)
+
+
 def param_bytes(params: Any) -> int:
     """Bytes held by a parameter tree (int8 leaves count 1 byte/elem —
     the serving weight-memory figure bench_serving reports)."""

@@ -47,6 +47,14 @@ from typing import Deque, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.serving.paged_cache import PagedCacheConfig, PagePool
+from repro.serving.streaming import (
+    StreamingConfig,
+    cold_page_indices,
+    evictions_needed,
+    resident_cap,
+    validate_geometry,
+    windowed_reservation,
+)
 
 
 @dataclasses.dataclass
@@ -114,6 +122,8 @@ class SeqState:
     generated: List[int] = dataclasses.field(default_factory=list)
     admit_clock: Optional[int] = None  # engine step of admission
     first_token_clock: Optional[int] = None  # engine step of the first token
+    evicted_tokens: int = 0            # tokens dropped by streaming eviction
+    pinned: List[int] = dataclasses.field(default_factory=list)  # sink pages
 
     @property
     def finished(self) -> bool:
@@ -250,10 +260,15 @@ class ContinuousBatchingScheduler:
 
     def __init__(self, pcfg: PagedCacheConfig,
                  prefill_token_budget: Optional[int] = None,
-                 prefix_sharing: bool = False):
+                 prefix_sharing: bool = False,
+                 streaming: Optional[StreamingConfig] = None):
         self.pcfg = pcfg
         self.pool = PagePool(pcfg.num_pages)
         self.prefill_token_budget = prefill_token_budget
+        self.streaming = streaming
+        if streaming is not None:
+            validate_geometry(streaming, pcfg)
+        self.stream_evictions = 0      # pages evicted by the sliding window
         self.prefix_cache = (PrefixCache(self.pool, pcfg.page_size)
                              if prefix_sharing else None)
         self.waiting: Deque[Request] = deque()
@@ -277,7 +292,7 @@ class ContinuousBatchingScheduler:
         request is respected either way."""
         if req.submit_clock is None:
             req.submit_clock = self._now if now is None else int(now)
-        need = self.pcfg.pages_for(req.max_total_len)
+        need = self._pages_needed(req.max_total_len)
         if need > self.pcfg.max_pages_per_seq:
             raise ValueError(
                 f"request {req.rid}: {req.max_total_len} tokens exceed "
@@ -286,6 +301,17 @@ class ContinuousBatchingScheduler:
             raise ValueError(
                 f"request {req.rid}: needs {need} pages, pool has {self.pcfg.num_pages}")
         self.waiting.append(req)
+
+    def _pages_needed(self, max_total_len: int) -> int:
+        """Worst-case page commitment for one request: the full
+        ``prompt + max_new_tokens`` footprint, or — under streaming —
+        the windowed resident cap, whichever is smaller. This is the
+        whole admission story of the streaming subsystem: a 100k-token
+        session reserves O(sink + window) pages."""
+        if self.streaming is not None:
+            return windowed_reservation(self.streaming, self.pcfg,
+                                        max_total_len)
+        return self.pcfg.pages_for(max_total_len)
 
     @property
     def has_work(self) -> bool:
@@ -333,11 +359,17 @@ class ContinuousBatchingScheduler:
             req = self._next_request()
             if req is None:
                 break
-            need = self.pcfg.pages_for(req.max_total_len)
+            need = self._pages_needed(req.max_total_len)
             if self._reserved_total + need > self.pcfg.num_pages:
                 break                                   # selected waits; no queue-jumping
             shared = (self.prefix_cache.lookup(req.prompt)
                       if self.prefix_cache is not None else [])
+            raw_hits = len(shared)
+            if self.streaming is not None and len(shared) >= need:
+                # a cached prefix longer than the resident cap cannot be
+                # mapped (the block-table row is windowed); keep the
+                # head — the part containing the pinned sinks
+                shared = shared[:need - 1]
             shared_len = len(shared) * self.pcfg.page_size
             tail = req.prompt_len - shared_len
             if budget is not None and spent and spent + tail > budget:
@@ -347,14 +379,15 @@ class ContinuousBatchingScheduler:
                     # the hit-rate stats (the LRU touch is harmless)
                     n = (req.prompt_len - 1) // self.pcfg.page_size
                     self.prefix_cache.lookup_pages -= n
-                    self.prefix_cache.hit_pages -= len(shared)
+                    self.prefix_cache.hit_pages -= raw_hits
                 break                                   # budget bounds each step, but
                                                         # never blocks the first admit
                                                         # (progress guarantee)
             self._remove_waiting(req)
             slot = self._free_slots.pop()
             self.pool.share(shared)
-            fresh = self._alloc(self.pcfg.pages_for(req.prompt_len) - len(shared))
+            init = min(self.pcfg.pages_for(req.prompt_len), need)
+            fresh = self._alloc(init - len(shared))
             pages = list(shared) + fresh
             self._reserved_total += need
             seq = SeqState(request=req, slot=slot, seq_len=0,
@@ -365,6 +398,7 @@ class ContinuousBatchingScheduler:
             self.block_table[slot, :len(pages)] = pages
             self.seq_lens[slot] = 0                     # decode-invisible until
             spent += tail                               # finish_prefill
+            self._pin_sinks(seq)
             admitted.append(seq)
             self._on_admitted(seq)
         return admitted
@@ -376,14 +410,104 @@ class ContinuousBatchingScheduler:
 
     def finish_prefill(self, slot: int) -> None:
         """Prompt fully cached: the sequence joins the decode batch and
-        its full prompt pages enter the prefix index."""
+        its full prompt pages enter the prefix index. Under streaming
+        only the *resident* tokens count toward ``seq_len`` (positions
+        are cache-slot-relative), and after a mid-prefill eviction only
+        the pinned sink prefix is inserted — the rest of the page list
+        no longer corresponds to prompt positions."""
         seq = self.active[slot]
         assert seq.prefill_pos == seq.request.prompt_len
         seq.status = "decoding"
-        seq.seq_len = seq.request.prompt_len
+        seq.seq_len = seq.request.prompt_len - seq.evicted_tokens
         self.seq_lens[slot] = seq.seq_len
         if self.prefix_cache is not None:
-            self.prefix_cache.insert(seq.request.prompt, seq.pages)
+            if seq.evicted_tokens:
+                ps = self.pcfg.page_size
+                n_sink = self.streaming.sink_pages
+                self.prefix_cache.insert(seq.request.prompt[:n_sink * ps],
+                                         seq.pages[:n_sink])
+            else:
+                self.prefix_cache.insert(seq.request.prompt, seq.pages)
+
+    # ------------------------------------------------------ streaming --
+    def _pin_sinks(self, seq: SeqState) -> None:
+        """Pin any not-yet-pinned sink-region pages the sequence now
+        holds (pages appear lazily, so pinning is incremental: at
+        admission, after a prefill-chunk alloc, after a decode-boundary
+        alloc). Pins are per-sequence and undone at eviction."""
+        if self.streaming is None:
+            return
+        n = min(self.streaming.sink_pages, len(seq.pages))
+        for p in seq.pages[len(seq.pinned):n]:
+            self.pool.pin([p])
+            seq.pinned.append(p)
+
+    def stream_maintain(self, slot: int, extra_tokens: int) -> int:
+        """Evict oldest non-sink pages until ``extra_tokens`` more can
+        be appended within the resident cap: release each victim back
+        to the pool, compact the block-table row left, and shrink the
+        resident length by a page while ``evicted_tokens`` grows by the
+        same amount. Returns pages evicted. The engine calls this
+        before every decode append and between prefill chunks — the
+        sliding-window half of the streaming policy."""
+        if self.streaming is None:
+            return 0
+        seq = self.active[slot]
+        resident = (seq.seq_len if seq.status == "decoding"
+                    else seq.prefill_pos - seq.evicted_tokens)
+        k = evictions_needed(self.streaming, self.pcfg, resident,
+                             extra_tokens)
+        for _ in range(k):
+            self._stream_evict_one(seq)
+        return k
+
+    def _stream_evict_one(self, seq: SeqState) -> None:
+        ps = self.pcfg.page_size
+        n_sink = self.streaming.sink_pages
+        assert len(seq.pages) > n_sink, (
+            f"seq {seq.request.rid}: eviction would reach a sink page")
+        victim = seq.pages.pop(n_sink)
+        self.pool.release([victim])
+        seq.evicted_tokens += ps
+        if seq.status == "decoding":
+            seq.seq_len -= ps
+            self.seq_lens[seq.slot] = seq.seq_len
+        self.block_table[seq.slot, :len(seq.pages)] = seq.pages
+        self.block_table[seq.slot, len(seq.pages):] = self.pcfg.null_page
+        self.stream_evictions += 1
+
+    def stream_prepare_chunk(self, slot: int, chunk_tokens: int) -> None:
+        """Prefill-side capacity: make room for (evicting as needed)
+        and allocate every page the next ``chunk_tokens`` cache
+        positions touch. The engine caps chunks at
+        ``window_pages * page_size``, so eviction can always free
+        enough room and each chunk makes at least a page of
+        progress."""
+        if self.streaming is None:
+            return
+        self.stream_maintain(slot, chunk_tokens)
+        seq = self.active[slot]
+        resident = seq.prefill_pos - seq.evicted_tokens
+        last = (resident + chunk_tokens - 1) // self.pcfg.page_size
+        while len(seq.pages) <= last:
+            assert len(seq.pages) < seq.reserved_pages, (
+                f"seq {seq.request.rid} outgrew its reservation")
+            (page,) = self._alloc(1)
+            seq.pages.append(page)
+            self.block_table[slot, len(seq.pages) - 1] = page
+        self._pin_sinks(seq)
+
+    def stream_cold_pages(self, slot: int) -> List[int]:
+        """Physical ids of this sequence's cold pages — resident, older
+        than the window, not shared (demoting a page another sequence
+        or the prefix index also maps would corrupt *their* hot view).
+        The engine demotes these to the int8 shadow pool."""
+        if self.streaming is None:
+            return []
+        seq = self.active[slot]
+        return [seq.pages[i]
+                for i in cold_page_indices(self.streaming, len(seq.pages))
+                if self.pool.refcount(seq.pages[i]) == 1]
 
     def decode_view(self) -> Tuple[np.ndarray, np.ndarray]:
         """(block_table, seq_lens) as the decode step may see them:
@@ -438,11 +562,19 @@ class ContinuousBatchingScheduler:
                 elif self.pool.is_shared(seq.pages[page_idx]):
                     src = seq.pages[page_idx]
                     (dst,) = self._alloc(1)
+                    if src in seq.pinned:
+                        # forking a pinned (shared sink) page: move our
+                        # pin to the private copy before releasing the
+                        # reference the pin was counted against
+                        self.pool.unpin([src])
+                        self.pool.pin([dst])
+                        seq.pinned[seq.pinned.index(src)] = dst
                     self.pool.release([src])
                     seq.pages[page_idx] = dst
                     self.block_table[slot, page_idx] = dst
                     self.cow_forks += 1
                     forks.append((slot, src, dst))
+            self._pin_sinks(seq)
         return forks
 
     def on_token(self, slot: int, token: int) -> Optional[SeqState]:
@@ -521,6 +653,9 @@ class ContinuousBatchingScheduler:
     # -------------------------------------------------------- internal --
     def _evict(self, seq: SeqState, status: str) -> None:
         del self.active[seq.slot]
+        if seq.pinned:
+            self.pool.unpin(seq.pinned)
+            seq.pinned = []
         self.pool.release(seq.pages)
         self._reserved_total -= seq.reserved_pages
         self.block_table[seq.slot, :] = self.pcfg.null_page
@@ -565,6 +700,16 @@ class ContinuousBatchingScheduler:
             assert list(used) == seq.pages
             if seq.status == "prefilling":
                 assert seq.shared_len <= seq.prefill_pos <= seq.request.prompt_len
+            if self.streaming is not None:
+                # windowed residency: never more pages than the cap,
+                # sinks pinned exactly (the pages that are pinned are
+                # the head of the page list, each with a live pin)
+                assert len(seq.pages) <= resident_cap(self.streaming)
+                assert len(seq.pinned) <= self.streaming.sink_pages
+                assert seq.pinned == seq.pages[:len(seq.pinned)]
+                for p in seq.pinned:
+                    assert self.pool.pin_count(p) >= 1
+                assert seq.evicted_tokens % self.pcfg.page_size == 0
 
 
 class SLOScheduler(ContinuousBatchingScheduler):
@@ -604,10 +749,12 @@ class SLOScheduler(ContinuousBatchingScheduler):
 
     def __init__(self, pcfg: PagedCacheConfig,
                  prefill_token_budget: Optional[int] = None,
-                 prefix_sharing: bool = False, *,
+                 prefix_sharing: bool = False,
+                 streaming: Optional[StreamingConfig] = None, *,
                  shed: bool = True):
         super().__init__(pcfg, prefill_token_budget,
-                         prefix_sharing=prefix_sharing)
+                         prefix_sharing=prefix_sharing,
+                         streaming=streaming)
         self.shed = shed
         self.served_tokens: Dict[str, int] = {}        # tenant -> tokens charged
         self.shed_count = 0

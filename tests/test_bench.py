@@ -236,6 +236,26 @@ def test_committed_bench_matches_dispatcher_defaults():
     assert BenchSpec.from_json(proc.stdout) == spec
 
 
+def test_committed_streaming_bench_matches_dispatcher_defaults():
+    """BENCH_streaming.json must be regenerable the same way: embedded
+    spec equals `python -m repro bench streaming`'s defaults, and the
+    committed file stays schema-valid in-tree."""
+    committed = REPO_ROOT / "BENCH_streaming.json"
+    if not committed.exists():
+        pytest.skip("no committed BENCH_streaming.json")
+    doc = json.loads(committed.read_text())
+    assert validate_bench(doc) == []
+    spec = BenchSpec.from_dict(doc["spec"])
+    assert spec.serve.streaming.enabled
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro", "bench", "streaming", "--dump-spec"],
+        capture_output=True, text=True, cwd=str(REPO_ROOT),
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"},
+    )
+    assert proc.returncode == 0, proc.stderr
+    assert BenchSpec.from_json(proc.stdout) == spec
+
+
 def test_workload_draws_cover_weighted_classes():
     wl = WorkloadSpec(requests=64, tenants="1,1,1", priority_mix="1,1",
                       seed=2)

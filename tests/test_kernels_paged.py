@@ -16,10 +16,13 @@ import pytest
 
 from repro.kernels.paged_decode import (
     paged_gqa_decode_pallas,
+    paged_gqa_decode_cold_pallas,
     paged_mla_decode_pallas,
+    paged_mla_decode_cold_pallas,
     paged_kernel_enabled,
 )
 from repro.kernels.paged_ref import paged_gqa_decode_ref, paged_mla_decode_ref
+from repro.serving.quantize import dequantize_kv_pages, quantize_kv_pages
 from repro.kernels.testing import (
     assert_kernel_matches,
     forced_interpret,
@@ -138,6 +141,72 @@ def test_paged_kernel_gate_parses():
             os.environ.pop("SCT_PAGED_KERNEL", None)
         else:
             os.environ["SCT_PAGED_KERNEL"] = prev
+
+
+# --------------------------------------------------------------- cold-KV --
+
+def _cold_shadow(key, hot):
+    """Int8 shadow pool quantized from noise *independent* of the hot
+    pool, plus its dequantized expansion. Because the two tiers carry
+    uncorrelated values, a kernel that reads the wrong tier for any
+    page mismatches by O(1), not by quantization error."""
+    src = jax.random.normal(key, hot.shape, jnp.float32)
+    qt = quantize_kv_pages(src, token_axis=1)
+    return qt["q8"], qt["scale"], dequantize_kv_pages(qt, token_axis=1)
+
+
+@pytest.mark.parametrize("p_cold", [0.0, 0.5, 1.0])
+@pytest.mark.parametrize("b,kvh,rep,hd,page,n", [(4, 2, 3, 64, 4, 6),
+                                                 (2, 1, 4, 20, 3, 5)])
+def test_paged_gqa_cold_decode_vs_oracle(b, kvh, rep, hd, page, n, p_cold,
+                                         key):
+    """Cold-aware GQA kernel vs the plain oracle run on a pool whose
+    flagged pages are replaced by the dequantized shadow — per-page
+    tier selection, in-register dequant, and the all-hot / all-cold
+    edges in one sweep."""
+    num_pages = b * n + 3
+    (k_pool, v_pool), bt, sl = _paged_state(
+        key, b, n, num_pages, page, [(kvh, hd), (kvh, hd)], jnp.float32)
+    kq, ksc, k_deq = _cold_shadow(jax.random.fold_in(key, 11), k_pool)
+    vq, vsc, v_deq = _cold_shadow(jax.random.fold_in(key, 12), v_pool)
+    cold = jax.random.bernoulli(jax.random.fold_in(key, 13), p_cold,
+                                (num_pages + 1,)).astype(jnp.int32)
+    sel = cold.astype(bool)[:, None, None, None]
+    q = jax.random.normal(jax.random.fold_in(key, 7), (b, kvh, rep, hd))
+    assert_kernel_matches(
+        paged_gqa_decode_cold_pallas, paged_gqa_decode_ref,
+        (q, k_pool, v_pool, kq, ksc, vq, vsc, bt, sl, cold),
+        ref_args=(q, jnp.where(sel, k_deq, k_pool),
+                  jnp.where(sel, v_deq, v_pool), bt, sl),
+        label=f"gqa-cold hd={hd} page={page} p={p_cold}")
+
+
+@pytest.mark.parametrize("p_cold", [0.0, 0.5, 1.0])
+@pytest.mark.parametrize("b,h,lat,rope,page,n", [(2, 4, 32, 16, 4, 6),
+                                                 (3, 2, 24, 12, 3, 5)])
+def test_paged_mla_cold_decode_vs_oracle(b, h, lat, rope, page, n, p_cold,
+                                         key):
+    """Cold-aware absorbed-MLA kernel vs the plain oracle on the
+    tier-substituted latent/rope pools."""
+    num_pages = b * n + 3
+    (ckv_pool, kr_pool), bt, sl = _paged_state(
+        key, b, n, num_pages, page, [(lat,), (rope,)], jnp.float32)
+    cq, csc, ckv_deq = _cold_shadow(jax.random.fold_in(key, 11), ckv_pool)
+    rq, rsc, kr_deq = _cold_shadow(jax.random.fold_in(key, 12), kr_pool)
+    cold = jax.random.bernoulli(jax.random.fold_in(key, 13), p_cold,
+                                (num_pages + 1,)).astype(jnp.int32)
+    sel = cold.astype(bool)[:, None, None]
+    ks = jax.random.split(jax.random.fold_in(key, 7))
+    q_lat = jax.random.normal(ks[0], (b, h, lat))
+    q_rope = jax.random.normal(ks[1], (b, h, rope))
+    scale = 1.0 / float(48 + rope) ** 0.5
+    assert_kernel_matches(
+        lambda *a: paged_mla_decode_cold_pallas(*a, scale=scale),
+        lambda *a: paged_mla_decode_ref(*a, scale=scale),
+        (q_lat, q_rope, ckv_pool, kr_pool, cq, csc, rq, rsc, bt, sl, cold),
+        ref_args=(q_lat, q_rope, jnp.where(sel, ckv_deq, ckv_pool),
+                  jnp.where(sel, kr_deq, kr_pool), bt, sl),
+        label=f"mla-cold lat={lat} page={page} p={p_cold}")
 
 
 # ---------------------------------------------------------------- engine --

@@ -15,8 +15,9 @@ try:
 except ModuleNotFoundError:  # container without hypothesis: deterministic shim
     from _hypothesis_fallback import given, settings, st
 
-from repro.serving import PagedCacheConfig, PagePool, Request
+from repro.serving import PagedCacheConfig, PagePool, Request, StreamingConfig
 from repro.serving.scheduler import ContinuousBatchingScheduler
+from repro.serving.streaming import resident_cap
 
 EOS = 7
 
@@ -199,6 +200,104 @@ def test_pagepool_random_alloc_share_release(seed, pool_pages):
     for p, n in list(refs.items()):
         pool.release([p] * n)
     assert pool.free_count == pool_pages and pool.allocated_count == 0
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    page_size=st.integers(2, 6),
+    slots=st.integers(1, 4),
+    sink=st.integers(1, 2),
+    window=st.integers(1, 3),
+)
+def test_streaming_scheduler_random_invariants(seed, page_size, slots,
+                                               sink, window):
+    """Streaming state machine fuzz: random prefill-chunk and decode
+    lengths repeatedly crossing window/eviction boundaries, with random
+    mid-flight cancels. After every transition: sinks are never
+    evicted (the pinned head of the page list is stable), residency
+    never exceeds sink+window+1 pages, the block-table row stays dense,
+    refcounts and pins balance; at drain the pool is empty and every
+    pin is unwound."""
+    rng = pyrandom.Random(seed)
+    scfg = StreamingConfig(sink_pages=sink, window_pages=window)
+    cap = resident_cap(scfg)
+    pool_pages = cap * slots + rng.randint(0, 4)
+    pcfg = PagedCacheConfig(page_size=page_size, num_pages=pool_pages,
+                            max_slots=slots, max_pages_per_seq=cap)
+    sched = ContinuousBatchingScheduler(pcfg, streaming=scfg)
+
+    logical_cap = pool_pages * page_size        # non-streaming capacity
+    reqs = []
+    for i in range(rng.randint(2, 10)):
+        plen = rng.randint(1, 3 * cap * page_size)
+        # decode lengths from just-under-a-page to several windows past
+        # the pool's whole capacity — the boundary-crossing coverage
+        max_new = rng.randint(1, 2 * logical_cap)
+        reqs.append(Request(
+            rid=i, prompt=np.asarray([rng.randint(0, 96)
+                                      for _ in range(plen)], np.int32),
+            max_new_tokens=max_new, arrival=rng.randint(0, 6),
+            eos_id=EOS if rng.random() < 0.4 else None))
+    pending = sorted(reqs, key=lambda r: r.arrival)
+    submitted = {r.rid for r in reqs}
+    sinks = {}                                  # rid -> pinned sink ids
+
+    def _streaming_invariants():
+        sched.check_invariants()
+        for seq in sched.active.values():
+            assert len(seq.pages) <= cap
+            if seq.pinned:
+                prev = sinks.setdefault(seq.request.rid, list(seq.pinned))
+                # pins only ever extend (lazily, page by page) — a sink,
+                # once pinned, stays at its position for the seq's life
+                assert seq.pinned[:len(prev)] == prev
+                sinks[seq.request.rid] = list(seq.pinned)
+
+    drained, clock, guard = [], 0, 0
+    while pending or sched.has_work:
+        guard += 1
+        assert guard < 20000, "streaming scheduler failed to drain"
+        while pending and pending[0].arrival <= clock:
+            sched.submit(pending.pop(0))
+        sched.admit()
+        _streaming_invariants()
+        for seq in sched.prefilling():
+            plen = seq.request.prompt_len
+            c = rng.randint(1, max(1, min(window * page_size,
+                                          plen - seq.prefill_pos)))
+            sched.stream_prepare_chunk(seq.slot, c)
+            seq.prefill_pos += c
+            if seq.prefill_pos == plen:
+                sched.finish_prefill(seq.slot)
+                tok = EOS if (seq.request.eos_id and rng.random() < 0.1) else 1
+                sched.on_prefill_token(seq.slot, tok)
+            _streaming_invariants()
+        if rng.random() < 0.08 and sched.active:
+            sched.cancel(rng.choice(
+                [s.request.rid for s in sched.active.values()]))
+            _streaming_invariants()
+        decoding = [s for s in sched.active.values()
+                    if s.status == "decoding"]
+        if decoding:
+            for seq in decoding:
+                if seq.slot in sched.active:
+                    sched.stream_maintain(seq.slot, 1)
+            sched.ensure_append_capacity()
+            _streaming_invariants()
+            for seq in list(decoding):
+                if seq.slot not in sched.active:
+                    continue
+                tok = EOS if (seq.request.eos_id and rng.random() < 0.1) else 1
+                sched.on_token(seq.slot, tok)
+                _streaming_invariants()
+        drained += sched.drain_finished()
+        clock += 1
+
+    assert sched.pool.allocated_count == 0 and not sched.active
+    assert sorted(s.request.rid for s in drained) == sorted(submitted)
+    for p in range(pool_pages):                 # every pin unwound
+        assert sched.pool.pin_count(p) == 0
 
 
 def test_pagepool_null_page_never_allocated():

@@ -1,0 +1,341 @@
+"""Long-context streaming subsystem: pinned attention sinks,
+sliding-window page eviction, cold-KV int8 demotion.
+
+The contract under test: inside the identity horizon
+((sink + window) * page_size tokens) streaming serving is
+token-for-token identical to the full-cache engine; beyond it, a
+session decodes arbitrarily far past the pool's nominal capacity on an
+O(sink + window) resident page budget, deterministically, with sinks
+never evicted and the ledger (evictions / demotions / cold bytes)
+reproducible run-to-run."""
+import numpy as np
+import pytest
+
+from repro.config import get_config
+from repro.launch.serve import static_greedy_reference
+from repro.models.model import init_model
+from repro.serving import (
+    PagedCacheConfig,
+    PagePool,
+    Request,
+    StreamingConfig,
+    identity_horizon,
+    resident_cap,
+    windowed_reservation,
+)
+from repro.serving.engine import ServingEngine
+from repro.serving.scheduler import ContinuousBatchingScheduler
+from repro.serving.streaming import validate_geometry
+
+
+# ======================================================================
+# PagePool pin API (the sink guard)
+# ======================================================================
+
+def test_pagepool_pin_is_release_floor():
+    """A pin is a refcount floor: release that would drop below it
+    raises loudly (the sink-eviction guard), while extra references
+    above the floor come and go freely."""
+    pool = PagePool(4)
+    a = pool.alloc(2)
+    pool.pin([a[0]])
+    assert pool.pin_count(a[0]) == 1
+    with pytest.raises(RuntimeError, match="pinned"):
+        pool.release([a[0]])                 # would orphan the pin
+    assert pool.refcount(a[0]) == 1          # failed release mutated nothing
+    pool.share([a[0]])                       # a second holder above the floor
+    pool.release([a[0]])                     # ... may release normally
+    assert pool.refcount(a[0]) == 1
+    pool.unpin([a[0]])
+    pool.release([a[0]])                     # floor gone: normal release
+    assert pool.allocated_count == 1
+    with pytest.raises(RuntimeError):
+        pool.unpin([a[1]])                   # unpin of unpinned page
+
+
+def test_pagepool_counted_pins_stack():
+    """Two sequences sharing a sink page each pin it; one unpin leaves
+    the other's floor intact."""
+    pool = PagePool(2)
+    (p,) = pool.alloc(1)
+    pool.pin([p])
+    pool.share([p])
+    pool.pin([p])
+    assert pool.pin_count(p) == 2
+    pool.unpin([p])
+    with pytest.raises(RuntimeError, match="pinned"):
+        pool.release([p] * 2)                # second release breaches the floor
+    assert pool.refcount(p) == 2             # atomic: nothing released
+    pool.unpin([p])
+    pool.release([p] * 2)
+    assert pool.allocated_count == 0
+
+
+# ======================================================================
+# Policy geometry
+# ======================================================================
+
+def test_streaming_config_validation():
+    with pytest.raises(ValueError):
+        StreamingConfig(sink_pages=0)
+    with pytest.raises(ValueError):
+        StreamingConfig(window_pages=0)
+    with pytest.raises(ValueError):
+        StreamingConfig(cold_kv="fp4")
+    pcfg = PagedCacheConfig(page_size=4, num_pages=8, max_slots=1,
+                            max_pages_per_seq=3)
+    with pytest.raises(ValueError, match="max_pages_per_seq"):
+        validate_geometry(StreamingConfig(sink_pages=1, window_pages=3), pcfg)
+
+
+def test_windowed_reservation_caps_long_requests():
+    cfg = StreamingConfig(sink_pages=1, window_pages=2)
+    pcfg = PagedCacheConfig(page_size=4, num_pages=8, max_slots=1,
+                            max_pages_per_seq=4)
+    assert resident_cap(cfg) == 4
+    assert windowed_reservation(cfg, pcfg, 100_000) == 4     # O(sink+window)
+    assert windowed_reservation(cfg, pcfg, 7) == 2           # short stays short
+    assert identity_horizon(cfg, pcfg) == 12
+
+
+# ======================================================================
+# Scheduler: windowed admission, eviction, pinned sinks
+# ======================================================================
+
+def test_scheduler_streams_8x_pool_capacity():
+    """A session 8x the pool's token capacity admits (reservation is the
+    windowed cap, not the footprint) and decodes to completion with at
+    most sink+window+1 pages resident; the sink page is pinned, never
+    evicted, and everything releases cleanly at the end."""
+    pcfg = PagedCacheConfig(page_size=4, num_pages=8, max_slots=1,
+                            max_pages_per_seq=4)
+    scfg = StreamingConfig(sink_pages=1, window_pages=2)
+    sched = ContinuousBatchingScheduler(pcfg, streaming=scfg)
+    total = 8 * pcfg.num_pages * pcfg.page_size          # 256 tokens
+    sched.submit(Request(rid=0, prompt=np.zeros(4, np.int32),
+                         max_new_tokens=total - 4))
+    (seq,) = sched.admit()
+    assert seq.reserved_pages == resident_cap(scfg)
+    seq.prefill_pos = 4
+    sched.finish_prefill(seq.slot)
+    sched.on_prefill_token(seq.slot, 1)
+    sink = seq.pages[0]
+    assert seq.pinned == [sink] and sched.pool.pin_count(sink) == 1
+    done = None
+    while done is None:
+        sched.stream_maintain(seq.slot, 1)
+        sched.ensure_append_capacity()
+        assert len(seq.pages) <= resident_cap(scfg)
+        assert seq.pages[0] == sink                      # sink never evicted
+        sched.check_invariants()
+        done = sched.on_token(seq.slot, 1)
+    assert done.status == "finished"
+    assert len(done.generated) == total - 4
+    assert sched.stream_evictions >= (total // pcfg.page_size
+                                      - resident_cap(scfg))
+    assert sched.pool.allocated_count == 0               # pins released too
+    assert sched.pool.pin_count(sink) == 0
+
+
+def test_scheduler_concurrent_streams_share_small_pool():
+    """Two windowed sessions whose combined *logical* footprint is many
+    times the pool coexist: reservations are per-window, so admission
+    does not serialize them."""
+    pcfg = PagedCacheConfig(page_size=4, num_pages=8, max_slots=2,
+                            max_pages_per_seq=4)
+    scfg = StreamingConfig(sink_pages=1, window_pages=2)
+    sched = ContinuousBatchingScheduler(pcfg, streaming=scfg)
+    for rid in range(2):
+        sched.submit(Request(rid=rid, prompt=np.zeros(4, np.int32),
+                             max_new_tokens=96))
+    seqs = sched.admit()
+    assert len(seqs) == 2                                # both admitted at once
+    for seq in seqs:
+        seq.prefill_pos = 4
+        sched.finish_prefill(seq.slot)
+        sched.on_prefill_token(seq.slot, 1)
+    finished = 0
+    while finished < 2:
+        for slot in list(sched.active):
+            sched.stream_maintain(slot, 1)
+        sched.ensure_append_capacity()
+        sched.check_invariants()
+        for slot in list(sched.active):
+            if sched.on_token(slot, 1) is not None:
+                finished += 1
+    assert sched.pool.allocated_count == 0
+
+
+# ======================================================================
+# Engine: identity inside the horizon (GQA + MLA, both cold modes)
+# ======================================================================
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "deepseek-v3-671b"])
+@pytest.mark.parametrize("cold_kv", ["none", "int8"])
+def test_streaming_under_horizon_matches_oracle(arch, cold_kv, key):
+    """Requests that finish inside (sink+window)*page_size tokens see no
+    eviction and no demotion candidates, so streaming greedy output is
+    token-for-token the static oracle's — for GQA and absorbed MLA,
+    with and without the cold-int8 machinery armed. (capacity_factor
+    pinned high: MoE token identity holds in the capacity-unbound
+    regime only — see docs/serving.md.)"""
+    cfg = get_config(arch, reduced=True).replace(dtype="float32",
+                                                 capacity_factor=8.0)
+    params = init_model(key, cfg)
+    pcfg = PagedCacheConfig(page_size=4, num_pages=16, max_slots=2,
+                            max_pages_per_seq=4)
+    scfg = StreamingConfig(sink_pages=1, window_pages=2, cold_kv=cold_kv)
+    horizon = identity_horizon(scfg, pcfg)               # 12 tokens
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab, size=(n,))
+                    .astype(np.int32), max_new_tokens=g, arrival=a)
+            for i, (n, g, a) in enumerate([(6, 6, 0), (5, 7, 1), (8, 4, 2)])]
+    assert all(r.max_total_len <= horizon for r in reqs)
+    engine = ServingEngine(cfg, params, pcfg, streaming=scfg)
+    out = engine.run(reqs)
+    engine.sched.check_invariants()
+    assert engine.sched.pool.allocated_count == 0
+    for r in reqs:
+        ref = static_greedy_reference(cfg, params, r.prompt,
+                                      r.max_new_tokens, pcfg.max_seq)
+        np.testing.assert_array_equal(out[r.rid], ref,
+                                      err_msg=f"request {r.rid}")
+
+
+# ======================================================================
+# Engine: sessions far past pool capacity + deterministic ledger
+# ======================================================================
+
+def _long_session_engine(cfg, params, pcfg, scfg, prompt, gen):
+    engine = ServingEngine(cfg, params, pcfg, streaming=scfg,
+                           chunked_prefill=True)
+    out = engine.run([Request(rid=0, prompt=prompt, max_new_tokens=gen)])
+    engine.sched.check_invariants()
+    return out[0], engine.stats()
+
+
+@pytest.mark.parametrize("cold_kv", ["none", "int8"])
+def test_streaming_session_8x_pool_capacity(cold_kv, key):
+    """End-to-end: one session decodes to 8x the pool's non-streaming
+    token capacity without OOM; rerunning the identical session
+    reproduces the tokens and the eviction/demotion ledger exactly
+    (beyond the horizon output diverges from the full cache, but
+    deterministically)."""
+    cfg = get_config("llama3.2-1b", reduced=True).replace(dtype="float32")
+    params = init_model(key, cfg)
+    pcfg = PagedCacheConfig(page_size=4, num_pages=8, max_slots=1,
+                            max_pages_per_seq=4)
+    scfg = StreamingConfig(sink_pages=1, window_pages=2, cold_kv=cold_kv)
+    capacity = pcfg.num_pages * pcfg.page_size           # 32 tokens
+    total = 8 * capacity                                 # 256 tokens
+    rng = np.random.default_rng(1)
+    prompt = rng.integers(0, cfg.vocab, size=(24,)).astype(np.int32)
+    out_a, st_a = _long_session_engine(cfg, params, pcfg, scfg,
+                                       prompt, total - len(prompt))
+    assert len(out_a) == total - len(prompt)
+    assert st_a["stream_evictions"] > 0
+    assert st_a["peak_pages"] <= resident_cap(scfg)
+    if cold_kv == "int8":
+        assert st_a["stream_demotions"] > 0
+        assert st_a["cold_page_bytes"] > 0
+    else:
+        assert st_a["stream_demotions"] == 0
+    out_b, st_b = _long_session_engine(cfg, params, pcfg, scfg,
+                                       prompt, total - len(prompt))
+    np.testing.assert_array_equal(out_a, out_b)
+    for k in ("stream_evictions", "stream_demotions", "cold_page_bytes",
+              "peak_pages", "generated_tokens"):
+        assert st_a[k] == st_b[k], k
+
+
+def test_streaming_cold_kernel_matches_gather(key, monkeypatch):
+    """The cold Pallas kernels and the jnp dequant-gather branch are two
+    implementations of the same attention: an int8 streaming session far
+    past the horizon — cold flags actually set — emits identical tokens
+    and an identical demotion ledger under SCT_PAGED_KERNEL=1 and =0."""
+    cfg = get_config("llama3.2-1b", reduced=True).replace(dtype="float32")
+    params = init_model(key, cfg)
+    pcfg = PagedCacheConfig(page_size=4, num_pages=8, max_slots=1,
+                            max_pages_per_seq=4)
+    scfg = StreamingConfig(sink_pages=1, window_pages=2, cold_kv="int8")
+    rng = np.random.default_rng(3)
+    prompt = rng.integers(0, cfg.vocab, size=(24,)).astype(np.int32)
+    outs, stats = {}, {}
+    for gate in ("1", "0"):
+        monkeypatch.setenv("SCT_PAGED_KERNEL", gate)
+        outs[gate], stats[gate] = _long_session_engine(
+            cfg, params, pcfg, scfg, prompt, 72)
+    assert stats["1"]["stream_demotions"] > 0
+    np.testing.assert_array_equal(outs["1"], outs["0"])
+    for k in ("stream_evictions", "stream_demotions", "cold_page_bytes"):
+        assert stats["1"][k] == stats["0"][k], k
+
+
+# ======================================================================
+# Composition: streaming x prefix cache (shared sinks stay shared)
+# ======================================================================
+
+def test_streaming_prefix_cache_warm_shared_sinks(key):
+    """A cached shared prefix inside the sink region is mapped with a
+    refcount bump — not copied — and stays warm across run() calls;
+    under-horizon outputs remain oracle-exact and every pin unwinds."""
+    cfg = get_config("llama3.2-1b", reduced=True).replace(dtype="float32")
+    params = init_model(key, cfg)
+    pcfg = PagedCacheConfig(page_size=4, num_pages=16, max_slots=2,
+                            max_pages_per_seq=4)
+    scfg = StreamingConfig(sink_pages=1, window_pages=2)
+    rng = np.random.default_rng(2)
+    prompt = rng.integers(0, cfg.vocab, size=(9,)).astype(np.int32)
+    engine = ServingEngine(cfg, params, pcfg, streaming=scfg,
+                           prefix_cache=True)
+    out1 = engine.run([Request(rid=0, prompt=prompt, max_new_tokens=3)])
+    shared_before = engine.stats()["prefix_shared_tokens"]
+    out2 = engine.run([Request(rid=1, prompt=prompt, max_new_tokens=3)])
+    engine.sched.check_invariants()
+    assert engine.stats()["prefix_shared_tokens"] > shared_before
+    np.testing.assert_array_equal(out1[0], out2[1])
+    ref = static_greedy_reference(cfg, params, prompt, 3, pcfg.max_seq)
+    np.testing.assert_array_equal(out1[0], ref)
+    # retained index pages carry the index's reference only — every
+    # per-sequence pin was undone at eviction
+    for p in engine.sched.prefix_cache.pages:
+        assert engine.sched.pool.refcount(p) == 1
+        assert engine.sched.pool.pin_count(p) == 0
+    assert engine.sched.pool.allocated_count == \
+        len(engine.sched.prefix_cache.pages)
+
+
+# ======================================================================
+# Spec-level gates
+# ======================================================================
+
+def test_streaming_spec_gates():
+    from repro.api import ServeSpec, StreamingSpec
+
+    sv = ServeSpec(mode="paged", page_size=4, num_pages=32, slots=2,
+                   pages_per_seq=8,
+                   streaming=StreamingSpec(window_pages=2))
+    assert sv.streaming.enabled
+    assert sv.streaming.config() == StreamingConfig(sink_pages=1,
+                                                    window_pages=2)
+    assert StreamingSpec().config() is None              # disabled default
+    with pytest.raises(ValueError, match="speculative"):
+        sv.replace(speculative_rank="8")
+    with pytest.raises(ValueError, match="disaggregat"):
+        sv.replace(disaggregate=True)
+    with pytest.raises(ValueError):
+        sv.replace(mode="static")
+    with pytest.raises(ValueError, match="pages_per_seq"):
+        sv.replace(streaming=StreamingSpec(window_pages=16))
+    with pytest.raises(ValueError, match="cold_kv"):
+        StreamingSpec(cold_kv="int8")                    # needs a window
+
+
+def test_streaming_engine_rejects_recurrent_family(key):
+    cfg = get_config("xlstm-1.3b", reduced=True)
+    params = init_model(key, cfg)
+    pcfg = PagedCacheConfig(page_size=4, num_pages=12, max_slots=2,
+                            max_pages_per_seq=4)
+    with pytest.raises(NotImplementedError):
+        ServingEngine(cfg, params, pcfg,
+                      streaming=StreamingConfig(sink_pages=1, window_pages=2))

@@ -60,6 +60,10 @@ DIFF_KEYS = (
     "kv_transfer_bytes",
     "kv_transfer_wire_bytes",
     "prefill_pool_peak_pages",
+    # streaming ledger (streaming-bench arms only; absent elsewhere)
+    "stream_evictions",
+    "stream_demotions",
+    "cold_page_bytes",
 )
 
 
